@@ -1,0 +1,28 @@
+"""Fig. 5: latency breakdown (AFC / AMI / Planner) per pipeline."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row, serve_log
+from repro.core.executor import BiathlonConfig
+from repro.data.synthetic import PIPELINE_NAMES
+
+
+def run(pipelines=PIPELINE_NAMES) -> list[str]:
+    out = []
+    for name in pipelines:
+        b = bundle(name)
+        rows = serve_log(b, BiathlonConfig(**DEFAULT_CFG))
+        afc = np.mean([r["t_afc"] for r in rows])
+        ami = np.mean([r["t_ami"] for r in rows])
+        pl = np.mean([r["t_planner"] for r in rows])
+        tot = np.mean([r["t"] for r in rows])
+        out.append(
+            csv_row(
+                f"fig5/{name}",
+                tot * 1e6,
+                f"afc%={100*afc/tot:.0f};ami%={100*ami/tot:.0f};"
+                f"planner%={100*pl/tot:.0f};iters={np.mean([r['iters'] for r in rows]):.1f}",
+            )
+        )
+    return out

@@ -1,0 +1,33 @@
+"""Fig. 4: latency + accuracy across the seven pipelines (default config)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_CFG, accuracy, bundle, csv_row, serve_log, summarize
+from repro.core.executor import BiathlonConfig
+from repro.data.synthetic import PIPELINE_NAMES
+
+
+def run(pipelines=PIPELINE_NAMES) -> list[str]:
+    out = []
+    for name in pipelines:
+        b = bundle(name)
+        cfg = BiathlonConfig(**DEFAULT_CFG)
+        rows = serve_log(b, cfg)
+        s = summarize(rows, b.pipeline.delta_default, b.pipeline.task)
+        idx = b.meta["request_groups"][: len(rows)]
+        labels = b.labels[: len(rows)]
+        acc_bia = accuracy(b, np.array([r["y_hat"] for r in rows]), labels)
+        acc_exact = accuracy(b, np.array([r["y_exact"] for r in rows]), labels)
+        out.append(
+            csv_row(
+                f"fig4/{name}",
+                s["latency_ms"] * 1e3,
+                f"speedup={s['speedup']:.2f};io_speedup={s['io_bound_speedup']:.1f};"
+                f"exact_ms={s['exact_ms']:.1f};"
+                f"frac={s['frac']:.3f};iters={s['iters']:.1f};"
+                f"guarantee={s['guarantee_rate']:.2f};acc={acc_bia:.4f};"
+                f"acc_exact={acc_exact:.4f}",
+            )
+        )
+    return out

@@ -1,0 +1,43 @@
+"""Beyond-paper §Perf: FusedExecutor vs the paper-faithful host loop.
+
+Measures the serving-side optimization recorded in EXPERIMENTS.md §Perf:
+one XLA program per request (lax.while_loop, prefix-masked buffers) vs the
+host-driven feedback loop with its per-iteration dispatch + D2H syncs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row
+from repro.core.executor import BiathlonConfig
+from repro.serving import BiathlonServer
+
+PIPES = ("bearing_imbalance", "tick_price", "turbofan")
+
+
+def run(pipelines=PIPES) -> list[str]:
+    out = []
+    for name in pipelines:
+        b = bundle(name)
+        cfg = BiathlonConfig(**DEFAULT_CFG)
+        res = {}
+        for mode in ("host", "fused"):
+            srv = BiathlonServer(b, cfg, mode=mode)
+            srv.serve(b.requests[0])  # warm / compile
+            stats = srv.serve_all(b.requests, compare_exact=(mode == "host"))
+            lat = np.mean(stats.latencies)
+            res[mode] = dict(
+                lat=lat,
+                frac=np.mean(stats.sample_fracs),
+                iters=np.mean(stats.iters),
+            )
+        out.append(
+            csv_row(
+                f"perf/fused_vs_host/{name}",
+                res["fused"]["lat"] * 1e6,
+                f"host_us={res['host']['lat']*1e6:.0f};"
+                f"speedup={res['host']['lat']/res['fused']['lat']:.2f};"
+                f"frac_host={res['host']['frac']:.3f};frac_fused={res['fused']['frac']:.3f}",
+            )
+        )
+    return out

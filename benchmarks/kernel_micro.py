@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks (oracle path timings on CPU; the Pallas kernels
+are TPU-target and validated in interpret mode — timing interpret mode would
+measure the Python interpreter, not the kernel)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timed
+from repro.core.qmc import sobol_uint32
+from repro.kernels.sampled_agg.ref import sampled_moments_ref
+from repro.models.tabular.trees import GradientBoosting, ensemble_predict_sum
+from repro.models.lm.layers import attention_blockwise, attention_full
+
+
+def run() -> list[str]:
+    out = []
+    # sampled moments: k=16 features x 64k rows
+    vals = jax.random.normal(jax.random.PRNGKey(0), (16, 65536))
+    z = jnp.full((16,), 32768, jnp.int32)
+    f = jax.jit(sampled_moments_ref)
+    us, _ = timed(lambda: jax.block_until_ready(f(vals, z)))
+    out.append(csv_row("kernel/sampled_moments_16x64k", us, "oracle_jit"))
+
+    # sobol generation: 1000 x 21 (paper default m, max k)
+    g = jax.jit(lambda: sobol_uint32(1024, 21))
+    us, _ = timed(lambda: jax.block_until_ready(g()))
+    out.append(csv_row("kernel/sobol_1024x21", us, "oracle_jit"))
+
+    # tree ensemble over QMC batch: 60 trees depth 5, m(k+2)=11.5k rows
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (4000, 10)).astype(np.float32)
+    gb = GradientBoosting(n_trees=60, max_depth=5).fit(X, X[:, 0] * 2)
+    xq = jnp.asarray(rng.normal(0, 1, (11520, 10)).astype(np.float32))
+    t = jax.jit(lambda x: ensemble_predict_sum(gb.ensemble, x))
+    us, _ = timed(lambda: jax.block_until_ready(t(xq)))
+    out.append(csv_row("kernel/tree_qmc_60x11520", us, "oracle_jit"))
+
+    # blockwise vs full attention (the XLA fallback pair), 2x8x2048x64
+    q = jax.random.normal(jax.random.PRNGKey(1), (2, 2048, 8, 64), jnp.float32)
+    fb = jax.jit(lambda q: attention_blockwise(q, q, q, causal=True, block=512))
+    us_b, _ = timed(lambda: jax.block_until_ready(fb(q)))
+    ff = jax.jit(lambda q: attention_full(q, q, q, causal=True))
+    us_f, _ = timed(lambda: jax.block_until_ready(ff(q)))
+    out.append(
+        csv_row("kernel/attention_2k_blockwise_vs_full", us_b, f"full_us={us_f:.0f}")
+    )
+    return out

@@ -1,0 +1,53 @@
+"""Figs. 11-12 (appendix D): MEDIAN substitution + bootstrap error capture."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row, serve_log, summarize
+from repro.core.executor import BiathlonConfig
+from repro.data import aggregates
+
+PIPES = ("tick_price", "bearing_imbalance")
+
+
+def bootstrap_calibration(n_trials: int = 64, z: int = 256, n: int = 4096) -> float:
+    """Fig. 11 analogue: fraction of trials where the bootstrap error
+    distribution covers the true median (target ~ its nominal level)."""
+    rng = np.random.default_rng(0)
+    hits = 0
+    for t in range(n_trials):
+        vals = rng.normal(rng.normal(0, 2), 1.0 + rng.random(), n).astype(np.float32)
+        true_med = np.median(vals)
+        buf = np.zeros(1024, np.float32)
+        buf[:z] = vals[:z]
+        res = aggregates.estimate(
+            "median", jnp.asarray(buf), jnp.asarray(z), jnp.asarray(n),
+            jax.random.PRNGKey(t),
+        )
+        reps = np.asarray(res.replicates)
+        lo, hi = np.percentile(reps, [1.0, 99.0])
+        hits += int(lo <= true_med <= hi)
+    return hits / n_trials
+
+
+def run(pipelines=PIPES) -> list[str]:
+    out = []
+    cov = bootstrap_calibration()
+    out.append(csv_row("fig11/bootstrap_coverage", 0.0, f"coverage98={cov:.3f}"))
+    for name in pipelines:
+        for median in (False, True):
+            b = bundle(name, median=median)
+            rows = serve_log(b, BiathlonConfig(**DEFAULT_CFG))
+            s = summarize(rows, b.pipeline.delta_default, b.pipeline.task)
+            tag = "median" if median else "orig"
+            out.append(
+                csv_row(
+                    f"fig12/{name}/{tag}",
+                    s["latency_ms"] * 1e3,
+                    f"speedup={s['speedup']:.2f};frac={s['frac']:.3f};"
+                    f"guarantee={s['guarantee_rate']:.2f};err={s['err']:.4f}",
+                )
+            )
+    return out

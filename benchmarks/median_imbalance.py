@@ -1,0 +1,69 @@
+"""Figs. 13-14 (appendix D): MEDIAN under pathological two-value columns.
+
+A synthetic column holds x or x+100 at a given class-imbalance ratio; the
+median is discrete-uniform-pathological near ratio 1.0.  We measure the
+fraction of that column Biathlon samples and the prediction error vs exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.executor import BiathlonConfig, HostLoopExecutor, run_exact
+from repro.core.pipeline import AggFeature, Pipeline
+from repro.data.store import ColumnStore, build_table
+from repro.models.tabular import LinearRegression
+
+RATIOS = (0.5, 0.8, 0.9, 0.95, 1.0)
+
+
+def _build(ratio: float, n_rows: int = 60001, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x0 = 5.0
+    n_hi = int(n_rows * ratio / (1 + ratio))
+    col = np.full(n_rows, x0, np.float32)
+    col[:n_hi] += 100.0
+    rng.shuffle(col)
+    aux = rng.normal(1.0, 0.5, n_rows).astype(np.float32)
+    gid = np.zeros(n_rows, np.int64)
+    store = ColumnStore().add("t", build_table({"med": col, "aux": aux}, gid, seed=seed))
+    X = np.array([[np.median(col), aux.mean()]])
+    lr = LinearRegression()
+    lr.coef = np.asarray([0.05, 1.0], np.float32)
+    lr.intercept = 0.0
+    pipe = Pipeline(
+        name=f"imbalance_{ratio}",
+        agg_features=[
+            AggFeature("med", "t", "med", "median", "g"),
+            AggFeature("avg_aux", "t", "aux", "avg", "g"),
+        ],
+        exact_features=[],
+        model=lr,
+        task="regression",
+        scaler_mean=np.zeros(2, np.float32),
+        scaler_scale=np.ones(2, np.float32),
+        delta_default=1.0,
+    )
+    return store, pipe
+
+
+def run(ratios=RATIOS) -> list[str]:
+    out = []
+    for ratio in ratios:
+        store, pipe = _build(ratio)
+        ex = HostLoopExecutor(store, BiathlonConfig(m=256, m_sobol=64, max_iters=120))
+        req = {"g": 0}
+        y_exact, _ = run_exact(store, pipe, req)
+        r = ex.run(pipe, req, jax.random.PRNGKey(int(ratio * 100)))
+        med_frac = r.z[0] / r.n[0]
+        out.append(
+            csv_row(
+                f"fig13/ratio={ratio}",
+                r.t_total * 1e6,
+                f"median_frac={med_frac:.3f};total_frac={r.sample_fraction:.3f};"
+                f"err={abs(r.y_hat - y_exact):.4f};iters={r.iters}",
+            )
+        )
+    return out

@@ -1,0 +1,71 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one CSV row per (arch x shape x mesh) cell with the three roofline terms,
+the dominant bottleneck, and the useful-FLOP ratio.  Also writes the
+markdown table consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "../experiments/dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh):
+        if r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | skipped | - | - |"
+            )
+            continue
+        t = r["terms"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant'].replace('_s','')} | {t['useful_flop_ratio']:.2f} | "
+            f"{t['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(rows)
+
+
+def run() -> list[str]:
+    out = []
+    for r in load_records():
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("status") == "skipped":
+            out.append(csv_row(name, 0.0, f"skipped:{r['reason'][:40]}"))
+            continue
+        t = r["terms"]
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        out.append(
+            csv_row(
+                name,
+                step_s * 1e6,
+                f"dominant={t['dominant']};compute_s={t['compute_s']:.3e};"
+                f"memory_s={t['memory_s']:.3e};collective_s={t['collective_s']:.3e};"
+                f"useful={t['useful_flop_ratio']:.2f};"
+                f"roofline_frac={t['roofline_fraction']:.4f}",
+            )
+        )
+    return out

@@ -1,0 +1,66 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Set
+``QUICK=1`` for a fast smoke pass; ``ONLY=fig4,roofline`` filters sections.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        breakdown,
+        end_to_end,
+        fused_vs_host,
+        kernel_micro,
+        median_bootstrap,
+        median_imbalance,
+        roofline,
+        vary_alpha,
+        vary_delta,
+        vary_gamma,
+        vary_num_ops,
+        vary_tau,
+    )
+
+    sections = {
+        "fig4_end_to_end": end_to_end.run,
+        "fig5_breakdown": breakdown.run,
+        "fig6_vary_tau": vary_tau.run,
+        "fig7_vary_delta": vary_delta.run,
+        "fig8_vary_alpha": vary_alpha.run,
+        "fig9_vary_gamma": vary_gamma.run,
+        "fig10_vary_num_ops": vary_num_ops.run,
+        "fig11_12_median": median_bootstrap.run,
+        "fig13_14_imbalance": median_imbalance.run,
+        "kernel_micro": kernel_micro.run,
+        "perf_fused_vs_host": fused_vs_host.run,
+        "roofline": roofline.run,
+    }
+    only = os.environ.get("ONLY")
+    if only:
+        keys = [k for k in sections if any(tok in k for tok in only.split(","))]
+        sections = {k: sections[k] for k in keys}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for key, fn in sections.items():
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            traceback.print_exc()
+            failures.append((key, str(e)[:120]))
+        print(f"# section {key} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# {len(failures)} section failures: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

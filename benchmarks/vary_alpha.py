@@ -1,0 +1,26 @@
+"""Fig. 8 (appendix A): speedup vs initial sampling ratio alpha."""
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row, serve_log, summarize
+from repro.core.executor import BiathlonConfig
+
+PIPES = ("trip_fare", "bearing_imbalance")
+ALPHAS = (0.01, 0.05, 0.1, 0.2)
+
+
+def run(pipelines=PIPES, alphas=ALPHAS) -> list[str]:
+    out = []
+    for name in pipelines:
+        b = bundle(name)
+        for a in alphas:
+            rows = serve_log(b, BiathlonConfig(alpha=a, **DEFAULT_CFG))
+            s = summarize(rows, b.pipeline.delta_default, b.pipeline.task)
+            out.append(
+                csv_row(
+                    f"fig8/{name}/alpha={a}",
+                    s["latency_ms"] * 1e3,
+                    f"speedup={s['speedup']:.2f};frac={s['frac']:.3f};"
+                    f"iters={s['iters']:.1f};guarantee={s['guarantee_rate']:.2f}",
+                )
+            )
+    return out

@@ -1,0 +1,31 @@
+"""Fig. 7: speedup/accuracy vs error bound delta (regression only)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row, serve_log, summarize
+from repro.core.executor import BiathlonConfig
+
+PIPES = ("trip_fare", "tick_price", "battery", "turbofan")
+MULTS = (0.25, 0.5, 1.0, 2.0, 4.0)
+
+
+def run(pipelines=PIPES, mults=MULTS) -> list[str]:
+    out = []
+    for name in pipelines:
+        b = bundle(name)
+        base_delta = b.pipeline.delta_default
+        for mlt in mults:
+            cfg = BiathlonConfig(delta=base_delta * mlt, **DEFAULT_CFG)
+            rows = serve_log(b, cfg)
+            s = summarize(rows, base_delta * mlt, "regression")
+            err = np.array([abs(r["y_hat"] - r["y_exact"]) for r in rows])
+            out.append(
+                csv_row(
+                    f"fig7/{name}/delta={mlt}xMAE",
+                    s["latency_ms"] * 1e3,
+                    f"speedup={s['speedup']:.2f};frac={s['frac']:.3f};"
+                    f"err_vs_exact={err.mean():.4f};guarantee={s['guarantee_rate']:.2f}",
+                )
+            )
+    return out

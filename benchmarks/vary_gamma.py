@@ -1,0 +1,26 @@
+"""Fig. 9 (appendix B): speedup vs planner step size gamma."""
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row, serve_log, summarize
+from repro.core.executor import BiathlonConfig
+
+PIPES = ("turbofan", "student_qa")
+GAMMAS = (0.005, 0.01, 0.03)
+
+
+def run(pipelines=PIPES, gammas=GAMMAS) -> list[str]:
+    out = []
+    for name in pipelines:
+        b = bundle(name)
+        for g in gammas:
+            rows = serve_log(b, BiathlonConfig(gamma=g, **DEFAULT_CFG))
+            s = summarize(rows, b.pipeline.delta_default, b.pipeline.task)
+            out.append(
+                csv_row(
+                    f"fig9/{name}/gamma={g}",
+                    s["latency_ms"] * 1e3,
+                    f"speedup={s['speedup']:.2f};frac={s['frac']:.3f};"
+                    f"iters={s['iters']:.1f};guarantee={s['guarantee_rate']:.2f}",
+                )
+            )
+    return out

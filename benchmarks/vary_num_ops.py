@@ -1,0 +1,34 @@
+"""Fig. 10 (appendix C): speedup vs #approximated aggregation operators.
+
+Bearing-Imbalance has 8 aggregate features; we approximate the first j and
+compute the rest exactly, for j in {0, 2, 4, 6, 8} — the paper's ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row, serve_log, summarize
+from repro.core.executor import BiathlonConfig
+
+
+def run(counts=(0, 2, 4, 6, 8)) -> list[str]:
+    base = bundle("bearing_imbalance")
+    out = []
+    for j in counts:
+        feats = [
+            dataclasses.replace(f, approximate=(i < j))
+            for i, f in enumerate(base.pipeline.agg_features)
+        ]
+        pipe = dataclasses.replace(base.pipeline, agg_features=feats)
+        b = dataclasses.replace(base, pipeline=pipe)
+        rows = serve_log(b, BiathlonConfig(**DEFAULT_CFG))
+        s = summarize(rows, 0.0, "classification")
+        out.append(
+            csv_row(
+                f"fig10/bearing/approx_ops={j}",
+                s["latency_ms"] * 1e3,
+                f"speedup={s['speedup']:.2f};frac={s['frac']:.3f};"
+                f"guarantee={s['guarantee_rate']:.2f}",
+            )
+        )
+    return out

@@ -1,0 +1,30 @@
+"""Fig. 6: speedup/accuracy vs confidence level tau (oracle = exact preds)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DEFAULT_CFG, bundle, csv_row, serve_log, summarize
+from repro.core.executor import BiathlonConfig
+
+PIPES = ("trip_fare", "turbofan")
+TAUS = (0.5, 0.9, 0.95, 0.99)
+
+
+def run(pipelines=PIPES, taus=TAUS) -> list[str]:
+    out = []
+    for name in pipelines:
+        b = bundle(name)
+        for tau in taus:
+            rows = serve_log(b, BiathlonConfig(tau=tau, **DEFAULT_CFG))
+            s = summarize(rows, b.pipeline.delta_default, b.pipeline.task)
+            # accuracy with the exact prediction as oracle label (paper §4.2)
+            err = np.array([abs(r["y_hat"] - r["y_exact"]) for r in rows])
+            out.append(
+                csv_row(
+                    f"fig6/{name}/tau={tau}",
+                    s["latency_ms"] * 1e3,
+                    f"speedup={s['speedup']:.2f};frac={s['frac']:.3f};"
+                    f"err_vs_exact={err.mean():.4f};guarantee={s['guarantee_rate']:.2f}",
+                )
+            )
+    return out

@@ -1,0 +1,107 @@
+"""Biathlon on an LM pipeline: approximate aggregation features feeding a
+prediction head over frozen backbone features (DESIGN.md §Arch-applicability).
+
+Scenario: a click-through scorer — the request's prompt runs ONCE through a
+(reduced) qwen backbone; user-history aggregates (avg dwell time, click
+count, engagement std over a large event log) are Biathlon-approximated and
+feed a small MLP head together with the pooled backbone state.  Uncertainty
+propagates through the *head* only (m QMC evals of a tiny MLP), exactly the
+adaptation rule the paper's §5 caveat implies for deep pipelines.
+
+Run:  PYTHONPATH=src python examples/serve_lm_head.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.executor_fused import build_fused_executor
+from repro.data.store import ColumnStore, build_table
+from repro.models.lm import LM
+from repro.models.tabular import MLP
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # --- event log: 40 users x 50k events ---------------------------------
+    G, R = 40, 50000
+    gid = np.repeat(np.arange(G), R)
+    engage = rng.normal(rng.normal(0, 1, G)[gid], 1.0)
+    dwell = np.abs(rng.normal(3.0, 1.0, G)[gid] + rng.normal(0, 0.5, G * R))
+    clicked = (rng.random(G * R) < rng.uniform(0.05, 0.4, G)[gid]).astype(np.float32)
+    store = ColumnStore().add(
+        "events", build_table({"engage": engage, "dwell": dwell, "click": clicked}, gid)
+    )
+    k = 3  # avg(engage), avg(dwell), count(click)
+
+    # --- frozen LM backbone ------------------------------------------------
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    lm = LM(cfg, remat=False, attn_block=64, loss_chunk=32)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def pooled_state(tokens):
+        x = params["embed"][jnp.clip(tokens, 0, lm.vp - 1)].astype(lm.dtype)
+        h = lm._backbone(params, x)
+        return h.mean(axis=1).astype(jnp.float32)  # (B, D)
+
+    # --- feature scaler from population statistics -------------------------
+    # (like the tabular pipelines: the head consumes standardized aggregates)
+    pop = np.stack(
+        [
+            [store["events"].full_values(c, g).mean() if c != "click"
+             else store["events"].full_values(c, g).sum() for g in range(G)]
+            for c in ("engage", "dwell", "click")
+        ],
+        axis=1,
+    )  # (G, k)
+    agg_mean = jnp.asarray(pop.mean(0), jnp.float32)
+    agg_std = jnp.asarray(np.maximum(pop.std(0), 1e-6), jnp.float32)
+
+    # --- head: MLP over [backbone_state; scaled agg features] --------------
+    d = cfg.d_model
+    head = MLP(hidden=(32,), task="regression", epochs=10, seed=1)
+    Xh = np.concatenate(
+        [rng.normal(0, 0.05, (2000, d)), rng.normal(0, 1, (2000, k))], axis=1
+    ).astype(np.float32)
+    yh = 2.0 * Xh[:, d] - 0.5 * Xh[:, d + 1] + Xh[:, d + 2] + 0.05 * Xh[:, :8].sum(1)
+    head.fit(Xh, yh)
+
+    # --- Biathlon executor over the head -----------------------------------
+    def model_fn(agg_rows, backbone_vec):
+        m = agg_rows.shape[0]
+        scaled = (agg_rows - agg_mean[None, :]) / agg_std[None, :]
+        full = jnp.concatenate(
+            [jnp.broadcast_to(backbone_vec[None, :], (m, d)), scaled], axis=1
+        )
+        return head.predict(full)
+
+    fused = build_fused_executor(
+        model_fn, k=k, task="regression", m=400, m_sobol=96, tau=0.95
+    )
+    agg_ids = jnp.asarray([0, 0, 2], jnp.int32)  # avg, avg, count
+
+    print("serving 6 requests (backbone runs once; Biathlon approximates the "
+          "history aggregates feeding the head):")
+    for i in range(6):
+        user = int(rng.integers(0, G))
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, 48)), jnp.int32)
+        t0 = time.perf_counter()
+        state = pooled_state(tokens)[0]
+        cap = 65536
+        bufs, _ = store.request_buffers(
+            [("events", "engage", user), ("events", "dwell", user),
+             ("events", "click", user)], cap,
+        )
+        n = jnp.asarray([R, R, R], jnp.int32)
+        res = fused(bufs, n, agg_ids, jnp.asarray(0.25, jnp.float32), state)
+        dt = time.perf_counter() - t0
+        print(f"  user {user:>3}: score={float(res.y_hat):7.3f} "
+              f"prob={float(res.prob):.3f} iters={int(res.iters)} "
+              f"frac={float(res.samples_used)/(3*R):.3f} t={dt*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

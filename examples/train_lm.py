@@ -1,0 +1,67 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred steps.
+
+Exercises the full training substrate on CPU: deterministic data pipeline,
+pure-JAX AdamW, remat, atomic checkpoints with auto-resume (kill it halfway
+and re-run — it continues from the last checkpoint).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--d-model 512]
+"""
+import argparse
+import dataclasses
+import time
+
+from repro.configs import get_config
+from repro.models.lm import LM
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: a shrunk qwen-style dense decoder
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-0.5b"),
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=args.d_model * 3,
+        vocab=32000,
+        head_dim=None,
+        pad_heads_to=1,
+    )
+    model = LM(cfg, remat=True, attn_block=128, loss_chunk=128)
+    n_params = cfg.param_count()
+    print(f"training {n_params/1e6:.0f}M-param LM for {args.steps} steps "
+          f"(seq={args.seq}, batch={args.batch})")
+
+    tc = TrainerConfig(
+        batch_size=args.batch, seq_len=args.seq, total_steps=args.steps,
+        save_every=max(args.steps // 4, 10), lr=3e-4, warmup=20,
+    )
+    trainer = Trainer(model, args.ckpt, tc)
+    t0 = time.time()
+    state, history = trainer.run()
+    dt = time.time() - t0
+    if not history:
+        print("nothing to do (checkpointed run already finished) — "
+              f"latest step {trainer.manager.latest_step()}")
+        return
+    first, last = history[0], history[-1]
+    tok_s = args.batch * args.seq * len(history) / dt
+    print(f"steps {first['step']}..{last['step']}: "
+          f"loss {first['loss']:.3f} -> {last['loss']:.3f} "
+          f"({tok_s:.0f} tok/s on CPU)")
+    print(f"checkpoints: {trainer.manager.steps()} in {args.ckpt}")
+    assert last["loss"] < first["loss"], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

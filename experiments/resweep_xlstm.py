@@ -1,0 +1,9 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import run_cell
+for mp in (False, True):
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        run_cell("xlstm-1.3b", shape, mp)
+print("RESWEEP DONE")

@@ -1,0 +1,32 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, json, sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import run_cell
+
+OUT = "/root/repo/experiments/hillclimb"
+
+# Cell A: deepseek-v2 train_4k — params don't fit TP-only (154 GB/dev)
+run_cell("deepseek-v2-236b", "train_4k", False, OUT, tag="hc_fsdp", fsdp=True)
+
+# Cell B: granite train_4k — collective/dispatch-bound
+def smaller_groups(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, group_size=128, capacity_factor=1.0)
+    )
+run_cell("granite-moe-1b-a400m", "train_4k", False, OUT, tag="hc_dispatch128",
+         cfg_override=smaller_groups)
+def groups64(cfg):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, group_size=64, capacity_factor=1.0)
+    )
+run_cell("granite-moe-1b-a400m", "train_4k", False, OUT, tag="hc_dispatch64",
+         cfg_override=groups64)
+
+# Cell C: xlstm train_4k — after state-sharding constraint (now default)
+run_cell("xlstm-1.3b", "train_4k", False, OUT, tag="hc_stateshard")
+def chunk128(cfg):
+    return dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=128))
+run_cell("xlstm-1.3b", "train_4k", False, OUT, tag="hc_stateshard_chunk128",
+         cfg_override=chunk128)
+print("HILLCLIMB ROUND 1 DONE")

@@ -1,0 +1,12 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import run_cell
+OUT = "/root/repo/experiments/hillclimb"
+# deepseek: FSDP + grad accumulation 4 (activation temp /4 hypothesis)
+run_cell("deepseek-v2-236b", "train_4k", False, OUT, tag="hc_fsdp_accum4",
+         fsdp=True, train_kwargs={"grad_accum": 4})
+# xlstm: bf16 chunk compute (now default in mlstm_block)
+run_cell("xlstm-1.3b", "train_4k", False, OUT, tag="hc_bf16chunks")
+print("HILLCLIMB ROUND 2 DONE")

@@ -1,0 +1,21 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses, sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import run_cell
+OUT = "/root/repo/experiments/hillclimb"
+
+def chunk(n):
+    def f(cfg):
+        return dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=n))
+    return f
+run_cell("xlstm-1.3b", "train_4k", False, OUT, tag="hc_chunk128", cfg_override=chunk(128))
+run_cell("xlstm-1.3b", "train_4k", False, OUT, tag="hc_chunk512", cfg_override=chunk(512))
+run_cell("deepseek-v2-236b", "train_4k", False, OUT, tag="hc_fsdp_accum8",
+         fsdp=True, train_kwargs={"grad_accum": 8})
+# granite: push dispatch further — sorted backend single-shard reference point
+run_cell("granite-moe-1b-a400m", "train_4k", False, OUT, tag="hc_dispatch64_cf1",
+         cfg_override=lambda c: dataclasses.replace(
+             c, moe=dataclasses.replace(c.moe, group_size=64, capacity_factor=1.0)),
+         )
+print("HILLCLIMB ROUND 3 DONE")

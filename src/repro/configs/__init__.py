@@ -1,0 +1,59 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    SSMConfig,
+    cell_applicable,
+)
+
+_MODULES = {
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen3-14b": "qwen3_14b",
+    "qwen1.5-0.5b": "qwen15_0_5b",
+    "gemma-7b": "gemma_7b",
+    "qwen3-8b": "qwen3_8b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "internvl2-1b": "internvl2_1b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import importlib
+
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def cells():
+    """All applicable (arch, shape) dry-run cells with skip reasons."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = cell_applicable(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out
+
+
+__all__ = [
+    "ARCH_IDS",
+    "get_config",
+    "cells",
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "cell_applicable",
+]

@@ -1,0 +1,37 @@
+"""Biathlon core: the paper's contribution as a composable JAX library."""
+from repro.core.executor import BiathlonConfig, HostLoopExecutor, RequestResult, run_exact
+from repro.core.pipeline import AggFeature, ExactFeature, Pipeline, make_model_fn
+from repro.core.planner import direction, gamma_abs, initial_plan, next_plan
+from repro.core.propagation import (
+    InferenceUncertainty,
+    propagate_classification,
+    propagate_regression,
+)
+from repro.core.qmc import normal_qmc_samples, sobol_sequence, sobol_uint32
+from repro.core.sobol_indices import main_effect_indices
+from repro.core.uncertainty import FeatureUncertainty, exact_uncertainty, sample_features
+
+__all__ = [
+    "BiathlonConfig",
+    "HostLoopExecutor",
+    "RequestResult",
+    "run_exact",
+    "AggFeature",
+    "ExactFeature",
+    "Pipeline",
+    "make_model_fn",
+    "direction",
+    "gamma_abs",
+    "initial_plan",
+    "next_plan",
+    "InferenceUncertainty",
+    "propagate_classification",
+    "propagate_regression",
+    "normal_qmc_samples",
+    "sobol_sequence",
+    "sobol_uint32",
+    "main_effect_indices",
+    "FeatureUncertainty",
+    "exact_uncertainty",
+    "sample_features",
+]

@@ -1,0 +1,347 @@
+"""Biathlon executors: the Planner ⇄ Executor feedback loop (paper §3.1).
+
+Two implementations of the same algorithm:
+
+* :class:`HostLoopExecutor` — **paper-faithful**: a Python feedback loop
+  calling jitted AFC/AMI/Planner stages with *bucketed* sample buffers
+  (power-of-two caps bound recompilation while compute tracks the live
+  sample size, like an actual online-aggregation scan).  This is the
+  reproduction baseline recorded in EXPERIMENTS.md.
+
+* :class:`FusedExecutor` (in ``executor_fused.py``) — beyond-paper TPU
+  adaptation: the whole iterate-until-guaranteed loop as one
+  ``jax.lax.while_loop`` program over prefix-masked buffers.
+
+Algorithm per request (paper Fig. 3):
+
+    z ← ceil(α·N)
+    loop:
+        AFC:  x̂, U_x  ← online-aggregation estimates at plan z
+        AMI:  ŷ, U_y  ← QMC uncertainty propagation (m samples)
+        if Pr(|Y−ŷ| ≤ δ) ≥ τ:  return ŷ
+        I  ← Sobol main-effect indices (Saltelli, QMC)
+        z  ← min(z + γ·onehot(argmax_j I_j/(N_j−z_j)), N)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import guarantee, planner
+from repro.core.pipeline import Pipeline, make_model_fn
+from repro.core.propagation import (
+    propagate_classification,
+    propagate_regression,
+)
+from repro.core.sobol_indices import main_effect_indices
+from repro.core.uncertainty import FeatureUncertainty
+from repro.data import aggregates
+from repro.data.store import ColumnStore, bucket_size
+
+__all__ = ["BiathlonConfig", "RequestResult", "HostLoopExecutor", "run_exact"]
+
+
+@dataclass(frozen=True)
+class BiathlonConfig:
+    """Default configuration = the paper's §4 defaults."""
+
+    alpha: float = 0.05        # initial sampling ratio
+    gamma: float = 0.01        # step size as fraction of Σ N_j
+    tau: float = 0.95          # confidence level
+    delta: float | None = None  # error bound; None -> pipeline.delta_default
+    m: int = 1000              # QMC samples for AMI
+    m_sobol: int = 256         # QMC base samples for Saltelli indices
+    n_bootstrap: int = 256     # bootstrap replicates for holistic aggs
+    max_iters: int = 64        # safety cap (loop provably terminates at z=N)
+    batch_afc: bool = True     # §Perf: one fused AFC call for parametric
+                               # features + cached buffers (False = naive
+                               # per-feature dispatch, the original baseline)
+    adaptive_ami: bool = False  # §Perf (beyond-paper): screen with m/8 QMC
+                                # samples; pay full m only when the coarse
+                                # prob lands inside (tau-margin, tau+margin).
+                                # Conservative: coarse PASS still requires
+                                # prob >= tau + margin.
+    ami_margin: float = 0.04
+
+
+@dataclass
+class RequestResult:
+    y_hat: float
+    prob: float
+    satisfied: bool
+    iters: int
+    samples_used: int
+    samples_total: int
+    z: np.ndarray
+    n: np.ndarray
+    t_afc: float = 0.0
+    t_ami: float = 0.0
+    t_planner: float = 0.0
+    t_total: float = 0.0
+
+    @property
+    def sample_fraction(self) -> float:
+        return self.samples_used / max(self.samples_total, 1)
+
+
+class HostLoopExecutor:
+    """Paper-faithful iterative executor (dynamic plans, bucketed shapes)."""
+
+    def __init__(self, store: ColumnStore, config: BiathlonConfig | None = None):
+        self.store = store
+        self.config = config or BiathlonConfig()
+
+    # --- AFC ---------------------------------------------------------------
+    def _afc(
+        self,
+        pipeline: Pipeline,
+        request: dict,
+        z: np.ndarray,
+        n: np.ndarray,
+        key: jax.Array,
+        buffers: dict | None = None,
+    ) -> FeatureUncertainty:
+        """Approximate Feature Computation at plan ``z``.
+
+        ``buffers`` is a per-request cache {j: (cap, np_buffer)} — incremental
+        sampling means a wider prefix of the SAME buffer, so we only re-gather
+        a feature when its bucket grows (paper §3.2's no-repeated-access
+        property, preserved across planner iterations).
+        """
+        cfg = self.config
+        if not cfg.batch_afc:
+            return self._afc_naive(pipeline, request, z, n, key)
+        k = pipeline.k
+        zs = np.where(
+            [f.approximate for f in pipeline.agg_features], np.minimum(z, n), n
+        ).astype(np.int64)
+        cap = bucket_size(int(max(zs.max(), 1)))
+        buffers = buffers if buffers is not None else {}
+        # (k, cap) stacked buffers; re-gather only on bucket growth
+        if buffers.get("cap", 0) < cap:
+            stack = np.zeros((k, cap), np.float32)
+            for j, f in enumerate(pipeline.agg_features):
+                stack[j] = self.store[f.table].sample_prefix(
+                    f.column, int(request[f.group_field]), cap
+                )
+            buffers["cap"] = cap
+            buffers["stack"] = stack
+        stack = buffers["stack"][:, : buffers["cap"]]
+
+        param_idx = [
+            j for j, f in enumerate(pipeline.agg_features)
+            if f.agg in aggregates.PARAMETRIC_AGGS
+        ]
+        hol_idx = [j for j in range(k) if j not in param_idx]
+
+        value = np.zeros((k,), np.float32)
+        sigma = np.zeros((k,), np.float32)
+        reps = np.zeros((k, cfg.n_bootstrap), np.float32)
+        emp = np.zeros((k,), bool)
+
+        if param_idx:
+            ids = jnp.asarray(
+                [aggregates.AGG_IDS[pipeline.agg_features[j].agg] for j in param_idx],
+                jnp.int32,
+            )
+            v, s = aggregates.masked_estimates_batch(
+                jnp.asarray(stack[param_idx]),
+                jnp.asarray(zs[param_idx], jnp.int32),
+                jnp.asarray(n[param_idx], jnp.int32),
+                ids,
+            )
+            value[param_idx] = np.asarray(v)
+            sigma[param_idx] = np.asarray(s)
+            reps[param_idx] = value[param_idx, None]
+
+        keys = jax.random.split(key, max(len(hol_idx), 1))
+        for i, j in enumerate(hol_idx):
+            f = pipeline.agg_features[j]
+            res = aggregates.estimate(
+                f.agg,
+                jnp.asarray(stack[j]),
+                jnp.asarray(int(zs[j]), jnp.int32),
+                jnp.asarray(int(n[j]), jnp.int32),
+                keys[i],
+                n_boot=cfg.n_bootstrap,
+                quantile=f.quantile,
+            )
+            value[j] = float(res.value)
+            sigma[j] = float(res.sigma)
+            reps[j] = np.asarray(res.replicates)
+            emp[j] = bool(res.is_empirical)
+
+        return FeatureUncertainty(
+            value=jnp.asarray(value),
+            sigma=jnp.asarray(sigma),
+            replicates=jnp.asarray(reps),
+            is_empirical=jnp.asarray(emp),
+        )
+
+    def _afc_naive(
+        self,
+        pipeline: Pipeline,
+        request: dict,
+        z: np.ndarray,
+        n: np.ndarray,
+        key: jax.Array,
+    ) -> FeatureUncertainty:
+        """Original per-feature dispatch path (the §Perf 'before')."""
+        cfg = self.config
+        vals, sigmas, reps, emps = [], [], [], []
+        keys = jax.random.split(key, pipeline.k)
+        for j, f in enumerate(pipeline.agg_features):
+            # non-approximated operators (Fig. 10 ablation) are always exact
+            zj = int(min(z[j], n[j])) if f.approximate else int(n[j])
+            cap = bucket_size(max(zj, 1))
+            buf = self.store[f.table].sample_prefix(
+                f.column, int(request[f.group_field]), cap
+            )
+            res = aggregates.estimate(
+                f.agg,
+                jnp.asarray(buf),
+                jnp.asarray(zj, jnp.int32),
+                jnp.asarray(int(n[j]), jnp.int32),
+                keys[j],
+                n_boot=cfg.n_bootstrap,
+                quantile=f.quantile,
+            )
+            vals.append(res.value)
+            sigmas.append(res.sigma)
+            reps.append(res.replicates)
+            emps.append(res.is_empirical)
+        return FeatureUncertainty(
+            value=jnp.stack(vals),
+            sigma=jnp.stack(sigmas),
+            replicates=jnp.stack(reps),
+            is_empirical=jnp.stack(emps),
+        )
+
+    # --- full request ---------------------------------------------------
+    def run(
+        self, pipeline: Pipeline, request: dict, key: jax.Array | None = None
+    ) -> RequestResult:
+        cfg = self.config
+        key = key if key is not None else jax.random.PRNGKey(0)
+        delta = cfg.delta if cfg.delta is not None else pipeline.delta_default
+        if pipeline.task == "classification" and delta != 0.0:
+            raise ValueError("classification pipelines require delta == 0 (paper §3)")
+
+        t0 = time.perf_counter()
+        n = pipeline.group_sizes(self.store, request)
+        exact_vals = pipeline.exact_feature_values(self.store, request)
+        model_fn = make_model_fn(pipeline, exact_vals)
+        z = np.asarray(planner.initial_plan(jnp.asarray(n), cfg.alpha))
+        approx = np.array([f.approximate for f in pipeline.agg_features])
+        z = np.where(approx, z, n)  # exact-only operators consume full groups
+        step = int(planner.gamma_abs(jnp.asarray(n), cfg.gamma))
+
+        t_afc = t_ami = t_plan = 0.0
+        it = 0
+        prob = 0.0
+        y_hat = 0.0
+        buffers: dict = {}
+        while True:
+            it += 1
+            key, k_afc, k_ami, k_sob = jax.random.split(key, 4)
+
+            t = time.perf_counter()
+            unc = self._afc(pipeline, request, z, n, k_afc, buffers)
+            jax.block_until_ready(unc.value)
+            t_afc += time.perf_counter() - t
+
+            t = time.perf_counter()
+
+            def _propagate(m_samples):
+                if pipeline.task == "regression":
+                    return propagate_regression(model_fn, unc, m_samples, k_ami)
+                return propagate_classification(
+                    model_fn, unc, m_samples, pipeline.n_classes, k_ami
+                )
+
+            if cfg.adaptive_ami:
+                infu = _propagate(max(cfg.m // 8, 64))
+                prob_j, _ = guarantee.satisfied(infu, delta, cfg.tau, pipeline.task)
+                coarse = float(prob_j)
+                if abs(coarse - cfg.tau) <= cfg.ami_margin:
+                    infu = _propagate(cfg.m)          # uncertain band: full m
+                    prob_j, _ = guarantee.satisfied(
+                        infu, delta, cfg.tau, pipeline.task
+                    )
+                prob = float(prob_j)
+                ok = prob >= cfg.tau
+            else:
+                infu = _propagate(cfg.m)
+                prob_j, ok = guarantee.satisfied(infu, delta, cfg.tau, pipeline.task)
+                prob = float(prob_j)
+            y_hat = float(infu.y_hat)
+            t_ami += time.perf_counter() - t
+
+            exhausted = bool(np.all(z >= n))
+            if bool(ok) or exhausted or it >= cfg.max_iters:
+                break
+
+            t = time.perf_counter()
+            est = main_effect_indices(
+                model_fn,
+                unc,
+                cfg.m_sobol,
+                k_sob,
+                task=pipeline.task,
+                y_hat=jnp.asarray(y_hat, jnp.float32),
+            )
+            d = planner.direction(est.indices, jnp.asarray(z), jnp.asarray(n))
+            z = np.asarray(planner.next_plan(jnp.asarray(z), d, step, jnp.asarray(n)))
+            t_plan += time.perf_counter() - t
+
+        t_total = time.perf_counter() - t0
+        return RequestResult(
+            y_hat=y_hat,
+            prob=prob,
+            satisfied=bool(prob >= cfg.tau) or bool(np.all(z >= n)),
+            iters=it,
+            samples_used=int(np.minimum(z, n).sum()),
+            samples_total=int(n.sum()),
+            z=np.minimum(z, n),
+            n=n,
+            t_afc=t_afc,
+            t_ami=t_ami,
+            t_planner=t_plan,
+            t_total=t_total,
+        )
+
+
+def run_exact(
+    store: ColumnStore, pipeline: Pipeline, request: dict
+) -> tuple[float, float]:
+    """The unoptimized baseline: every aggregate over ALL rows.
+
+    Returns (prediction, wall_seconds).  This is `Y` in Eq. 1 and the
+    denominator of every speedup number in §4.
+    """
+    t0 = time.perf_counter()
+    feats = []
+    for f in pipeline.agg_features:
+        gid = int(request[f.group_field])
+        n = store[f.table].group_size(gid)
+        cap = bucket_size(n)  # bucketed buffer -> jit caches across requests
+        buf = store[f.table].sample_prefix(f.column, gid, cap)
+        res = aggregates.estimate(
+            f.agg,
+            jnp.asarray(buf),
+            jnp.asarray(n, jnp.int32),
+            jnp.asarray(n, jnp.int32),
+            jax.random.PRNGKey(0),
+            n_boot=8,
+            quantile=f.quantile,
+        )
+        feats.append(float(res.value))
+    exact_vals = pipeline.exact_feature_values(store, request)
+    model_fn = make_model_fn(pipeline, exact_vals)
+    y = model_fn(jnp.asarray(feats, jnp.float32)[None, :])
+    y = float(np.asarray(y).reshape(()))
+    return y, time.perf_counter() - t0

@@ -1,0 +1,53 @@
+"""The accuracy guarantee check (paper Eq. 1).
+
+    Pr(|Y − ŷ| ≤ δ) ≥ τ
+
+Regression:  U_y ~ N(ȳ − ŷ, σ_y²), so
+    Pr = Φ((δ − (ȳ−ŷ)) / σ_y) − Φ((−δ − (ȳ−ŷ)) / σ_y).
+Classification (δ must be 0):  U_y ~ Bernoulli(1 − p_ŷ), so
+    Pr = p_ŷ.
+
+Degenerate σ_y = 0 (all features exact, or the model is flat in the sampled
+region) means Y is deterministic at ȳ: Pr = 1[|ȳ − ŷ| ≤ δ].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.propagation import InferenceUncertainty
+
+__all__ = ["regression_prob", "classification_prob", "satisfied"]
+
+_Phi = jax.scipy.stats.norm.cdf
+
+
+def regression_prob(u: InferenceUncertainty, delta: jnp.ndarray) -> jnp.ndarray:
+    """Pr(|Y − ŷ| ≤ δ) for a Normal inference-uncertainty model."""
+    bias = u.mean - u.y_hat
+    sigma = u.std
+    safe = jnp.maximum(sigma, 1e-12)
+    prob = _Phi((delta - bias) / safe) - _Phi((-delta - bias) / safe)
+    exact = (jnp.abs(bias) <= delta).astype(prob.dtype)
+    return jnp.where(sigma <= 1e-12, exact, prob)
+
+
+def classification_prob(u: InferenceUncertainty) -> jnp.ndarray:
+    """Pr(Y == ŷ) = p_ŷ for the Categorical inference-uncertainty model."""
+    return u.mean
+
+
+def satisfied(
+    u: InferenceUncertainty,
+    delta: float | jnp.ndarray,
+    tau: float,
+    task: str,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (prob, ok) for Eq. 1; ``task`` in {"regression","classification"}."""
+    if task == "regression":
+        prob = regression_prob(u, jnp.asarray(delta, jnp.float32))
+    elif task == "classification":
+        prob = classification_prob(u)
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown task {task!r}")
+    return prob, prob >= tau

@@ -1,0 +1,136 @@
+"""Inference-pipeline definition (paper §2): feature prep operators + model.
+
+A pipeline is a small DAG flattened into:
+
+* ``agg_features``   — expensive datastore aggregations (the ones Biathlon
+  approximates; SUM/COUNT/AVG/VAR/STD/MEDIAN/QUANTILE over a request-selected
+  group of rows),
+* ``exact_features`` — lightweight ops computed exactly: point lookups
+  (indexed datastore access) and request-provided scalars,
+* a transformation stage (standard scaling — the paper's pipelines use
+  sklearn ``StandardScaler``-style transforms; they are cheap and exact),
+* the model-inference operator (any jittable ``(n, D) -> (n,)`` predictor).
+
+Feature vector layout is ``[agg features..., exact features...]`` — the model
+closure used by AMI / Sobol-index estimation tiles the exact part and varies
+only the aggregate part, which is the paper's setup (only aggregation
+features carry uncertainty).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.store import ColumnStore
+
+__all__ = ["AggFeature", "ExactFeature", "Pipeline", "make_model_fn"]
+
+
+@dataclass(frozen=True)
+class AggFeature:
+    """An expensive aggregation feature over a request-selected row group."""
+
+    name: str
+    table: str
+    column: str
+    agg: str                  # sum | count | avg | var | std | median | quantile
+    group_field: str          # request field selecting the group (e.g. "user_id")
+    quantile: float = 0.5
+    approximate: bool = True  # False -> always computed exactly (Fig. 10 knob)
+
+
+@dataclass(frozen=True)
+class ExactFeature:
+    """A cheap, exactly-computed feature."""
+
+    name: str
+    kind: str                 # "lookup" | "request"
+    table: str = ""
+    column: str = ""
+    group_field: str = ""     # for lookups
+    request_field: str = ""   # for request passthroughs
+    transform: str = "id"     # id | log1p  (lightweight transformation ops)
+
+
+@dataclass
+class Pipeline:
+    """A runnable inference pipeline (Table 1 row equivalent)."""
+
+    name: str
+    agg_features: Sequence[AggFeature]
+    exact_features: Sequence[ExactFeature]
+    model: Any                      # TabularModel: .predict(X) jittable
+    task: str                       # "regression" | "classification"
+    n_classes: int = 0
+    # StandardScaler params over the full feature vector (fit at train time).
+    scaler_mean: np.ndarray = field(default_factory=lambda: np.zeros(0, np.float32))
+    scaler_scale: np.ndarray = field(default_factory=lambda: np.ones(0, np.float32))
+    # Default error bound: MAE of the trained model on held-out data (paper §4).
+    delta_default: float = 0.0
+
+    @property
+    def k(self) -> int:
+        return len(self.agg_features)
+
+    @property
+    def n_features(self) -> int:
+        return len(self.agg_features) + len(self.exact_features)
+
+    # ------------------------------------------------------------------
+    def exact_feature_values(self, store: ColumnStore, request: dict) -> np.ndarray:
+        out = np.zeros((len(self.exact_features),), np.float32)
+        for i, f in enumerate(self.exact_features):
+            if f.kind == "lookup":
+                v = store[f.table].lookup(f.column, request[f.group_field])
+            elif f.kind == "request":
+                v = float(request[f.request_field])
+            else:  # pragma: no cover - config error
+                raise ValueError(f"unknown exact-feature kind {f.kind!r}")
+            if f.transform == "log1p":
+                v = float(np.log1p(max(v, 0.0)))
+            out[i] = v
+        return out
+
+    def agg_specs(self, request: dict) -> list[tuple[str, str, int]]:
+        return [
+            (f.table, f.column, int(request[f.group_field]))
+            for f in self.agg_features
+        ]
+
+    def group_sizes(self, store: ColumnStore, request: dict) -> np.ndarray:
+        return np.array(
+            [
+                store[f.table].group_size(int(request[f.group_field]))
+                for f in self.agg_features
+            ],
+            np.int64,
+        )
+
+
+def make_model_fn(
+    pipeline: Pipeline, exact_vals: np.ndarray
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Close over the request's exact features: ``(m, k) aggs -> (m,) preds``.
+
+    This is the black-box ``M`` that AMI (propagation) and the Sobol-index
+    estimator batch-evaluate; scaling is folded in so the closure is the
+    *whole* downstream pipeline after aggregation.
+    """
+    mean = jnp.asarray(pipeline.scaler_mean, jnp.float32)
+    scale = jnp.asarray(pipeline.scaler_scale, jnp.float32)
+    exact = jnp.asarray(exact_vals, jnp.float32)
+    k = pipeline.k
+
+    def model_fn(agg_x: jnp.ndarray) -> jnp.ndarray:
+        m = agg_x.shape[0]
+        full = jnp.concatenate(
+            [agg_x, jnp.broadcast_to(exact[None, :], (m, exact.shape[0]))], axis=1
+        )
+        if mean.shape[0] == full.shape[1]:
+            full = (full - mean[None, :]) / scale[None, :]
+        return pipeline.model.predict(full)
+
+    return model_fn

@@ -1,0 +1,125 @@
+"""Quasi-Monte-Carlo primitives: Sobol low-discrepancy sequences in pure JAX.
+
+Biathlon's AMI stage (paper §3.3) and the Sobol'-Saltelli index estimator
+(paper §3.4) both draw *low-discrepancy* feature samples so that ``m`` model
+evaluations converge like ~1/m instead of ~1/sqrt(m).  This module provides
+
+* :func:`sobol_sequence` — the raw Sobol sequence, bit-exact with
+  ``scipy.stats.qmc.Sobol(scramble=False)`` (validated in tests),
+* :func:`digital_shift` — cheap randomization (XOR shift) preserving the
+  low-discrepancy structure, used to decorrelate repeated planner iterations,
+* :func:`uniform_to_normal` — inverse-CDF transform.
+
+The default TPU execution path for large ``(m, d)`` grids is the Pallas kernel
+in ``repro.kernels.sobol``; this module is the reference/portable path (the
+kernel's ``ref.py`` re-exports from here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sobol_tables import BITS, DIRECTION_NUMBERS, MAX_DIM
+
+__all__ = [
+    "sobol_sequence",
+    "sobol_uint32",
+    "digital_shift",
+    "uniform_to_normal",
+    "normal_qmc_samples",
+]
+
+
+def _direction_numbers(dim: int) -> jnp.ndarray:
+    if dim > MAX_DIM:
+        raise ValueError(
+            f"sobol_sequence supports up to {MAX_DIM} dimensions, got {dim} "
+            "(the paper's pipelines use at most 21 aggregate features; "
+            "extend sobol_tables.py if you need more)"
+        )
+    return jnp.asarray(DIRECTION_NUMBERS[:dim], dtype=jnp.uint32)  # (d, 32)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def sobol_uint32(n: int, dim: int, skip: int = 0) -> jnp.ndarray:
+    """Raw Sobol points as uint32 integers, shape ``(n, dim)``.
+
+    Uses the *direct* (non-recursive) gray-code construction so the whole grid
+    is computed in parallel — point ``i`` is the XOR over set bits ``b`` of
+    ``gray(i) = i ^ (i >> 1)`` of direction number ``v[dim, b]``.  This maps
+    onto the TPU VPU as 32 masked XOR steps with no sequential dependence on
+    ``n`` (unlike the classic one-point-at-a-time recurrence).
+    """
+    sv = _direction_numbers(dim)  # (dim, 32)
+    idx = jnp.arange(skip, skip + n, dtype=jnp.uint32)
+    gray = idx ^ (idx >> 1)  # (n,)
+    out = jnp.zeros((n, dim), dtype=jnp.uint32)
+    for b in range(BITS):
+        bit = ((gray >> b) & 1).astype(bool)  # (n,)
+        out = jnp.where(bit[:, None], out ^ sv[None, :, b], out)
+    return out
+
+
+def sobol_sequence(
+    n: int, dim: int, skip: int = 0, *, shift_half: bool = True
+) -> jnp.ndarray:
+    """Sobol points in [0, 1), shape ``(n, dim)``, float32.
+
+    ``shift_half=True`` adds the half-integer offset ``(x + 0.5) / 2**32`` so
+    the first point is not exactly 0 (which would map to -inf under the
+    normal inverse CDF).  ``shift_half=False`` reproduces scipy bit-exactly.
+    """
+    x = sobol_uint32(n, dim, skip)
+    u = x.astype(jnp.float32) * jnp.float32(2.0**-32)
+    if shift_half:
+        u = u + jnp.float32(0.5 * 2.0**-32)
+    return u
+
+
+def digital_shift(key: jax.Array, points: jnp.ndarray) -> jnp.ndarray:
+    """Random digital (XOR) shift of raw uint32 Sobol points.
+
+    A digital shift preserves the (t, m, s)-net structure of the sequence
+    while randomizing it, giving unbiased randomized-QMC estimates across
+    planner iterations.  ``points`` must be the uint32 grid from
+    :func:`sobol_uint32`.
+    """
+    shift = jax.random.bits(key, (points.shape[-1],), dtype=jnp.uint32)
+    return points ^ shift[None, :]
+
+
+def uniform_to_normal(u: jnp.ndarray) -> jnp.ndarray:
+    """Inverse-CDF transform of uniforms in (0,1) to standard normals."""
+    # Clamp away from {0, 1} to keep ndtri finite in float32.
+    eps = jnp.float32(1e-7)
+    u = jnp.clip(u, eps, 1.0 - eps)
+    return jax.scipy.special.ndtri(u).astype(jnp.float32)
+
+
+def normal_qmc_samples(
+    n: int, dim: int, key: jax.Array | None = None, skip: int = 0
+) -> jnp.ndarray:
+    """``(n, dim)`` standard-normal QMC samples (optionally digitally shifted)."""
+    x = sobol_uint32(n, dim, skip)
+    if key is not None:
+        x = digital_shift(key, x)
+    u = x.astype(jnp.float32) * jnp.float32(2.0**-32) + jnp.float32(0.5 * 2.0**-32)
+    return uniform_to_normal(u)
+
+
+def discrepancy_proxy(points: np.ndarray) -> float:
+    """Cheap L2-star discrepancy proxy used by property tests.
+
+    Exact star discrepancy is exponential; the Warnock formula for the L2-star
+    discrepancy is O(n^2 d) and fine at test sizes.
+    """
+    pts = np.asarray(points, dtype=np.float64)
+    n, d = pts.shape
+    # Warnock: D2*^2 = 3^-d - (2^{1-d}/n) sum_i prod_k (1 - x_ik^2)
+    #                + (1/n^2) sum_ij prod_k (1 - max(x_ik, x_jk))
+    t1 = (2.0 ** (1 - d) / n) * np.prod(1.0 - pts**2, axis=1).sum()
+    t2 = np.prod(1.0 - np.maximum(pts[:, None, :], pts[None, :, :]), axis=2).sum() / n**2
+    return float(3.0**-d - t1 + t2)

@@ -1,0 +1,94 @@
+"""First-order Sobol' main-effect indices via the Saltelli QMC estimator.
+
+Paper §3.4: the Planner needs, per feature j, the share of inference-result
+variance attributable to feature j's uncertainty,
+
+    I_j = Var_{X_j}( E_{¬X_j}[ Y | X_j ] ) / Var(Y).
+
+We use the Saltelli (2002/2010) pick-freeze scheme the paper cites ([68]):
+draw two (m, k) QMC matrices A and B, plus k hybrids AB_j (A with column j
+replaced from B), and estimate
+
+    V_j    = 1/m Σ_i f(B)_i · ( f(AB_j)_i − f(A)_i )        (first-order)
+    Var(Y) = var over all f evaluations.
+
+All m·(k+2) model evaluations are stacked into ONE batched call — on TPU this
+is a single pass through the (tensorized) model, which is the whole point of
+the kernelized tree/MLP inference in ``repro.kernels``.
+
+For classification pipelines, Y is a class id; variance decomposition is
+performed on the *agreement indicator* f = 1[M(x) == ŷ] (Bernoulli), whose
+variance p(1−p) is exactly the quantity the planner drives down (the paper's
+``Var(Y|z)`` for discrete outputs).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.propagation import qmc_uniforms
+from repro.core.uncertainty import FeatureUncertainty, sample_features
+
+__all__ = ["SobolEstimate", "main_effect_indices"]
+
+
+class SobolEstimate(NamedTuple):
+    indices: jnp.ndarray   # (k,) first-order main-effect indices, clipped to [0, 1]
+    var_y: jnp.ndarray     # () total variance of f across all evaluations
+    n_evals: int           # m * (k + 2)
+
+
+def _build_eval_matrix(unc: FeatureUncertainty, m: int, key) -> jnp.ndarray:
+    """Stack [A; B; AB_1; ...; AB_k] feature samples: ((k+2)*m, k)."""
+    k = unc.k
+    u = qmc_uniforms(m, 2 * k, key)          # (m, 2k)
+    ua, ub = u[:, :k], u[:, k:]
+    xa = sample_features(unc, ua)            # (m, k)
+    xb = sample_features(unc, ub)            # (m, k)
+    eye = jnp.eye(k, dtype=bool)             # (k, k)
+    # AB_j: column j from B, the rest from A -> (k, m, k)
+    xab = jnp.where(eye[:, None, :], xb[None, :, :], xa[None, :, :])
+    return jnp.concatenate([xa, xb, xab.reshape(k * m, k)], axis=0)
+
+
+def main_effect_indices(
+    model_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    unc: FeatureUncertainty,
+    m: int,
+    key: jax.Array | None = None,
+    *,
+    task: str = "regression",
+    y_hat: jnp.ndarray | None = None,
+) -> SobolEstimate:
+    """Estimate first-order indices with one batched model call.
+
+    model_fn: ``(n, k) -> (n,)`` (float for regression, int class ids for
+    classification — converted to the agreement indicator internally).
+    """
+    k = unc.k
+    x_all = _build_eval_matrix(unc, m, key)          # ((k+2) m, k)
+    f_all = model_fn(x_all)
+    if task == "classification":
+        if y_hat is None:
+            raise ValueError("classification indices need y_hat")
+        f_all = (f_all.astype(jnp.int32) == y_hat.astype(jnp.int32))
+    f_all = f_all.astype(jnp.float32).reshape((k + 2) * m)
+
+    # Center f before the pick-freeze product: with an uncentered f the
+    # estimator's variance scales with E[f]^2 (a y~16 mean drowns a sd~0.1
+    # signal at m=O(100)) — centering is the standard Saltelli practice.
+    f_all = f_all - jnp.mean(f_all)
+    fa = f_all[:m]
+    fb = f_all[m : 2 * m]
+    fab = f_all[2 * m :].reshape(k, m)
+
+    var_y = jnp.var(f_all)
+    # Saltelli 2010 first-order estimator.
+    v_j = jnp.mean(fb[None, :] * (fab - fa[None, :]), axis=1)  # (k,)
+    safe_var = jnp.maximum(var_y, 1e-12)
+    idx = jnp.clip(v_j / safe_var, 0.0, 1.0)
+    # If total variance is ~0 nothing matters; report zeros.
+    idx = jnp.where(var_y <= 1e-12, jnp.zeros_like(idx), idx)
+    return SobolEstimate(indices=idx, var_y=var_y, n_evals=(k + 2) * m)

@@ -1,0 +1,89 @@
+"""Feature-uncertainty representation (paper §3.2, ``U_x``).
+
+Biathlon represents the error distribution of every approximated aggregate
+feature explicitly (not just a scalar stddev) so that the AMI stage can draw
+feature samples from it.  Two families are supported, exactly as in the paper:
+
+* **parametric** — Normal(0, sigma) errors for SUM / COUNT / AVG / VAR / STD
+  (CLT, following Mozafari & Niu [53]); sampling uses the inverse normal CDF;
+* **empirical** — bootstrap replicate tables for holistic aggregates
+  (MEDIAN / QUANTILE, paper appendix D); sampling uses the replicate
+  empirical inverse CDF.
+
+Both are packed into one fixed-shape struct so a *batch of heterogeneous
+features* is a single PyTree of arrays — jittable, vmappable, and usable
+inside ``lax.while_loop`` (the fused executor) and in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qmc import uniform_to_normal
+
+__all__ = ["FeatureUncertainty", "sample_features", "exact_uncertainty"]
+
+
+class FeatureUncertainty(NamedTuple):
+    """Uncertainty of ``k`` features, fixed shapes (k,), (k, B).
+
+    value:        point estimate x̂ per feature.
+    sigma:        Normal error stddev (0 when exact or empirical).
+    replicates:   sorted bootstrap replicates per feature (value-padded when
+                  parametric, so gathering from them is always safe).
+    is_empirical: which features use the replicate table.
+    """
+
+    value: jnp.ndarray        # (k,) float32
+    sigma: jnp.ndarray        # (k,) float32
+    replicates: jnp.ndarray   # (k, B) float32, sorted along B
+    is_empirical: jnp.ndarray  # (k,) bool
+
+    @property
+    def k(self) -> int:
+        return self.value.shape[-1]
+
+    @property
+    def n_replicates(self) -> int:
+        return self.replicates.shape[-1]
+
+    def effective_std(self) -> jnp.ndarray:
+        """Stddev of the error distribution regardless of representation."""
+        emp_std = jnp.std(self.replicates, axis=-1)
+        return jnp.where(self.is_empirical, emp_std, self.sigma)
+
+
+def exact_uncertainty(values: jnp.ndarray, n_replicates: int = 1) -> FeatureUncertainty:
+    """Zero-uncertainty wrapper for exactly-computed features."""
+    values = jnp.asarray(values, jnp.float32)
+    k = values.shape[-1]
+    return FeatureUncertainty(
+        value=values,
+        sigma=jnp.zeros((k,), jnp.float32),
+        replicates=jnp.broadcast_to(values[:, None], (k, n_replicates)).astype(
+            jnp.float32
+        ),
+        is_empirical=jnp.zeros((k,), bool),
+    )
+
+
+def sample_features(unc: FeatureUncertainty, u: jnp.ndarray) -> jnp.ndarray:
+    """Draw feature vectors from ``x̂ + U_x`` via inverse-CDF on uniforms.
+
+    u: ``(m, k)`` low-discrepancy uniforms in (0, 1).
+    returns ``(m, k)`` feature samples; exact features (sigma==0, parametric)
+    come out constant, so a fully-exact plan degenerates to m identical rows —
+    which is precisely what makes the guarantee check trivially pass then.
+    """
+    m, k = u.shape
+    # Parametric path: x̂ + sigma * Phi^{-1}(u).
+    parametric = unc.value[None, :] + unc.sigma[None, :] * uniform_to_normal(u)
+    # Empirical path: inverse CDF of the sorted replicate table.
+    b = unc.n_replicates
+    idx = jnp.clip((u * b).astype(jnp.int32), 0, b - 1)  # (m, k)
+    empirical = jax.vmap(
+        lambda col, i: col[i], in_axes=(0, 1), out_axes=1
+    )(unc.replicates, idx)  # gather per-feature replicate columns -> (m, k)
+    return jnp.where(unc.is_empirical[None, :], empirical, parametric)

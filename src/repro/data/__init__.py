@@ -1,0 +1,5 @@
+"""Datastore + online-aggregation substrate."""
+from repro.data import aggregates
+from repro.data.store import ColumnStore, Table, build_table, bucket_size
+
+__all__ = ["aggregates", "ColumnStore", "Table", "build_table", "bucket_size"]

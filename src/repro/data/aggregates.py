@@ -1,0 +1,213 @@
+"""Online-aggregation estimators with uncertainty (paper §3.2, AFC).
+
+Every estimator consumes a fixed-capacity *prefix-masked* sample buffer:
+``vals`` has shape (cap,), the first ``z`` entries are a simple random sample
+(without replacement — the datastore pre-permutes rows within each group, so
+a prefix IS an SRS, and growing the plan is just widening the prefix: the
+paper's incremental-sampling property, §3.2).
+
+Parametric aggregates (SUM / COUNT / AVG / VAR / STD) get Normal(0, σ) error
+distributions via CLT with the finite-population correction (sampling without
+replacement from a group of N rows).  Holistic aggregates (MEDIAN / QUANTILE)
+get empirical-bootstrap replicate tables (paper appendix D).
+
+Everything here is pure jnp with static shapes — usable from the host-loop
+executor (with bucketed caps), the fused ``lax.while_loop`` executor, and the
+Pallas ``sampled_agg`` kernel's reference oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AggResult", "estimate", "exact_value", "PARAMETRIC_AGGS", "HOLISTIC_AGGS", "AGG_IDS", "masked_estimates_batch"]
+
+PARAMETRIC_AGGS = ("sum", "count", "avg", "var", "std")
+HOLISTIC_AGGS = ("median", "quantile")
+
+
+class AggResult(NamedTuple):
+    value: jnp.ndarray        # () point estimate (already scaled by κ)
+    sigma: jnp.ndarray        # () Normal error stddev (0 for holistic/exact)
+    replicates: jnp.ndarray   # (B,) sorted bootstrap replicates (value-filled if parametric)
+    is_empirical: jnp.ndarray  # () bool
+
+
+def _masked_moments(vals: jnp.ndarray, z: jnp.ndarray):
+    cap = vals.shape[0]
+    mask = (jnp.arange(cap) < z).astype(jnp.float32)
+    zf = jnp.maximum(z.astype(jnp.float32), 1.0)
+    mean = jnp.sum(vals * mask) / zf
+    d = (vals - mean) * mask
+    m2 = jnp.sum(d**2) / zf                      # biased second moment
+    m4 = jnp.sum(d**4) / zf
+    s2 = m2 * zf / jnp.maximum(zf - 1.0, 1.0)    # unbiased sample variance
+    return mean, s2, m2, m4, zf
+
+
+def _fpc(z: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Finite-population correction for SRS without replacement."""
+    nf = n.astype(jnp.float32)
+    zf = z.astype(jnp.float32)
+    return jnp.sqrt(
+        jnp.clip((nf - zf) / jnp.maximum(nf - 1.0, 1.0), 0.0, 1.0)
+    )
+
+
+def _masked_quantile(vals: jnp.ndarray, z: jnp.ndarray, q: float) -> jnp.ndarray:
+    """Quantile of the valid prefix: sort with +inf padding, nearest-rank."""
+    cap = vals.shape[0]
+    padded = jnp.where(jnp.arange(cap) < z, vals, jnp.inf)
+    s = jnp.sort(padded)
+    rank = jnp.clip(
+        jnp.floor(q * (z.astype(jnp.float32) - 1.0) + 0.5).astype(jnp.int32),
+        0,
+        jnp.maximum(z - 1, 0),
+    )
+    return s[rank]
+
+
+def _bootstrap_replicates(
+    vals: jnp.ndarray, z: jnp.ndarray, q: float, key: jax.Array, n_boot: int
+) -> jnp.ndarray:
+    """(B,) sorted bootstrap replicate quantiles (resample-with-replacement)."""
+    cap = vals.shape[0]
+    u = jax.random.uniform(key, (n_boot, cap))
+    idx = jnp.floor(u * z.astype(jnp.float32)).astype(jnp.int32)  # uniform over prefix
+    res = vals[idx]  # (B, cap); only first-z columns meaningful via mask below
+    reps = jax.vmap(lambda r: _masked_quantile(r, z, q))(res)
+    return jnp.sort(reps)
+
+
+@functools.partial(jax.jit, static_argnames=("agg", "n_boot", "quantile"))
+def estimate(
+    agg: str,
+    vals: jnp.ndarray,
+    z: jnp.ndarray,
+    n: jnp.ndarray,
+    key: jax.Array,
+    *,
+    n_boot: int = 256,
+    quantile: float = 0.5,
+) -> AggResult:
+    """Estimate aggregate ``agg`` of the whole group from a z-prefix sample.
+
+    vals: (cap,) buffer; z: () int32 valid prefix; n: () int32 group size.
+    When ``z >= n`` the result is exact (σ=0, degenerate replicates) — the
+    worst-case fallback the paper guarantees termination with.
+    """
+    z = jnp.minimum(z.astype(jnp.int32), n.astype(jnp.int32))
+    mean, s2, m2, m4, zf = _masked_moments(vals, z)
+    nf = n.astype(jnp.float32)
+    fpc = _fpc(z, n)
+    se_mean = jnp.sqrt(jnp.maximum(s2, 0.0) / zf) * fpc
+
+    if agg == "avg":
+        value, sigma = mean, se_mean
+    elif agg == "sum":
+        value, sigma = nf * mean, nf * se_mean
+    elif agg == "count":
+        # vals is a 0/1 predicate column; COUNT = N * p̂.
+        value, sigma = nf * mean, nf * se_mean
+    elif agg == "var":
+        # Asymptotic variance of the sample variance (normal-ish data):
+        # Var(s²) ≈ (m4 − m2²·(z−3)/(z−1)) / z.
+        value = s2
+        var_s2 = jnp.maximum(
+            (m4 - m2**2 * (zf - 3.0) / jnp.maximum(zf - 1.0, 1.0)) / zf, 0.0
+        )
+        sigma = jnp.sqrt(var_s2) * fpc
+    elif agg == "std":
+        value = jnp.sqrt(jnp.maximum(s2, 0.0))
+        var_s2 = jnp.maximum(
+            (m4 - m2**2 * (zf - 3.0) / jnp.maximum(zf - 1.0, 1.0)) / zf, 0.0
+        )
+        # Delta method: Var(s) ≈ Var(s²) / (4 s²).
+        sigma = jnp.sqrt(var_s2 / jnp.maximum(4.0 * s2, 1e-12)) * fpc
+    elif agg in ("median", "quantile"):
+        q = 0.5 if agg == "median" else quantile
+        value = _masked_quantile(vals, z, q)
+        reps = _bootstrap_replicates(vals, z, q, key, n_boot)
+        exact = z >= n
+        reps = jnp.where(exact, jnp.full_like(reps, value), reps)
+        return AggResult(
+            value=value.astype(jnp.float32),
+            sigma=jnp.zeros((), jnp.float32),
+            replicates=reps.astype(jnp.float32),
+            # degenerate replicates when exact => sampling returns the exact
+            # value, so keeping the empirical flag set is correct and jittable.
+            is_empirical=jnp.asarray(True),
+        )
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unsupported aggregate {agg!r}")
+
+    sigma = jnp.where(z >= n, 0.0, sigma)
+    return AggResult(
+        value=value.astype(jnp.float32),
+        sigma=sigma.astype(jnp.float32),
+        replicates=jnp.full((n_boot,), value, jnp.float32),
+        is_empirical=jnp.asarray(False),
+    )
+
+
+def exact_value(
+    agg: str, vals: jnp.ndarray, n: jnp.ndarray, *, quantile: float = 0.5
+) -> jnp.ndarray:
+    """Exact aggregate over the full group (baseline path)."""
+    res = estimate(
+        agg,
+        vals,
+        jnp.asarray(n, jnp.int32),
+        jnp.asarray(n, jnp.int32),
+        jax.random.PRNGKey(0),
+        n_boot=8,
+        quantile=quantile,
+    )
+    return res.value
+
+
+# --------------------------------------------------------------------------
+# Batched parametric estimation (one fused call for k features)
+# --------------------------------------------------------------------------
+AGG_IDS = {"avg": 0, "sum": 1, "count": 2, "var": 3, "std": 4}
+
+
+@jax.jit
+def masked_estimates_batch(vals, z, n, agg_ids):
+    """Vectorized parametric estimators over (k, cap) prefix-masked buffers.
+
+    agg_ids: (k,) int32 per AGG_IDS.  Returns (value, sigma) each (k,).
+    One XLA call replaces k per-feature ``estimate`` dispatches — the AFC
+    batching optimization recorded in EXPERIMENTS.md §Perf (serving).
+    """
+    k, cap = vals.shape
+    f32 = jnp.float32
+    mask = (jnp.arange(cap)[None, :] < z[:, None]).astype(f32)
+    zf = jnp.maximum(z.astype(f32), 1.0)
+    nf = n.astype(f32)
+    mean = jnp.sum(vals * mask, axis=1) / zf
+    d = (vals - mean[:, None]) * mask
+    m2 = jnp.sum(d**2, axis=1) / zf
+    m4 = jnp.sum(d**4, axis=1) / zf
+    s2 = m2 * zf / jnp.maximum(zf - 1.0, 1.0)
+    fpc = jnp.sqrt(jnp.clip((nf - zf) / jnp.maximum(nf - 1.0, 1.0), 0.0, 1.0))
+    se_mean = jnp.sqrt(jnp.maximum(s2, 0.0) / zf) * fpc
+    var_s2 = jnp.maximum(
+        (m4 - m2**2 * (zf - 3.0) / jnp.maximum(zf - 1.0, 1.0)) / zf, 0.0
+    )
+    sigma_var = jnp.sqrt(var_s2) * fpc
+    sigma_std = jnp.sqrt(var_s2 / jnp.maximum(4.0 * s2, 1e-12)) * fpc
+    std = jnp.sqrt(jnp.maximum(s2, 0.0))
+    value = jnp.select(
+        [agg_ids == 0, agg_ids == 1, agg_ids == 2, agg_ids == 3, agg_ids == 4],
+        [mean, nf * mean, nf * mean, s2, std],
+    )
+    sigma = jnp.select(
+        [agg_ids == 0, agg_ids == 1, agg_ids == 2, agg_ids == 3, agg_ids == 4],
+        [se_mean, nf * se_mean, nf * se_mean, sigma_var, sigma_std],
+    )
+    sigma = jnp.where(z >= n, 0.0, sigma)
+    return value, sigma

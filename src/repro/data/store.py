@@ -1,0 +1,138 @@
+"""In-memory columnar datastore with group-indexed incremental sampling.
+
+Plays the role ClickHouse plays in the paper (§4 System Setup): each *table*
+holds row-aligned columns plus a **group index** (e.g. rows per user / per
+trip region).  At build time rows are permuted once *within each group* with a
+fixed seed, so that
+
+    prefix of length z  ==  simple random sample of size z without replacement
+
+and growing a plan from z to z' touches only rows [z, z') — the paper's
+incremental online-aggregation property.  On a real TPU cluster the column
+buffers live sharded in HBM and the gather below is the ``sampled_agg``
+Pallas kernel's DMA; here they live in host memory / device 0.
+
+The store is deliberately framework-agnostic (plain numpy in, jnp out) so the
+serving runtime, the fused executor, and the benchmarks all share it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Table", "ColumnStore", "bucket_size"]
+
+
+def bucket_size(z: int, minimum: int = 64) -> int:
+    """Round a sample size up to the next power of two (bounds recompiles)."""
+    cap = minimum
+    while cap < z:
+        cap *= 2
+    return cap
+
+
+@dataclass
+class Table:
+    """Row-aligned columns + CSR-style group index over a permutation."""
+
+    columns: dict[str, np.ndarray]
+    group_ptr: np.ndarray          # (G+1,) offsets into perm
+    perm: np.ndarray               # (R,) row ids, permuted within each group
+    group_ids: dict[int, int]      # external group key -> dense group index
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.perm.shape[0])
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.group_ptr.shape[0] - 1)
+
+    def group_size(self, gid: int) -> int:
+        g = self.group_ids[int(gid)]
+        return int(self.group_ptr[g + 1] - self.group_ptr[g])
+
+    def sample_prefix(self, column: str, gid: int, cap: int) -> np.ndarray:
+        """First ``min(cap, N)`` permuted rows of the group, padded to cap.
+
+        The prefix is the group's canonical SRS order; callers mask with the
+        live ``z``.  Padding repeats 0.0 (masked out by estimators).
+        """
+        g = self.group_ids[int(gid)]
+        start, stop = int(self.group_ptr[g]), int(self.group_ptr[g + 1])
+        take = min(cap, stop - start)
+        rows = self.perm[start : start + take]
+        out = np.zeros((cap,), np.float32)
+        out[:take] = self.columns[column][rows]
+        return out
+
+    def full_values(self, column: str, gid: int) -> np.ndarray:
+        g = self.group_ids[int(gid)]
+        start, stop = int(self.group_ptr[g]), int(self.group_ptr[g + 1])
+        return self.columns[column][self.perm[start:stop]].astype(np.float32)
+
+    def lookup(self, column: str, gid: int) -> float:
+        """Point lookup (lightweight datastore op — computed exactly)."""
+        g = self.group_ids[int(gid)]
+        row = self.perm[int(self.group_ptr[g])]
+        return float(self.columns[column][row])
+
+
+def build_table(
+    columns: Mapping[str, np.ndarray],
+    group_key: np.ndarray,
+    seed: int = 0,
+) -> Table:
+    """Index ``columns`` by ``group_key`` and fix the per-group sample order."""
+    group_key = np.asarray(group_key)
+    uniq, inverse = np.unique(group_key, return_inverse=True)
+    order = np.argsort(inverse, kind="stable")
+    counts = np.bincount(inverse, minlength=len(uniq))
+    ptr = np.zeros(len(uniq) + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    rng = np.random.default_rng(seed)
+    perm = order.copy()
+    for g in range(len(uniq)):
+        s, e = ptr[g], ptr[g + 1]
+        perm[s:e] = rng.permutation(perm[s:e])
+    cols = {k: np.asarray(v) for k, v in columns.items()}
+    gids = {int(k): i for i, k in enumerate(uniq)}
+    return Table(columns=cols, group_ptr=ptr, perm=perm, group_ids=gids)
+
+
+@dataclass
+class ColumnStore:
+    """A named collection of tables — the serving datastore."""
+
+    tables: dict[str, Table] = field(default_factory=dict)
+
+    def add(self, name: str, table: Table) -> "ColumnStore":
+        self.tables[name] = table
+        return self
+
+    def __getitem__(self, name: str) -> Table:
+        return self.tables[name]
+
+    # --- fused-executor support -------------------------------------------
+    def request_buffers(
+        self,
+        specs: list[tuple[str, str, int]],
+        cap: int,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Gather (k, cap) padded prefix buffers + (k,) group sizes.
+
+        One host->device transfer per request; afterwards the whole
+        iterate-until-guaranteed loop runs on device (FusedExecutor).
+        ``specs`` is [(table, column, gid), ...] per aggregate feature.
+        """
+        bufs = np.stack(
+            [self.tables[t].sample_prefix(c, g, cap) for (t, c, g) in specs]
+        )
+        sizes = np.array(
+            [min(self.tables[t].group_size(g), cap) for (t, c, g) in specs],
+            np.int32,
+        )
+        return jnp.asarray(bufs), jnp.asarray(sizes)

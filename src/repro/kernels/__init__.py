@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (+ ops wrappers + pure-jnp oracles).
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatch wrapper), ref.py (oracle used by the interpret-mode allclose tests).
+"""

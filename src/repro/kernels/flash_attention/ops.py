@@ -1,0 +1,34 @@
+"""Jit'd wrapper: flash attention with GQA head expansion + layout shim."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+__all__ = ["attention"]
+
+
+def attention(
+    q: jnp.ndarray,   # (B, S, H, D)   — model layout
+    k: jnp.ndarray,   # (B, S, Hkv, D)
+    v: jnp.ndarray,   # (B, S, Hkv, Dv)
+    *,
+    causal: bool = True,
+    use_kernel: bool | None = None,
+) -> jnp.ndarray:
+    """Returns (B, S, H, Dv)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention(
+        qt, kt, vt, causal=causal, interpret=jax.default_backend() != "tpu"
+    )
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,4 @@
+"""Oracle for the flash-attention kernel: plain materialized attention."""
+from repro.models.lm.layers import attention_full  # noqa: F401
+
+__all__ = ["attention_full"]

@@ -1,0 +1,1 @@
+from repro.kernels.sampled_agg import ops  # noqa: F401

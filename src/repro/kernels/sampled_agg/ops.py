@@ -1,0 +1,41 @@
+"""Jit'd wrapper: dispatches to the Pallas kernel (TPU) or oracle (CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sampled_agg.ref import sampled_moments_ref
+from repro.kernels.sampled_agg.sampled_agg import sampled_moments
+
+__all__ = ["moments", "estimates_from_moments"]
+
+
+def moments(vals: jnp.ndarray, z: jnp.ndarray, *, use_kernel: bool | None = None):
+    """(k, cap), (k,) -> (k, 4) [count, s1, s2, s3].
+
+    use_kernel=None auto-selects: Pallas on TPU, oracle elsewhere (the
+    interpret-mode kernel is for correctness tests, not speed).
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return sampled_moments(
+            vals, z, interpret=jax.default_backend() != "tpu"
+        )
+    return sampled_moments_ref(vals, z)
+
+
+def estimates_from_moments(m: jnp.ndarray, n: jnp.ndarray):
+    """Turn raw power sums into (mean, unbiased var, se_mean) per feature.
+
+    n: (k,) total group sizes (finite-population correction).
+    """
+    count = jnp.maximum(m[:, 0], 1.0)
+    mean = m[:, 1] / count
+    var = jnp.maximum(m[:, 2] / count - mean**2, 0.0) * count / jnp.maximum(
+        count - 1.0, 1.0
+    )
+    nf = n.astype(jnp.float32)
+    fpc = jnp.sqrt(jnp.clip((nf - count) / jnp.maximum(nf - 1.0, 1.0), 0.0, 1.0))
+    se = jnp.sqrt(var / count) * fpc
+    return mean, var, se

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the sampled-aggregation kernel.
+
+Semantics: given k prefix-masked sample buffers (k, cap) and live sample
+sizes z (k,), compute per-feature streaming moments in ONE pass:
+
+    count  = z
+    sum    = sum of the first z values
+    sum2   = sum of squares
+    sum4   = centered 4th power sum is NOT computed here (needs the mean);
+             instead we return raw power sums so the host can build any of
+             SUM / COUNT / AVG / VAR / STD estimators (aggregates.py).
+
+This mirrors the paper's AFC inner loop (§3.2): one scan over the sampled
+rows produces every parametric aggregate at once.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["sampled_moments_ref"]
+
+
+def sampled_moments_ref(vals: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """vals: (k, cap) f32; z: (k,) int32 -> (k, 4) [count, sum, sum2, sum3].
+
+    Raw power sums over the valid prefix; padding contributes zero.
+    """
+    k, cap = vals.shape
+    mask = (jnp.arange(cap)[None, :] < z[:, None]).astype(jnp.float32)
+    v = vals.astype(jnp.float32) * mask
+    count = jnp.sum(mask, axis=1)
+    s1 = jnp.sum(v, axis=1)
+    s2 = jnp.sum(v * v, axis=1)
+    s3 = jnp.sum(v * v * v, axis=1)
+    return jnp.stack([count, s1, s2, s3], axis=1)

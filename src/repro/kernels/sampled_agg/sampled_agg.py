@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused prefix-masked streaming moments (AFC hot loop).
+
+The paper's AFC stage re-scans the sampled rows once per aggregate operator
+(ClickHouse computes SUM, then AVG, then STD...).  On TPU we fuse all
+parametric aggregates into ONE pass: each grid step loads a (block_k,
+block_c) VMEM tile of the sample buffers, applies the prefix mask with an
+iota compare (branch-free — the mask IS the sample size), and accumulates
+four power sums per feature into a VMEM accumulator.
+
+Grid: (k_tiles, c_tiles) with c innermost so each feature row's accumulator
+stays resident in VMEM across its column tiles.
+
+TPU adaptation notes (DESIGN.md §3): the paper's row-at-a-time online
+aggregation becomes a tiled masked reduction — incremental sampling is a
+*wider mask*, not more I/O, so planner iterations never re-touch HBM rows
+they already consumed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sampled_moments"]
+
+
+def _kernel(z_ref, vals_ref, out_ref, *, block_c: int, cap: int):
+    ci = pl.program_id(1)
+    # (block_k, block_c) tile of sample values
+    v = vals_ref[...].astype(jnp.float32)
+    z = z_ref[...]  # (block_k,) int32 live sample sizes
+    col0 = ci * block_c
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    mask = (cols < z[:, None]).astype(jnp.float32)
+    v = v * mask
+    tile = jnp.stack(
+        [
+            jnp.sum(mask, axis=1),
+            jnp.sum(v, axis=1),
+            jnp.sum(v * v, axis=1),
+            jnp.sum(v * v * v, axis=1),
+        ],
+        axis=1,
+    )  # (block_k, 4)
+
+    @pl.when(ci == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_c", "interpret"))
+def sampled_moments(
+    vals: jnp.ndarray,            # (k, cap) f32
+    z: jnp.ndarray,               # (k,) int32
+    *,
+    block_k: int = 8,
+    block_c: int = 1024,
+    interpret: bool = True,       # CPU container: interpret; TPU: False
+) -> jnp.ndarray:
+    """(k, 4) raw power sums [count, s1, s2, s3] over each valid prefix."""
+    k, cap = vals.shape
+    block_k = min(block_k, k)
+    block_c = min(block_c, cap)
+    assert k % block_k == 0 and cap % block_c == 0, (k, cap, block_k, block_c)
+    grid = (k // block_k, cap // block_c)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_c=block_c, cap=cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k,), lambda i, j: (i,)),
+            pl.BlockSpec((block_k, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_k, 4), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 4), jnp.float32),
+        interpret=interpret,
+    )(z, vals)

@@ -1,0 +1,1 @@
+from repro.kernels.sobol import ops  # noqa: F401

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for Sobol point generation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qmc import sobol_uint32
+from repro.kernels.sobol.sobol import sobol_points
+
+__all__ = ["uniforms"]
+
+
+def uniforms(m: int, dim: int, skip: int = 0, *, use_kernel: bool | None = None):
+    """(m, dim) f32 low-discrepancy uniforms in (0, 1)."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        x = sobol_points(m, dim, skip, interpret=jax.default_backend() != "tpu")
+    else:
+        x = sobol_uint32(m, dim, skip)
+    return x.astype(jnp.float32) * jnp.float32(2.0**-32) + jnp.float32(0.5 * 2.0**-32)

@@ -1,0 +1,4 @@
+"""Oracle for the Sobol kernel: re-exports the validated pure-jnp generator."""
+from repro.core.qmc import sobol_uint32 as sobol_uint32_ref  # noqa: F401
+
+__all__ = ["sobol_uint32_ref"]

@@ -1,0 +1,1 @@
+from repro.kernels.tree_qmc import ops  # noqa: F401

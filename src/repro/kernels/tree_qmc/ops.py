@@ -1,0 +1,37 @@
+"""Jit'd wrapper: ensemble prediction for QMC batches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tree_qmc.tree_qmc import ensemble_sum
+from repro.models.tabular.trees import TreeEnsemble, ensemble_predict_sum
+
+__all__ = ["predict_sum"]
+
+
+def predict_sum(
+    ens: TreeEnsemble, x: jnp.ndarray, *, use_kernel: bool | None = None
+) -> jnp.ndarray:
+    """(m, F) -> (m,) sum of leaf values across the ensemble."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        m = x.shape[0]
+        block_m = m if m < 256 else 256
+        # pad rows to a block multiple
+        pad = (-m) % block_m
+        xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+        out = ensemble_sum(
+            ens.feature,
+            ens.threshold,
+            ens.left,
+            ens.right,
+            ens.value,
+            xp.astype(jnp.float32),
+            depth=ens.depth,
+            block_m=block_m,
+            interpret=jax.default_backend() != "tpu",
+        )
+        return out[:m]
+    return ensemble_predict_sum(ens, x)

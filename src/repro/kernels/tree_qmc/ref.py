@@ -1,0 +1,4 @@
+"""Oracle for the tree-ensemble QMC kernel: the tensorized jnp traversal."""
+from repro.models.tabular.trees import TreeEnsemble, ensemble_predict_sum
+
+__all__ = ["TreeEnsemble", "ensemble_predict_sum"]

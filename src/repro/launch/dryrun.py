@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax import): jax locks the
+device count at first init, and the production meshes need 512 placeholder
+host devices.  Do NOT set that flag anywhere global — smoke tests and
+benchmarks should see 1 device.
+
+Per cell this driver:
+  1. builds the production mesh (16x16 pod / 2x16x16 multi-pod),
+  2. eval_shape's the full-scale params (ShapeDtypeStruct, no allocation),
+  3. jit-lowers the cell's step (train_step / prefill / decode_step) with
+     NamedShardings from repro.models.lm.sharding,
+  4. ``.compile()``s it — any sharding mismatch, OOM-at-compile or
+     unsupported collective fails the cell,
+  5. records memory_analysis / cost_analysis / collective traffic to
+     experiments/dryrun/<arch>__<shape>__<mesh>.json for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs 1]
+"""
+from __future__ import annotations
+
+# The next two lines MUST run before ANY jax import (jax locks the device
+# count at first init; the production meshes need 512 placeholder devices).
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.hlo_stats import HW
+from repro.launch.mesh import DP_AXES, make_production_mesh
+from repro.models.lm import LM
+from repro.models.lm.sharding import (
+    ShardingRules,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    use_rules,
+)
+from repro.optim.adamw import AdamWState
+from repro.train.step import build_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    if shape.kind == "train":
+        s_text = s - cfg.n_frontend_tokens if cfg.family == "vlm" else s
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s_text + 1), i32)}
+        if cfg.frontend:
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), f32
+            )
+        return batch
+    if shape.kind == "prefill":
+        s_text = s - cfg.n_frontend_tokens if cfg.family == "vlm" else s
+        out = {"tokens": jax.ShapeDtypeStruct((b, s_text), i32)}
+        if cfg.frontend:
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), f32
+            )
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def _opt_specs(p_specs):
+    return AdamWState(step=P(), mu=p_specs, nu=jax.tree.map(lambda s: s, p_specs))
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: str = OUT_DIR,
+    *,
+    tag: str = "",
+    cfg_override=None,
+    fsdp: bool = False,
+    model_kwargs: dict | None = None,
+    train_kwargs: dict | None = None,
+):
+    """Compile one cell.  Hillclimb variants pass ``tag`` (separate JSON),
+    ``cfg_override`` (ModelConfig -> ModelConfig), ``fsdp`` (ZeRO-3 weight
+    sharding) and ``model_kwargs`` (LM constructor knobs)."""
+    cfg = get_config(arch)
+    if cfg_override is not None:
+        cfg = cfg_override(cfg)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        record.update({"status": "skipped", "reason": why})
+        _write(record, out_dir)
+        print(f"[dryrun] SKIP {arch} x {shape_name} x {mesh_name}: {why}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = ShardingRules(mesh, cfg, dp_axes=DP_AXES(multi_pod), fsdp=fsdp)
+    model = LM(cfg, remat=(shape.kind == "train"), **(model_kwargs or {}))
+    t0 = time.time()
+
+    with use_rules(rules):
+        params_shapes = model.init_shapes()
+        p_specs = param_pspecs(rules, params_shapes)
+        p_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+        b_spec = batch_pspec(rules, shape.kind, shape.global_batch)
+        specs = input_specs(arch, shape_name)
+        b_shardings = {
+            k: NamedSharding(mesh, b_spec.get(k, P())) for k in specs
+        }
+
+        if shape.kind == "train":
+            step_fn = build_train_step(model, **(train_kwargs or {}))
+            opt_specs = _opt_specs(p_specs)
+            opt_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), opt_specs)
+            opt_shapes = jax.eval_shape(
+                lambda p: AdamWState(
+                    step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                    nu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                ),
+                params_shapes,
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, opt_shardings, b_shardings, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(
+                params_shapes, opt_shapes, specs, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+        elif shape.kind == "prefill":
+            def serve_step(params, batch):
+                if cfg.frontend:
+                    return model.prefill(params, batch["tokens"], batch["frontend"])
+                return model.prefill(params, batch["tokens"])
+
+            jitted = jax.jit(serve_step, in_shardings=(p_shardings, b_shardings))
+            lowered = jitted.lower(params_shapes, specs)
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            record["cache_bytes"] = int(
+                sum(
+                    int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in jax.tree.leaves(cache_shapes)
+                )
+            )
+            c_specs = cache_pspecs(rules, cache_shapes, shape.global_batch)
+            c_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+
+            def serve_step(params, cache, batch):
+                return model.decode_step(params, cache, batch["tokens"])
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_shardings, c_shardings, b_shardings),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_shapes, cache_shapes, specs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- artifact stats ---------------------------------------------------
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # XLA's cost_analysis counts while bodies once; analyze_hlo multiplies
+    # through scan trip counts and adds collective link traffic (hlo_cost.py).
+    hc = analyze_hlo(hlo, n_dev)
+
+    record.update(
+        {
+            "status": "ok",
+            "n_devices": int(n_dev),
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "hlo_flops": hc.flops,
+            "hlo_bytes": hc.bytes,
+            "xla_cost_flops_unscaled": float(cost.get("flops", 0.0)),
+            "collectives": hc.as_dict(),
+        }
+    )
+    if mem is not None:
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, k, None)
+            if v is not None:
+                record[f"mem_{k}"] = int(v)
+    # roofline terms (single-chip normalization; see benchmarks/roofline.py)
+    record["terms"] = roofline_terms(record, cfg, shape)
+    _write(record, out_dir)
+    print(
+        f"[dryrun] OK {arch} x {shape_name} x {mesh_name}: "
+        f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+        f"flops/dev {hc.flops:.3e} link_bytes/dev {hc.link_bytes:.3e}"
+    )
+    return record
+
+
+def roofline_terms(record: dict, cfg, shape) -> dict:
+    """compute/memory/collective seconds per device (brief §ROOFLINE)."""
+    # cost_analysis of the SPMD-partitioned module is per-device already.
+    t_compute = record["hlo_flops"] / HW["peak_flops"]
+    t_memory = record["hlo_bytes"] / HW["hbm_bw"]
+    t_coll = record["collectives"].get("link_bytes", 0.0) / HW["ici_bw"]
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+    }
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    # model FLOPs: 6 N D tokens (train), 2 N D (inference fwd only)
+    n_active = record["active_params"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2.0 * n_active * tokens
+    terms["model_flops_total"] = model_flops
+    n_dev = record.get("n_devices", 1)
+    hlo_total = record["hlo_flops"] * n_dev
+    terms["useful_flop_ratio"] = model_flops / hlo_total if hlo_total else 0.0
+    terms["roofline_fraction"] = (
+        (model_flops / n_dev / HW["peak_flops"]) / max(max(t_compute, t_memory, t_coll), 1e-30)
+    )
+    if shape.kind == "decode":
+        # decode is memory-bound by construction (read all weights + cache
+        # once per token); the meaningful roofline is bytes-based:
+        # ideal = (params + cache, bf16) / chips, one pass.  Full params,
+        # not active: at batch >= n_experts every expert is touched.
+        ideal = (
+            2.0 * record["params"] + record.get("cache_bytes", 0)
+        ) / n_dev
+        terms["ideal_bytes_per_dev"] = ideal
+        terms["memory_roofline_fraction"] = (
+            ideal / max(record["hlo_bytes"], 1e-30)
+        )
+    return terms
+
+
+def _write(record: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{record['tag']}" if record.get("tag") else ""
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                try:
+                    run_cell(arch, shape_name, args.multi_pod, args.out)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, str(e)[:200]))
+        if failures:
+            print(f"[dryrun] {len(failures)} FAILURES:")
+            for f in failures:
+                print("   ", f)
+            sys.exit(1)
+        print("[dryrun] all cells OK")
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    run_cell(args.arch, args.shape, args.multi_pod, args.out)
+
+
+if __name__ == "__main__":
+    main()

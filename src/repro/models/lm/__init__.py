@@ -1,0 +1,4 @@
+"""LM model zoo: the 10 assigned architectures behind one composable stack."""
+from repro.models.lm.model import LM
+
+__all__ = ["LM"]

@@ -1,0 +1,416 @@
+"""Serving state: KV caches / SSM states, prefill population, decode steps.
+
+Cache layouts (leading stacked-layer axes are scanned, never sharded):
+
+* dense / vlm / moe : {"k","v": (L, B, S, Hkv, hd), "pos"}
+* deepseek (MLA)    : {"ckv": (L, B, S, kv_lora), "kpe": (L, B, S, rope), "pos"}
+                      — the 64x-smaller latent cache (DESIGN.md §4)
+* hybrid (zamba2)   : {"conv": (G, per, B, K-1, C), "ssm": (G, per, B, H, N, P),
+                       "k","v": (G, B, W, Hkv, hd), "pos"} — W = sliding window
+* ssm (xlstm)       : {"mC": (G, M, B, H, P, P), "mn", "mm", "sc","sn","sm","sh"}
+* audio (seamless)  : {"k","v": self-attn, "ck","cv": (L, B, S_enc, H, hd), "pos"}
+
+``decode_step`` threads per-layer cache slices through the same lax.scan that
+drives the parameter stacks, so the whole serve step is one compact HLO —
+the unit the decode_32k / long_500k dry-run cells lower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.layers import (
+    attention_block_decode,
+    attention_block_with_kv,
+    attention_decode,
+    attention_qkv,
+    glu_ffn,
+    mla_block_decode,
+    mla_block_with_cache,
+    rms_norm,
+)
+from repro.models.lm import moe as moe_lib
+from repro.models.lm import ssm as ssm_lib
+
+f32 = jnp.float32
+
+
+# ==========================================================================
+# init_cache
+# ==========================================================================
+def init_cache(model, batch: int, max_seq: int):
+    cfg = model.cfg
+    dt = model.dtype
+    hd = cfg.resolved_head_dim
+    fam = cfg.family
+    pos = jnp.zeros((), jnp.int32)
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.mla):
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dt),
+            "pos": pos,
+        }
+    if fam == "moe" and cfg.mla:
+        L = cfg.n_layers
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((L, batch, max_seq, m.kv_lora), dt),
+            "kpe": jnp.zeros((L, batch, max_seq, m.rope_dim), dt),
+            "pos": pos,
+        }
+    if fam == "hybrid":
+        s = cfg.ssm
+        per = cfg.attn_every
+        g = cfg.n_layers // per
+        di = s.expand * cfg.d_model
+        h = di // s.head_dim
+        w = min(cfg.sliding_window or max_seq, max_seq)
+        return {
+            "conv": jnp.zeros((g, per, batch, s.d_conv - 1, di + 2 * s.d_state), dt),
+            "ssm": jnp.zeros((g, per, batch, h, s.d_state, s.head_dim), f32),
+            "k": jnp.zeros((g, batch, w, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((g, batch, w, cfg.n_kv_heads, hd), dt),
+            "pos": pos,
+        }
+    if fam == "ssm":  # xlstm
+        s = cfg.ssm
+        per = s.slstm_every
+        g = cfg.n_layers // per
+        m = per - 1
+        di = s.expand * cfg.d_model
+        p_dim = di // cfg.n_heads
+        d = cfg.d_model
+        return {
+            "mC": jnp.zeros((g, m, batch, cfg.n_heads, p_dim, p_dim), f32),
+            "mn": jnp.zeros((g, m, batch, cfg.n_heads, p_dim), f32),
+            "mm": jnp.full((g, m, batch, cfg.n_heads), -1e30, f32),
+            "sc": jnp.zeros((g, batch, d), f32),
+            "sn": jnp.zeros((g, batch, d), f32),
+            "sm": jnp.full((g, batch, d), -1e30, f32),
+            "sh": jnp.zeros((g, batch, d), f32),
+            "pos": pos,
+        }
+    if fam == "audio":
+        L = cfg.n_layers
+        s_enc = cfg.n_frontend_tokens
+        return {
+            "k": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dt),
+            "ck": jnp.zeros((L, batch, s_enc, cfg.n_kv_heads, hd), dt),
+            "cv": jnp.zeros((L, batch, s_enc, cfg.n_kv_heads, hd), dt),
+            "pos": pos,
+        }
+    raise ValueError(fam)  # pragma: no cover
+
+
+# ==========================================================================
+# prefill
+# ==========================================================================
+def build_prefill_cache(model, params, tokens, frontend=None):
+    cfg = model.cfg
+    b, s = tokens.shape
+    x = params["embed"][jnp.clip(tokens, 0, model.vp - 1)].astype(model.dtype)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        if fam == "vlm" and frontend is not None:
+            fe = frontend.astype(model.dtype) @ params["frontend_adapter"]
+            x = jnp.concatenate([fe, x], axis=1)
+            s = x.shape[1]
+        caches_extra = []
+        for bp in params.get("dense0", []):
+            x, extra = _prefill_attn_ffn(model, bp, x)
+            caches_extra.append(extra)
+
+        def body(h, bp):
+            h, extra = _prefill_attn_ffn(model, bp, h)
+            return h, extra
+
+        x, extras = jax.lax.scan(body, x, params["blocks"])
+        cache = _assemble_prefill_cache(model, caches_extra, extras, b, s)
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+        w = min(cfg.sliding_window or s, s)
+
+        def group(h, gp):
+            def m_body(hh, mp):
+                out, st, conv = ssm_lib.mamba2_block(
+                    mp["cell"],
+                    rms_norm(hh, mp["ln"], cfg.norm_eps),
+                    cfg,
+                    return_state=True,
+                )
+                return hh + out, (st, conv)
+
+            h, (ssm_st, conv_st) = jax.lax.scan(m_body, h, gp)
+            hh = rms_norm(h, shared["ln1"], cfg.norm_eps)
+            a, k, v = attention_block_with_kv(
+                shared["attn"], hh, cfg, window=cfg.sliding_window, block=model.attn_block
+            )
+            h = h + a
+            h = h + glu_ffn(shared["ffn"], rms_norm(h, shared["ln2"], cfg.norm_eps), cfg.act)
+            # Ring-consistent window cache: when s >= w keep the last w keys
+            # (slot alignment needs s % w == 0 — true for all our shapes);
+            # when s < w, positions ARE slots, so right-pad to w.
+            if s >= w:
+                kc, vc = k[:, -w:], v[:, -w:]
+            else:
+                pad = ((0, 0), (0, w - s), (0, 0), (0, 0))
+                kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+            return h, (ssm_st, conv_st, kc, vc)
+
+        x, (ssm_st, conv_st, ks, vs) = jax.lax.scan(group, x, params["mamba"])
+        cache = {
+            "conv": conv_st.astype(model.dtype),
+            "ssm": ssm_st,
+            "k": ks,
+            "v": vs,
+            "pos": jnp.asarray(s, jnp.int32),
+        }
+    elif fam == "ssm":
+
+        def group(h, gp):
+            def m_body(hh, mp):
+                out, st = ssm_lib.mlstm_block(
+                    mp["cell"], rms_norm(hh, mp["ln"], cfg.norm_eps), cfg,
+                    return_state=True,
+                )
+                return hh + out, st
+
+            h, mstates = jax.lax.scan(m_body, h, gp["mlstm"])
+            sp = gp["slstm"]
+            out, sstate = ssm_lib.slstm_block(
+                sp["cell"], rms_norm(h, sp["ln"], cfg.norm_eps), cfg, return_state=True
+            )
+            h = h + out
+            return h, (mstates, sstate)
+
+        x, (mstates, sstates) = jax.lax.scan(
+            group, x, {"mlstm": params["mlstm"], "slstm": params["slstm"]}
+        )
+        mc, mn, mm = mstates
+        sc, sn, sm, sh = sstates
+        cache = {
+            "mC": mc, "mn": mn, "mm": mm,
+            "sc": sc, "sn": sn, "sm": sm, "sh": sh,
+            "pos": jnp.asarray(s, jnp.int32),
+        }
+    elif fam == "audio":
+        enc_out = model._encode(params, frontend)
+
+        def body(h, bp):
+            hh = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            a, k, v = attention_block_with_kv(
+                bp["self_attn"], hh, cfg, block=model.attn_block
+            )
+            h = h + a
+            hh = rms_norm(h, bp["ln_x"], cfg.norm_eps)
+            # cross attention (cache enc-side k/v)
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross_attn"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, bp["cross_attn"]["wv"])
+            h = h + model._cross_attention(bp["cross_attn"], hh, enc_out)
+            h = h + glu_ffn(bp["ffn"], rms_norm(h, bp["ln2"], cfg.norm_eps), cfg.act)
+            return h, (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_blocks"])
+        cache = {
+            "k": ks, "v": vs, "ck": cks, "cv": cvs,
+            "pos": jnp.asarray(s, jnp.int32),
+        }
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    h_last = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    return model.logits_last(params, h_last), cache
+
+
+def _prefill_attn_ffn(model, bp, x):
+    cfg = model.cfg
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a, ckv, kpe = mla_block_with_cache(bp["attn"], h, cfg, block=model.attn_block)
+        extra = (ckv, kpe)
+    else:
+        a, k, v = attention_block_with_kv(bp["attn"], h, cfg, block=model.attn_block)
+        extra = (k, v)
+    x = x + a
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        f = moe_lib.moe_ffn(bp["moe"], h, cfg.moe, model.moe_backend)
+    else:
+        f = glu_ffn(bp["ffn"], h, cfg.act)
+    return x + f, extra
+
+
+def _assemble_prefill_cache(model, dense0_extras, scanned_extras, b, s):
+    cfg = model.cfg
+    pos = jnp.asarray(s, jnp.int32)
+    if cfg.mla:
+        ckv, kpe = scanned_extras
+        if dense0_extras:
+            ckv = jnp.concatenate(
+                [jnp.stack([e[0] for e in dense0_extras]), ckv], axis=0
+            )
+            kpe = jnp.concatenate(
+                [jnp.stack([e[1] for e in dense0_extras]), kpe], axis=0
+            )
+        return {"ckv": ckv.astype(model.dtype), "kpe": kpe.astype(model.dtype), "pos": pos}
+    k, v = scanned_extras
+    if dense0_extras:
+        k = jnp.concatenate([jnp.stack([e[0] for e in dense0_extras]), k], axis=0)
+        v = jnp.concatenate([jnp.stack([e[1] for e in dense0_extras]), v], axis=0)
+    return {"k": k.astype(model.dtype), "v": v.astype(model.dtype), "pos": pos}
+
+
+# ==========================================================================
+# decode step
+# ==========================================================================
+def decode_step(model, params, cache, tokens):
+    """tokens (B, 1) -> (logits (B, Vp), updated cache)."""
+    cfg = model.cfg
+    pos = cache["pos"]
+    x = params["embed"][jnp.clip(tokens, 0, model.vp - 1)].astype(model.dtype)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        n_dense = len(params.get("dense0", []))
+        new_cache = dict(cache)
+        if cfg.mla:
+            for i, bp in enumerate(params.get("dense0", [])):
+                x, c1, c2 = _decode_attn_ffn(
+                    model, bp, x, cache["ckv"][i], cache["kpe"][i], pos
+                )
+                new_cache["ckv"] = new_cache["ckv"].at[i].set(c1)
+                new_cache["kpe"] = new_cache["kpe"].at[i].set(c2)
+
+            def body(h, per_layer):
+                bp, ckv, kpe = per_layer
+                h, c1, c2 = _decode_attn_ffn(model, bp, h, ckv, kpe, pos)
+                return h, (c1, c2)
+
+            x, (ckvs, kpes) = jax.lax.scan(
+                body, x, (params["blocks"], cache["ckv"][n_dense:], cache["kpe"][n_dense:])
+            )
+            new_cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+                new_cache["ckv"], ckvs, n_dense, axis=0
+            )
+            new_cache["kpe"] = jax.lax.dynamic_update_slice_in_dim(
+                new_cache["kpe"], kpes, n_dense, axis=0
+            )
+        else:
+
+            def body(h, per_layer):
+                bp, k, v = per_layer
+                h, k2, v2 = _decode_attn_ffn(model, bp, h, k, v, pos)
+                return h, (k2, v2)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["blocks"], cache["k"], cache["v"])
+            )
+            new_cache["k"], new_cache["v"] = ks, vs
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+        w = cache["k"].shape[2]
+
+        def group(h, per_group):
+            gp, conv, sst, k, v = per_group
+
+            def m_body(hh, per_layer):
+                mp, cs, ss = per_layer
+                out, cs2, ss2 = ssm_lib.mamba2_decode(
+                    mp["cell"], rms_norm(hh, mp["ln"], cfg.norm_eps), cs, ss, cfg
+                )
+                return hh + out, (cs2, ss2)
+
+            h, (conv2, sst2) = jax.lax.scan(m_body, h, (gp, conv, sst))
+            hh = rms_norm(h, shared["ln1"], cfg.norm_eps)
+            a, k2, v2 = attention_block_decode(
+                shared["attn"], hh, k, v, pos, cfg, window=w
+            )
+            h = h + a
+            h = h + glu_ffn(shared["ffn"], rms_norm(h, shared["ln2"], cfg.norm_eps), cfg.act)
+            return h, (conv2, sst2, k2, v2)
+
+        x, (conv2, sst2, ks, vs) = jax.lax.scan(
+            group, x, (params["mamba"], cache["conv"], cache["ssm"], cache["k"], cache["v"])
+        )
+        new_cache = {"conv": conv2, "ssm": sst2, "k": ks, "v": vs, "pos": pos}
+    elif fam == "ssm":
+
+        def group(h, per_group):
+            gp, mC, mn, mm, sc, sn, sm, sh = per_group
+
+            def m_body(hh, per_layer):
+                mp, c_, n_, m_ = per_layer
+                out, st = ssm_lib.mlstm_decode(
+                    mp["cell"], rms_norm(hh, mp["ln"], cfg.norm_eps), (c_, n_, m_), cfg
+                )
+                return hh + out, st
+
+            h, (mC2, mn2, mm2) = jax.lax.scan(
+                m_body, h, (gp["mlstm"], mC, mn, mm)
+            )
+            sp = gp["slstm"]
+            out, (sc2, sn2, sm2, sh2) = ssm_lib.slstm_decode(
+                sp["cell"], rms_norm(h, sp["ln"], cfg.norm_eps), (sc, sn, sm, sh), cfg
+            )
+            h = h + out
+            return h, (mC2, mn2, mm2, sc2, sn2, sm2, sh2)
+
+        x, outs = jax.lax.scan(
+            group,
+            x,
+            (
+                {"mlstm": params["mlstm"], "slstm": params["slstm"]},
+                cache["mC"], cache["mn"], cache["mm"],
+                cache["sc"], cache["sn"], cache["sm"], cache["sh"],
+            ),
+        )
+        mC2, mn2, mm2, sc2, sn2, sm2, sh2 = outs
+        new_cache = {
+            "mC": mC2, "mn": mn2, "mm": mm2,
+            "sc": sc2, "sn": sn2, "sm": sm2, "sh": sh2, "pos": pos,
+        }
+    elif fam == "audio":
+
+        def body(h, per_layer):
+            bp, k, v, ck, cv = per_layer
+            hh = rms_norm(h, bp["ln1"], cfg.norm_eps)
+            a, k2, v2 = attention_block_decode(bp["self_attn"], hh, k, v, pos, cfg)
+            h = h + a
+            hh = rms_norm(h, bp["ln_x"], cfg.norm_eps)
+            cp = bp["cross_attn"]
+            q = jnp.einsum("bsd,dhk->bshk", hh, cp["wq"])
+            o = attention_decode(q, ck, cv, jnp.asarray(ck.shape[1] - 1))
+            h = h + jnp.einsum("bshk,hkd->bsd", o, cp["wo"])
+            h = h + glu_ffn(bp["ffn"], rms_norm(h, bp["ln2"], cfg.norm_eps), cfg.act)
+            return h, (k2, v2)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+        )
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = ks, vs
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    new_cache["pos"] = pos + 1
+    h_last = rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    return model.logits_last(params, h_last), new_cache
+
+
+def _decode_attn_ffn(model, bp, x, c1, c2, pos):
+    cfg = model.cfg
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a, c1, c2 = mla_block_decode(bp["attn"], h, c1, c2, pos, cfg)
+    else:
+        a, c1, c2 = attention_block_decode(bp["attn"], h, c1, c2, pos, cfg)
+    x = x + a
+    h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if "moe" in bp:
+        f = moe_lib.moe_ffn(bp["moe"], h, cfg.moe, model.moe_backend)
+    else:
+        f = glu_ffn(bp["ffn"], h, cfg.act)
+    return x + f, c1, c2

@@ -1,0 +1,482 @@
+"""Transformer layer primitives shared by the 10 assigned architectures.
+
+Everything is functional: params are nested dicts of arrays, layers are pure
+functions, and per-layer stacks are driven by ``jax.lax.scan`` in model.py
+(stacked leaf arrays keep the HLO small enough that full-scale 236B configs
+lower in seconds — essential for the 80-cell multi-pod dry-run on one CPU).
+
+Attention comes in three flavors:
+
+* ``attention_full``       — plain causal attention (short seqs / smoke);
+* ``attention_blockwise``  — lax.scan over KV blocks with online softmax
+  (flash-style memory behaviour in pure XLA: the (S, S) score matrix is never
+  materialized — this is what makes the 32k-prefill cells compile inside HBM
+  budgets; the Pallas ``flash_attention`` kernel is the TPU fast path with
+  identical semantics);
+* ``attention_decode``     — single-position query against a KV cache
+  (optionally sliding-window for the hybrid long-context cells).
+
+Numerics: bf16 params/activations, f32 for norms, softmax logits, and
+routers — the standard TPU mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+
+f32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Norms / positional
+# --------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(f32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(f32)).astype(x.dtype)
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding; x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=f32) / d))  # (d/2,)
+    ang = positions.astype(f32)[..., None] * freqs  # (..., S, d/2)
+    ang = jnp.concatenate([ang, ang], axis=-1)      # (..., S, d)
+    if x.ndim == ang.ndim + 1:                      # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    return (x.astype(f32) * cos + _rotate_half(x.astype(f32)) * sin).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention cores
+# --------------------------------------------------------------------------
+def _expand_kv(k: jnp.ndarray, n_q_heads: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by repeating each KV head."""
+    hkv = k.shape[-2]
+    if hkv == n_q_heads:
+        return k
+    return jnp.repeat(k, n_q_heads // hkv, axis=-2)
+
+
+def attention_full(
+    q: jnp.ndarray,           # (B, Sq, H, D)
+    k: jnp.ndarray,           # (B, Sk, Hkv, D)
+    v: jnp.ndarray,           # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool,
+    q_offset: int | jnp.ndarray = 0,
+    window: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Reference attention; materializes (B, H, Sq, Sk). Short-seq path."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(f32), k.astype(f32)) * scale
+    qpos = jnp.asarray(q_offset) + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(f32)).astype(q.dtype)
+
+
+def attention_blockwise(
+    q: jnp.ndarray,           # (B, Sq, H, D)
+    k: jnp.ndarray,           # (B, Sk, Hkv, D)
+    v: jnp.ndarray,           # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    window: int = 0,
+    block: int = 1024,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention via lax.scan over KV blocks.
+
+    Never materializes the full score matrix: peak live score tile is
+    (B, H, Sq_blk, block).  Both Sq and Sk are scanned, so 32k x 32k prefill
+    attention costs O(block^2) live memory per (head, tile).
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    if sk % block != 0 or sq % block != 0:
+        return attention_full(
+            q, k, v, causal=causal, q_offset=q_offset, window=window, scale=scale
+        )
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    nq, nk = sq // block, sk // block
+    qb = q.reshape(b, nq, block, h, d).transpose(1, 0, 3, 2, 4)  # (nq,B,H,bq,d)
+    kb = k.reshape(b, nk, block, h, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, block, h, dv).transpose(1, 0, 3, 2, 4)
+
+    def q_block(carry, qi):
+        qt = qb[qi].astype(f32) * scale  # (B,H,bq,d)
+        qpos = q_offset + qi * block + jnp.arange(block)
+
+        def kv_step(state, ki):
+            m, l, acc = state
+            kt = kb[ki].astype(f32)
+            vt = vb[ki].astype(f32)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qt, kt)  # (B,H,bq,bk)
+            kpos = ki * block + jnp.arange(block)
+            msk = jnp.ones((block, block), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vt)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, h, block), -1e30, f32),
+            jnp.zeros((b, h, block), f32),
+            jnp.zeros((b, h, block, dv), f32),
+        )
+        # causal: only blocks with kpos_start <= qpos_end contribute; scanning
+        # all keeps shapes static — the -1e30 mask zeroes the rest (the Pallas
+        # kernel skips them for real; see kernels/flash_attention).
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry, out.transpose(0, 2, 1, 3)  # (B,bq,H,dv)
+
+    _, blocks = jax.lax.scan(q_block, 0, jnp.arange(nq))  # (nq,B,bq,H,dv)
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attention_decode(
+    q: jnp.ndarray,           # (B, 1, H, D)
+    k_cache: jnp.ndarray,     # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,     # (B, S, Hkv, Dv)
+    pos: jnp.ndarray,         # () int32 — current position (cache validity)
+    *,
+    window: int = 0,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """One decode step against a (possibly windowed) KV cache.
+
+    The reduction over S is the split-K / FlashDecoding axis — the dry-run
+    shards it over the ``model`` mesh axis, turning the per-token attention
+    into local partial-softmax + a tiny cross-chip reduce.
+    """
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k_cache, h)
+    v = _expand_kv(v_cache, h)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(f32), k.astype(f32)) * scale
+    kpos = jnp.arange(s)
+    valid = kpos[None, :] <= pos
+    if window > 0:
+        valid &= kpos[None, :] > pos - window
+    logits = jnp.where(valid[None, :, None, :].transpose(0, 2, 1, 3), logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(f32)).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Standard (GQA) attention block
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    # Zero-pad q heads to a TP-divisible multiple (e.g. qwen3-14b's 40 -> 48
+    # on a 16-way 'model' axis).  Padding is PER KV GROUP (interleaved): GQA
+    # maps q head i to kv head i // (H/Hkv), so appending pad heads at the
+    # end would silently remap every live head's kv group.  Padded heads have
+    # zero wq AND zero wo rows, so the logical model is exact; KV heads are
+    # never padded (zero keys would corrupt the softmax) — non-divisible KV
+    # replicates instead (sharding.py divisibility guard).
+    pad = cfg.pad_heads_to
+    hp = ((h + pad - 1) // pad) * pad
+    while hp % hkv != 0:  # keep per-group padding equal
+        hp += pad
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    wq = jax.random.normal(k1, (d, hp, hd)) * std
+    wo = jax.random.normal(k4, (hp, hd, d)) * (h * hd) ** -0.5
+    if hp != h:
+        gq, gq_p = h // hkv, hp // hkv
+        live = (jnp.arange(gq_p) < gq).astype(wq.dtype)       # per-group mask
+        live = jnp.tile(live, hkv)                            # (hp,)
+        wq = wq * live[None, :, None]
+        wo = wo * live[:, None, None]
+    p = {
+        "wq": wq.astype(dtype),
+        "wk": (jax.random.normal(k2, (d, hkv, hd)) * std).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, hkv, hd)) * std).astype(dtype),
+        "wo": wo.astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention_qkv(p: dict, x: jnp.ndarray, cfg: ModelConfig, positions) -> tuple:
+    """Project + rope; returns (q, k, v) with shapes (B,S,H*,Dh)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    positions: jnp.ndarray | None = None,
+    window: int = 0,
+    block: int = 1024,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    if s > 2 * block and s % block == 0:
+        o = attention_blockwise(q, k, v, causal=causal, window=window, block=block)
+    else:
+        o = attention_full(q, k, v, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attention_block_with_kv(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block: int = 1024,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill attention that also returns (k, v) for cache population."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    if s > 2 * block and s % block == 0:
+        o = attention_blockwise(q, k, v, causal=causal, window=window, block=block)
+    else:
+        o = attention_full(q, k, v, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), k, v
+
+
+def attention_block_decode(
+    p: dict,
+    x: jnp.ndarray,           # (B, 1, D)
+    cache_k: jnp.ndarray,     # (B, S, Hkv, Dh)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,         # () int32 current position
+    cfg: ModelConfig,
+    *,
+    window: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step: update cache at ``pos``, attend, project."""
+    positions = jnp.full((x.shape[0], 1), pos)
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    # windowed caches store ring-buffer style; full caches store absolute.
+    slot = pos % cache_k.shape[1] if window > 0 else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    # Full cache: mask is ``slot <= pos``.  Windowed ring buffer: slot i
+    # holds a key iff i <= pos on the first lap and always once wrapped;
+    # softmax attention is permutation-invariant over keys (RoPE was applied
+    # at write time with absolute positions), so the same mask is exact.
+    o = attention_decode(q, cache_k, cache_v, pos, window=0)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 latent attention)
+# --------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "wq_a": (jax.random.normal(ks[0], (d, m.q_lora)) * std).astype(dtype),
+        "q_norm": jnp.ones((m.q_lora,), dtype),
+        "wq_b": (
+            jax.random.normal(ks[1], (m.q_lora, h, m.nope_dim + m.rope_dim))
+            * m.q_lora ** -0.5
+        ).astype(dtype),
+        "wkv_a": (
+            jax.random.normal(ks[2], (d, m.kv_lora + m.rope_dim)) * std
+        ).astype(dtype),
+        "kv_norm": jnp.ones((m.kv_lora,), dtype),
+        "wkv_b": (
+            jax.random.normal(ks[3], (m.kv_lora, h, m.nope_dim + m.v_dim))
+            * m.kv_lora ** -0.5
+        ).astype(dtype),
+        "wo": (
+            jax.random.normal(ks[4], (h, m.v_dim, d)) * (h * m.v_dim) ** -0.5
+        ).astype(dtype),
+    }
+
+
+def mla_block(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray | None = None,
+    block: int = 1024,
+) -> jnp.ndarray:
+    """MLA attention, naive-expansion path (train / prefill)."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"])
+    q_nope, q_pe = q[..., : m.nope_dim], q[..., m.nope_dim :]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+
+    ckv_full = x @ p["wkv_a"]                      # (B,S,kv_lora+rope)
+    ckv = rms_norm(ckv_full[..., : m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_pe = rope(ckv_full[..., m.kv_lora :], positions, cfg.rope_theta)  # (B,S,r)
+
+    kv = jnp.einsum("bsl,lhk->bshk", ckv, p["wkv_b"])
+    k_nope, v = kv[..., : m.nope_dim], kv[..., m.nope_dim :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, m.rope_dim))], -1
+    )
+    qq = jnp.concatenate([q_nope, q_pe], -1)
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    if s > 2 * block and s % block == 0:
+        o = attention_blockwise(qq, k, v, causal=True, block=block, scale=scale)
+    else:
+        o = attention_full(qq, k, v, causal=True, scale=scale)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def mla_block_with_cache(
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    block: int = 1024,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """MLA prefill that also returns the latent cache (ckv, k_pe)."""
+    m: MLAConfig = cfg.mla
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    ckv_full = x @ p["wkv_a"]
+    ckv = rms_norm(ckv_full[..., : m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_pe = rope(ckv_full[..., m.kv_lora :], positions, cfg.rope_theta)
+    out = mla_block(p, x, cfg, positions=positions, block=block)
+    return out, ckv, k_pe
+
+
+def mla_block_decode(
+    p: dict,
+    x: jnp.ndarray,            # (B, 1, D)
+    cache_ckv: jnp.ndarray,    # (B, S, kv_lora)
+    cache_kpe: jnp.ndarray,    # (B, S, rope_dim)
+    pos: jnp.ndarray,
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """MLA decode with the *absorbed* latent-cache trick: the per-head K/V
+    up-projections are folded into the query / output sides, so the cache
+    holds only (kv_lora + rope) floats per token — the paper-config 512+64
+    vs 128 heads x 256 for naive GQA (a 64x KV-cache shrink; this is why the
+    MLA cells are memory-roofline winners in §Roofline)."""
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.full((b, 1), pos)
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", cq, p["wq_b"])  # (B,1,H,nope+rope)
+    q_nope, q_pe = q[..., : m.nope_dim], q[..., m.nope_dim :]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+
+    ckv_full = x @ p["wkv_a"]
+    ckv_new = rms_norm(ckv_full[..., : m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    kpe_new = rope(ckv_full[..., m.kv_lora :], positions, cfg.rope_theta)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, ckv_new.astype(cache_ckv.dtype), pos, axis=1
+    )
+    cache_kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache_kpe, kpe_new.astype(cache_kpe.dtype), pos, axis=1
+    )
+
+    wkv_k = p["wkv_b"][..., : m.nope_dim]          # (kv_lora, H, nope)
+    wkv_v = p["wkv_b"][..., m.nope_dim :]          # (kv_lora, H, v)
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, wkv_k)  # (B,1,H,kv_lora)
+
+    s = cache_ckv.shape[1]
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    logits = (
+        jnp.einsum("bshl,btl->bhst", q_lat.astype(f32), cache_ckv.astype(f32))
+        + jnp.einsum("bshr,btr->bhst", q_pe.astype(f32), cache_kpe.astype(f32))
+    ) * scale
+    valid = jnp.arange(s)[None, :] <= pos
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhst,btl->bshl", pr, cache_ckv.astype(f32))  # (B,1,H,l)
+    o = jnp.einsum("bshl,lhk->bshk", o_lat, wkv_v.astype(f32))       # (B,1,H,v)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    return out, cache_ckv, cache_kpe
+
+
+# --------------------------------------------------------------------------
+# GLU FFN
+# --------------------------------------------------------------------------
+def init_ffn(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def glu_ffn(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    if act == "swiglu":
+        g = jax.nn.silu(g.astype(f32)).astype(x.dtype)
+    elif act == "geglu":
+        g = jax.nn.gelu(g.astype(f32), approximate=True).astype(x.dtype)
+    else:  # pragma: no cover
+        raise ValueError(act)
+    return (g * u) @ p["w_down"]

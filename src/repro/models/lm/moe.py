@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN: token-choice top-k with two dispatch backends.
+
+* ``moe_ffn_einsum``  — GShard-style grouped one-hot einsum dispatch.  SPMD-
+  friendly (the dispatch tensors partition cleanly over the mesh; resharding
+  token-sharded activations against expert-sharded weights makes XLA emit the
+  expected all-to-alls), used for the multi-pod dry-run baseline.  Its known
+  cost: the dispatch/combine einsums add ~S_g·cf/(3·d_ff) of the expert FLOPs
+  as overhead — visible in §Roofline's MODEL_FLOPS/HLO_FLOPS ratio and
+  attacked in the §Perf hillclimb.
+
+* ``moe_ffn_sorted``  — sort-based ragged dispatch (argsort by expert,
+  scatter into (E, C, D) buffers, batched expert GEMMs, scatter-add back).
+  No dispatch matmul at all: FLOPs are exactly the expert GEMMs.  This is the
+  single-shard fast path and the shape the TPU kernel wants; used per data
+  shard (where the sort is local) in the optimized config.
+
+Both honor expert capacity C = tokens·top_k/E·capacity_factor with
+drop-on-overflow (standard GShard semantics) and renormalized top-k gates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+f32 = jnp.float32
+
+
+def init_moe(key, d: int, cfg: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    e, fe = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(f32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, fe)) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, fe)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, fe, d)) * fe ** -0.5).astype(dtype),
+    }
+    if cfg.n_shared:
+        fs = max(cfg.d_ff_shared, cfg.d_ff_expert) * cfg.n_shared
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(kg, (d, fs)) * d ** -0.5).astype(dtype),
+            "w_up": (jax.random.normal(ku, (d, fs)) * d ** -0.5).astype(dtype),
+            "w_down": (jax.random.normal(kd, (fs, d)) * fs ** -0.5).astype(dtype),
+        }
+    return p
+
+
+def _router(p, x_flat: jnp.ndarray, cfg: MoEConfig):
+    """Top-k routing with renormalized gates; router math in f32."""
+    logits = x_flat.astype(f32) @ p["router"]                # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)             # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _expert_gemm(p, h: jnp.ndarray, act_dtype) -> jnp.ndarray:
+    """(E, C, D) -> (E, C, D) batched SwiGLU expert FFN."""
+    g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    g = jax.nn.silu(g.astype(f32)).astype(act_dtype)
+    return jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])
+
+
+def _shared_ffn(p, x: jnp.ndarray) -> jnp.ndarray:
+    sp = p["shared"]
+    g = jax.nn.silu((x @ sp["w_gate"]).astype(f32)).astype(x.dtype)
+    return (g * (x @ sp["w_up"])) @ sp["w_down"]
+
+
+def moe_ffn_einsum(p: dict, x: jnp.ndarray, cfg: MoEConfig) -> jnp.ndarray:
+    """GShard grouped-einsum dispatch.  x: (B, S, D) -> (B, S, D).
+
+    Tokens are split into groups of ``cfg.group_size``; the group axis maps
+    onto the data-parallel mesh axes (it is a reshape of (B, S)), experts map
+    onto 'model'.  All groups are processed in ONE batched einsum — the group
+    axis stays fully parallel, and the g<->e resharding in the dispatch
+    einsum is exactly the all-to-all an expert-parallel system performs.
+    """
+    b, s, d = x.shape
+    t = b * s
+    gsz = min(cfg.group_size, t)
+    n_groups = t // gsz
+    assert n_groups * gsz == t, f"tokens {t} not divisible by group {gsz}"
+    cap = max(int(gsz * cfg.top_k / cfg.n_experts * cfg.capacity_factor), 1)
+    xg = x.reshape(n_groups, gsz, d)
+
+    gates, idx = _router(p, xg.reshape(t, d), cfg)           # (T,K)
+    gates = gates.reshape(n_groups, gsz, cfg.top_k)
+    idx = idx.reshape(n_groups, gsz, cfg.top_k)
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=f32)   # (G,g,K,E)
+    # position of each (token, k) inside its expert queue (within the group)
+    flat = onehot.reshape(n_groups, gsz * cfg.top_k, cfg.n_experts)
+    pos = jnp.cumsum(flat, axis=1).reshape(onehot.shape) - onehot  # exclusive
+    within = (pos < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=f32)  # (G,g,K,E,C)
+    keep = (pos_oh * within[..., None]).astype(x.dtype)
+    dispatch = keep.sum(2)                                   # (G,g,E,C)
+    combine = (gates[..., None, None].astype(x.dtype) * keep).sum(2)
+    h = jnp.einsum("gtec,gtd->gecd", dispatch, xg)           # (G,E,C,D)
+    hg = jnp.einsum("gecd,edf->gecf", h, p["w_gate"])
+    hu = jnp.einsum("gecd,edf->gecf", h, p["w_up"])
+    hg = jax.nn.silu(hg.astype(f32)).astype(x.dtype)
+    out = jnp.einsum("gecf,efd->gecd", hg * hu, p["w_down"])
+    y = jnp.einsum("gtec,gecd->gtd", combine, out)           # (G,g,D)
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + _shared_ffn(p, x)
+    return y
+
+
+def moe_ffn_sorted(p: dict, x: jnp.ndarray, cfg: MoEConfig) -> jnp.ndarray:
+    """Sort-based ragged dispatch (no dispatch matmul).  x: (B,S,D)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    gates, idx = _router(p, xt, cfg)                          # (T,K)
+    k = cfg.top_k
+    e = cfg.n_experts
+    cap = max(int(t * k / e * cfg.capacity_factor), 1)
+
+    e_flat = idx.reshape(t * k)
+    g_flat = gates.reshape(t * k)
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    order = jnp.argsort(e_flat, stable=True)
+    e_s, tok_s, g_s = e_flat[order], tok[order], g_flat[order]
+    counts = jnp.bincount(e_flat, length=e)
+    seg_start = jnp.cumsum(counts) - counts                   # (E,)
+    pos = jnp.arange(t * k, dtype=jnp.int32) - seg_start[e_s]
+    keep = pos < cap
+    slot = jnp.where(keep, e_s * cap + pos, e * cap)          # overflow slot
+
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype)
+    buf = buf.at[slot].add(xt[tok_s] * keep[:, None].astype(xt.dtype))
+    # NB: capacity guarantees <=1 writer per slot, so 'add' == 'set' but is
+    # cheaper for XLA to parallelize deterministically.
+    h = buf[: e * cap].reshape(e, cap, d)
+    out = _expert_gemm(p, h, xt.dtype).reshape(e * cap, d)
+    contrib = out[jnp.minimum(slot, e * cap - 1)] * (
+        g_s * keep.astype(f32)
+    )[:, None].astype(xt.dtype)
+    y = jnp.zeros((t, d), xt.dtype).at[tok_s].add(contrib)
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + _shared_ffn(p, x)
+    return y
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg: MoEConfig, backend: str = "einsum"):
+    if backend == "einsum":
+        return moe_ffn_einsum(p, x, cfg)
+    if backend == "sorted":
+        return moe_ffn_sorted(p, x, cfg)
+    raise ValueError(backend)  # pragma: no cover

@@ -1,0 +1,419 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Training/prefill uses **chunked-parallel** forms (lax.scan over chunks; all
+within-chunk work is batched matmuls so the MXU stays busy; the only
+sequential dependence is the O(L/Q) inter-chunk state recurrence).  Decode
+uses the exact O(1)-per-token recurrence on a carried state — this is what
+makes the ``long_500k`` cells runnable for the ssm/hybrid archs while the
+full-attention archs are skipped (DESIGN.md §Arch-applicability).
+
+All decays are computed in log space and are <= 0 before exponentiation
+(Mamba2), or explicitly stabilized with running-max stabilizers (mLSTM /
+sLSTM, following the xLSTM appendix), so everything is overflow-safe in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.lm.layers import rms_norm
+
+f32 = jnp.float32
+
+
+def _fit_chunk(length: int, chunk: int) -> int:
+    """Largest divisor of ``length`` not exceeding ``chunk`` (>=1)."""
+    q = min(chunk, length)
+    while length % q != 0:
+        q -= 1
+    return q
+
+
+# ==========================================================================
+# Mamba2 / SSD
+# ==========================================================================
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    h = di // s.head_dim
+    n = s.d_state
+    ks = jax.random.split(key, 4)
+    d_in = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, d_in)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, di + 2 * n)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "dt_bias": jnp.zeros((h,), f32),
+        "a_log": jnp.zeros((h,), f32),       # A = -exp(a_log) = -1 at init
+        "d_skip": jnp.ones((h,), f32),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _split_mamba_proj(proj: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    n = s.d_state
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt, di, h, n
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d, window K.  xbc: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu((out + b).astype(f32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(
+    x: jnp.ndarray,   # (B, L, H, P)
+    dt: jnp.ndarray,  # (B, L, H) positive
+    a: jnp.ndarray,   # (H,) negative
+    b_: jnp.ndarray,  # (B, L, N)
+    c_: jnp.ndarray,  # (B, L, N)
+    chunk: int,
+    h0: jnp.ndarray | None = None,  # (B, H, N, P)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (Mamba2 paper §6); returns (y, final_state)."""
+    bsz, L, H, P = x.shape
+    N = b_.shape[-1]
+    Q = _fit_chunk(L, chunk)
+    nc = L // Q
+    lga = (dt * a[None, None, :]).astype(f32)       # (B,L,H) log-decay <= 0
+    xbar = (x.astype(f32) * dt[..., None])          # (B,L,H,P)
+
+    def rs(t, tail):  # (B, L, ...) -> (nc, B, Q, ...)
+        return t.reshape(bsz, nc, Q, *tail).transpose(1, 0, 2, *range(3, 3 + len(tail)))
+
+    lga_c = rs(lga, (H,))
+    x_c = rs(xbar, (H, P))
+    b_c = rs(b_.astype(f32), (N,))
+    c_c = rs(c_.astype(f32), (N,))
+
+    init = jnp.zeros((bsz, H, N, P), f32) if h0 is None else h0.astype(f32)
+
+    def step(h_prev, inputs):
+        lg, xc, bc, cc = inputs                      # (B,Q,H), (B,Q,H,P), (B,Q,N)x2
+        cum = jnp.cumsum(lg, axis=1)                 # (B,Q,H) inclusive
+        cum_t = cum.transpose(0, 2, 1)               # (B,H,Q)
+        total = cum_t[:, :, -1]                      # (B,H)
+        # ---- intra-chunk (masked decay attention) --------------------------
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)  # (B,Q,Q)
+        decay = jnp.exp(cum_t[:, :, :, None] - cum_t[:, :, None, :])  # (B,H,Q,Q)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        w = scores[:, None] * jnp.where(mask[None, None], decay, 0.0)
+        y = jnp.einsum("bhij,bjhp->bihp", w, xc)
+        # ---- inter-chunk (carried state) -----------------------------------
+        y = y + jnp.einsum("bin,bhnp->bihp", cc, h_prev) * jnp.exp(cum)[..., None]
+        # ---- state update ----------------------------------------------------
+        to_end = jnp.exp(total[:, None, :] - cum)    # (B,Q,H)
+        xw = xc * to_end[..., None]
+        h_new = jnp.exp(total)[:, :, None, None] * h_prev + jnp.einsum(
+            "bjn,bjhp->bhnp", bc, xw
+        )
+        return h_new, y
+
+    h_fin, ys = jax.lax.scan(step, init, (lga_c, x_c, b_c, c_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, L, H, P)
+    return y, h_fin
+
+
+def mamba2_block(
+    p: dict, x: jnp.ndarray, cfg: ModelConfig, *, return_state: bool = False
+):
+    """Full-sequence Mamba2 block (train / prefill).  x: (B, L, D).
+
+    With ``return_state`` also returns (final ssm state, conv-window tail),
+    i.e. exactly what :func:`mamba2_decode` needs to continue the sequence.
+    """
+    s = cfg.ssm
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dtr, di, h, n = _split_mamba_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, b_, c_ = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dtr.astype(f32) + p["dt_bias"])     # (B,L,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(*xs.shape[:2], h, s.head_dim)
+    y, h_fin = _ssd_chunked(xh, dt, a, b_, c_, s.chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(f32)
+    y = y.reshape(*xs.shape[:2], di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(f32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        k = s.d_conv
+        conv_tail = xbc_raw[:, -(k - 1) :, :]                # (B, K-1, di+2N)
+        return out, h_fin, conv_tail
+    return out
+
+
+def mamba2_decode(
+    p: dict,
+    x: jnp.ndarray,            # (B, 1, D)
+    conv_state: jnp.ndarray,   # (B, K-1, di + 2N)
+    ssm_state: jnp.ndarray,    # (B, H, N, P)
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent decode step."""
+    s = cfg.ssm
+    proj = x @ p["in_proj"]
+    z, xbc, dtr, di, h, n = _split_mamba_proj(proj[:, 0], cfg)
+    # conv over the ring of last K inputs
+    win = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv.astype(f32)).astype(x.dtype)
+    conv_state = win[:, 1:, :]
+    xs, b_, c_ = jnp.split(conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dtr.astype(f32) + p["dt_bias"])      # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None, :])                          # (B,H)
+    xh = xs.reshape(-1, h, s.head_dim).astype(f32)            # (B,H,P)
+    xbar = xh * dt[..., None]
+    ssm_state = decay[:, :, None, None] * ssm_state + jnp.einsum(
+        "bn,bhp->bhnp", b_.astype(f32), xbar
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_.astype(f32), ssm_state)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(f32)).astype(x.dtype)[:, None, :]
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_state, ssm_state
+
+
+# ==========================================================================
+# mLSTM (xLSTM matrix-memory cell), chunkwise-parallel + recurrent
+# ==========================================================================
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    return {
+        "w_q": (jax.random.normal(ks[0], (d, di)) * std).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, di)) * std).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d, di)) * std).astype(dtype),
+        "w_i": (jax.random.normal(ks[3], (d, h)) * std).astype(f32),
+        "w_f": (jax.random.normal(ks[4], (d, h)) * std).astype(f32),
+        "b_i": jnp.zeros((h,), f32),
+        "b_f": jnp.full((h,), 3.0, f32),  # open forget gates at init
+        "w_gate": (jax.random.normal(ks[5], (d, di)) * std).astype(dtype),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[6], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk, state=None, compute_dtype=f32):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,L,H,P); log_i/log_f: (B,L,H).
+    state: (C (B,H,P,P), n (B,H,P), m (B,H)) with true scale exp(m)·stored.
+    Returns (h (B,L,H,P), final state).
+
+    ``compute_dtype=bf16`` keeps the big (B,Q,H,P) operands of the chunk
+    einsums in bf16 (f32 accumulation via preferred_element_type); the
+    carried state and all gate/log math stay f32.  Halves the memory-term
+    bytes of the chunk scan (§Perf hillclimb 3, iteration 2).
+    """
+    bsz, L, H, P = q.shape
+    Q = _fit_chunk(L, chunk)
+    nc = L // Q
+    scale = P ** -0.5
+
+    def rs(t, tail):
+        return t.reshape(bsz, nc, Q, *tail).transpose(1, 0, 2, *range(3, 3 + len(tail)))
+
+    qc, kc, vc = (
+        rs(q.astype(compute_dtype), (H, P)),
+        rs(k.astype(compute_dtype), (H, P)),
+        rs(v.astype(compute_dtype), (H, P)),
+    )
+    lic, lfc = rs(log_i, (H,)), rs(log_f, (H,))
+
+    if state is None:
+        state = (
+            jnp.zeros((bsz, H, P, P), f32),
+            jnp.zeros((bsz, H, P), f32),
+            jnp.full((bsz, H), -1e30, f32),
+        )
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, li, lf = inp
+        b = jnp.cumsum(lf, axis=1).transpose(0, 2, 1)      # (B,H,Q) inclusive
+        li_t = li.transpose(0, 2, 1)                       # (B,H,Q)
+        total = b[:, :, -1]                                # (B,H)
+        # log-weight of key j for query i (j <= i): b_i - b_j + log_i_j
+        logw = b[:, :, :, None] - b[:, :, None, :] + li_t[:, :, None, :]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        logw = jnp.where(mask[None, None], logw, -jnp.inf)
+        m_intra = jnp.max(logw, axis=-1)                   # (B,H,Q)
+        m_inter = m[:, :, None] + b                        # (B,H,Q)
+        m_i = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+        w = jnp.exp(logw - m_i[..., None])                 # (B,H,Q,Q)
+        qk = jnp.einsum("bihp,bjhp->bhij", qt, kt,
+                        preferred_element_type=f32) * scale
+        num = jnp.einsum("bhij,bjhp->bihp", w * qk, vt)
+        den = jnp.sum(w * qk, axis=-1)                     # (B,H,Q)
+        inter_scale = jnp.exp(m_inter - m_i)               # (B,H,Q)
+        num = num + jnp.einsum("bihp,bhpr->bihr", qt * scale, C) * (
+            inter_scale.transpose(0, 2, 1)[..., None]
+        )
+        den = den + jnp.einsum("bihp,bhp->bhi", qt * scale, n) * inter_scale
+        hden = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))    # (B,H,Q)
+        h = num / hden.transpose(0, 2, 1)[..., None]       # (B,Q,H,P)
+        # ---- state update -------------------------------------------------
+        lw_state = total[:, :, None] - b + li_t            # (B,H,Q) log-weights
+        m_new = jnp.maximum(m + total, jnp.max(lw_state, axis=-1))
+        sw = jnp.exp(lw_state - m_new[:, :, None])         # (B,H,Q)
+        C_new = jnp.exp(m + total - m_new)[:, :, None, None] * C + jnp.einsum(
+            "bhj,bjhp,bjhr->bhpr", sw, kt, vt
+        )
+        n_new = jnp.exp(m + total - m_new)[:, :, None] * n + jnp.einsum(
+            "bhj,bjhp->bhp", sw, kt
+        )
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, state, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(bsz, L, H, P)
+    return h, (C, n, m)
+
+
+def mlstm_block(
+    p: dict, x: jnp.ndarray, cfg: ModelConfig, *, return_state: bool = False
+):
+    s = cfg.ssm
+    bsz, L, d = x.shape
+    h_heads = cfg.n_heads
+    di = s.expand * d
+    P = di // h_heads
+    q = (x @ p["w_q"]).reshape(bsz, L, h_heads, P)
+    k = (x @ p["w_k"]).reshape(bsz, L, h_heads, P)
+    v = (x @ p["w_v"]).reshape(bsz, L, h_heads, P)
+    # NB (§Perf, refuted hypothesis): constraining the P head_dim onto the
+    # TP axis to shard the (B,H,P,P) matrix memory was measured WORSE —
+    # P is the contracted dim of the qk/num einsums, so sharding it turns
+    # every chunk step into a cross-shard partial-sum (collective term
+    # 9.4s -> 25.7s on xlstm train_4k).  Keep P replicated; memory is
+    # attacked via bf16 chunk inputs instead (mlstm_compute_dtype).
+    # xLSTM uses an *exponential* input gate: log i = the preactivation itself
+    li = x.astype(f32) @ p["w_i"] + p["b_i"]
+    lf = jax.nn.log_sigmoid(x.astype(f32) @ p["w_f"] + p["b_f"])
+    # chunk einsum operands in the model dtype (bf16 on TPU), f32 accumulation
+    y, state = _mlstm_chunked(q, k, v, li, lf, s.chunk, compute_dtype=x.dtype)
+    y = y.reshape(bsz, L, di).astype(x.dtype)
+    y = y * jax.nn.silu((x @ p["w_gate"]).astype(f32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_decode(
+    p: dict, x: jnp.ndarray, state: tuple, cfg: ModelConfig
+) -> tuple[jnp.ndarray, tuple]:
+    """x: (B,1,D); state: (C, n, m)."""
+    s = cfg.ssm
+    bsz, _, d = x.shape
+    H = cfg.n_heads
+    di = s.expand * d
+    P = di // H
+    xt = x[:, 0]
+    q = (xt @ p["w_q"]).reshape(bsz, H, P).astype(f32) * P ** -0.5
+    k = (xt @ p["w_k"]).reshape(bsz, H, P).astype(f32)
+    v = (xt @ p["w_v"]).reshape(bsz, H, P).astype(f32)
+    li = xt.astype(f32) @ p["w_i"] + p["b_i"]                # (B,H)
+    lf = jax.nn.log_sigmoid(xt.astype(f32) @ p["w_f"] + p["b_f"])
+    C, n, m = state
+    m_new = jnp.maximum(lf + m, li)
+    C = jnp.exp(lf + m - m_new)[:, :, None, None] * C + jnp.exp(li - m_new)[
+        :, :, None, None
+    ] * jnp.einsum("bhp,bhr->bhpr", k, v)
+    n = jnp.exp(lf + m - m_new)[:, :, None] * n + jnp.exp(li - m_new)[:, :, None] * k
+    num = jnp.einsum("bhp,bhpr->bhr", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(bsz, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu((x @ p["w_gate"]).astype(f32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (C, n, m_new)
+
+
+# ==========================================================================
+# sLSTM (scalar-memory cell with exponential gating)
+# ==========================================================================
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    hs = cfg.n_heads
+    dh = d // hs
+    ks = jax.random.split(key, 4)
+    return {
+        "w": (jax.random.normal(ks[0], (d, 4 * d)) * d ** -0.5).astype(f32),
+        "r": (jax.random.normal(ks[1], (hs, dh, 4 * dh)) * dh ** -0.5).astype(f32),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,), f32), jnp.full((d,), 3.0, f32), jnp.zeros((d,), f32)]
+        ),
+        "out_norm": jnp.ones((d,), dtype),
+        "up": (jax.random.normal(ks[2], (d, 4 * d // 3)) * d ** -0.5).astype(dtype),
+        "down": (
+            jax.random.normal(ks[3], (4 * d // 3, d)) * (4 * d // 3) ** -0.5
+        ).astype(dtype),
+    }
+
+
+def _slstm_scan(p, x_seq: jnp.ndarray, cfg: ModelConfig, state=None):
+    """x_seq: (B, L, D) -> (h (B,L,D), final state).  Sequential lax.scan."""
+    bsz, L, d = x_seq.shape
+    hs = cfg.n_heads
+    dh = d // hs
+    if state is None:
+        zeros = jnp.zeros((bsz, d), f32)
+        state = (zeros, zeros, jnp.full((bsz, d), -1e30, f32), zeros)  # c,n,m,h
+
+    wx = x_seq.astype(f32) @ p["w"] + p["b"]  # (B,L,4D): precompute input part
+
+    def step(carry, wx_t):
+        c, n, m, h_prev = carry
+        rec = jnp.einsum(
+            "bhd,hdk->bhk", h_prev.reshape(bsz, hs, dh), p["r"]
+        ).reshape(bsz, 4 * d)
+        za, ia, fa, oa = jnp.split(wx_t + rec, 4, axis=-1)
+        z = jnp.tanh(za)
+        log_i = ia
+        log_f = jax.nn.log_sigmoid(fa)
+        o = jax.nn.sigmoid(oa)
+        m_new = jnp.maximum(log_f + m, log_i)
+        c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * z
+        n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new)
+        h = o * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+        return (c_new, n_new, m_new, h), h
+
+    final, hs_seq = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    return hs_seq.transpose(1, 0, 2), final
+
+
+def slstm_block(
+    p: dict, x: jnp.ndarray, cfg: ModelConfig, *, return_state: bool = False
+):
+    h, state = _slstm_scan(p, x, cfg)
+    h = rms_norm(h.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    u = jax.nn.gelu((h @ p["up"]).astype(f32), approximate=True).astype(x.dtype)
+    out = u @ p["down"]
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_decode(p: dict, x: jnp.ndarray, state: tuple, cfg: ModelConfig):
+    h, new_state = _slstm_scan(p, x, cfg, state)
+    h = rms_norm(h.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    u = jax.nn.gelu((h @ p["up"]).astype(f32), approximate=True).astype(x.dtype)
+    return u @ p["down"], new_state

@@ -1,0 +1,13 @@
+"""Tabular model zoo (trained in-repo; used by the paper's seven pipelines)."""
+from repro.models.tabular.linear import LinearRegression, LogisticRegression
+from repro.models.tabular.mlp import MLP
+from repro.models.tabular.trees import GradientBoosting, RandomForest, TreeEnsemble
+
+__all__ = [
+    "LinearRegression",
+    "LogisticRegression",
+    "MLP",
+    "GradientBoosting",
+    "RandomForest",
+    "TreeEnsemble",
+]

@@ -1,0 +1,76 @@
+"""Linear / logistic models (the paper's Tick-Price pipeline uses LR)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LinearRegression", "LogisticRegression"]
+
+
+@dataclass
+class LinearRegression:
+    """Ridge-regularized least squares, closed form."""
+
+    l2: float = 1e-6
+    task: str = "regression"
+    coef: np.ndarray = field(default_factory=lambda: np.zeros(0, np.float32))
+    intercept: float = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "LinearRegression":
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        Xa = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        A = Xa.T @ Xa + self.l2 * np.eye(Xa.shape[1])
+        b = Xa.T @ y
+        w = np.linalg.solve(A, b)
+        self.coef = w[:-1].astype(np.float32)
+        self.intercept = float(w[-1])
+        return self
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x @ jnp.asarray(self.coef) + self.intercept
+
+
+@dataclass
+class LogisticRegression:
+    """Binary logistic regression via Newton-ish full-batch gradient descent."""
+
+    l2: float = 1e-4
+    n_steps: int = 300
+    lr: float = 0.5
+    task: str = "classification"
+    coef: np.ndarray = field(default_factory=lambda: np.zeros(0, np.float32))
+    intercept: float = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "LogisticRegression":
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        w = jnp.zeros((X.shape[1] + 1,), jnp.float32)
+        Xa = jnp.concatenate([X, jnp.ones((X.shape[0], 1), jnp.float32)], axis=1)
+
+        def loss(w):
+            logits = Xa @ w
+            nll = jnp.mean(
+                jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+            )
+            return nll + 0.5 * self.l2 * jnp.sum(w[:-1] ** 2)
+
+        g = jax.jit(jax.grad(loss))
+        for _ in range(self.n_steps):
+            w = w - self.lr * g(w)
+        w = np.asarray(w)
+        self.coef = w[:-1]
+        self.intercept = float(w[-1])
+        return self
+
+    def predict_logit(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x @ jnp.asarray(self.coef) + self.intercept
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        return (self.predict_logit(x) > 0).astype(jnp.int32)
+
+    def predict_proba(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.nn.sigmoid(self.predict_logit(x))

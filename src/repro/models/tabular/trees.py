@@ -1,0 +1,322 @@
+"""Tree-ensemble models (Random Forest + Gradient Boosting) built in-repo.
+
+The paper's pipelines use LightGBM / XGBoost / Random Forests (Table 1).  We
+implement both *training* (histogram-based CART with second-order gradient
+boosting, LightGBM/XGBoost-style) and *inference*.
+
+Inference is the part Biathlon hammers — AMI evaluates the model on
+``m·(k+2) ≈ 23k`` QMC rows per planner iteration — so trees are stored
+**tensorized** (Hummingbird-style complete arrays) and traversed level-wise
+with gathers:
+
+    idx ← 0;  repeat depth times:  idx ← (x[feat[idx]] ≤ thr[idx]) ? L[idx] : R[idx]
+
+Leaves self-loop, so the traversal is branch-free and maps directly onto the
+TPU Pallas kernel in ``repro.kernels.tree_qmc`` (this module's ``predict`` is
+its reference oracle).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TreeEnsemble", "RandomForest", "GradientBoosting", "fit_tree_arrays"]
+
+
+# --------------------------------------------------------------------------
+# Tensorized ensemble representation
+# --------------------------------------------------------------------------
+class TreeEnsemble(NamedTuple):
+    """Padded, stacked decision trees.
+
+    feature:  (T, M) int32 — split feature per node (leaves: 0, unused: 0)
+    threshold:(T, M) f32   — split threshold
+    left:     (T, M) int32 — left-child node id  (leaves: self)
+    right:    (T, M) int32 — right-child node id (leaves: self)
+    value:    (T, M) f32   — leaf prediction (internal nodes: 0)
+    depth:    int          — max tree depth (traversal iterations)
+    """
+
+    feature: jnp.ndarray
+    threshold: jnp.ndarray
+    left: jnp.ndarray
+    right: jnp.ndarray
+    value: jnp.ndarray
+    depth: int
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+
+def ensemble_predict_sum(ens: TreeEnsemble, x: jnp.ndarray) -> jnp.ndarray:
+    """Sum of per-tree leaf values; x: (n, F) -> (n,).  Pure-jnp oracle."""
+
+    def one_tree(feat, thr, left, right, value):
+        idx = jnp.zeros((x.shape[0],), jnp.int32)
+        for _ in range(ens.depth):
+            f = feat[idx]                       # (n,)
+            go_left = x[jnp.arange(x.shape[0]), f] <= thr[idx]
+            idx = jnp.where(go_left, left[idx], right[idx])
+        return value[idx]
+
+    per_tree = jax.vmap(one_tree)(
+        ens.feature, ens.threshold, ens.left, ens.right, ens.value
+    )  # (T, n)
+    return jnp.sum(per_tree, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Histogram CART training (numpy; second-order gain, XGBoost-style)
+# --------------------------------------------------------------------------
+def _quantile_bins(X: np.ndarray, n_bins: int) -> np.ndarray:
+    """Per-feature bin edges (F, n_bins-1) from quantiles."""
+    qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+    return np.quantile(X, qs, axis=0).T.astype(np.float32)  # (F, n_bins-1)
+
+
+def _apply_bins(X: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    out = np.empty(X.shape, np.int32)
+    for f in range(X.shape[1]):
+        out[:, f] = np.searchsorted(edges[f], X[:, f], side="right")
+    return out
+
+
+def fit_tree_arrays(
+    Xb: np.ndarray,          # (n, F) int32 binned features
+    edges: np.ndarray,       # (F, n_bins-1) bin edges
+    grad: np.ndarray,        # (n,) first-order gradients
+    hess: np.ndarray,        # (n,) second-order gradients (1.0 for plain CART)
+    max_depth: int,
+    min_child_weight: float = 1.0,
+    reg_lambda: float = 1.0,
+    feature_frac: float = 1.0,
+    rng: np.random.Generator | None = None,
+) -> dict:
+    """Grow one tree greedily (BFS), return complete node arrays.
+
+    Gain = ½ [ G_L²/(H_L+λ) + G_R²/(H_R+λ) − G²/(H+λ) ];
+    leaf value = −G/(H+λ).  With grad = (pred − y), hess = 1 this reduces to
+    variance-reduction CART; with logistic grad/hess it is XGBoost.
+    """
+    n, F = Xb.shape
+    n_bins = int(edges.shape[1]) + 1
+    rng = rng or np.random.default_rng(0)
+    max_nodes = 2 ** (max_depth + 1) - 1
+    feature = np.zeros(max_nodes, np.int32)
+    threshold = np.zeros(max_nodes, np.float32)
+    split_bin = np.zeros(max_nodes, np.int32)     # bin-space threshold (training)
+    left = np.arange(max_nodes, dtype=np.int32)   # default: self-loop (leaf)
+    right = np.arange(max_nodes, dtype=np.int32)
+    value = np.zeros(max_nodes, np.float32)
+    next_free = 1
+
+    # frontier: (node_id, row_idx, depth)
+    frontier = [(0, np.arange(n), 0)]
+    while frontier:
+        node, rows, depth = frontier.pop()
+        g, h = grad[rows], hess[rows]
+        G, H = g.sum(), h.sum()
+        value[node] = -G / (H + reg_lambda)
+        if depth >= max_depth or rows.size < 2 or H < 2 * min_child_weight:
+            continue
+        feats = (
+            rng.choice(F, max(1, int(F * feature_frac)), replace=False)
+            if feature_frac < 1.0
+            else np.arange(F)
+        )
+        best = (0.0, -1, -1)  # (gain, feature, bin)
+        xb = Xb[rows]
+        base = 0.5 * G * G / (H + reg_lambda)
+        for f in feats:
+            hg = np.bincount(xb[:, f], weights=g, minlength=n_bins)
+            hh = np.bincount(xb[:, f], weights=h, minlength=n_bins)
+            GL = np.cumsum(hg)[:-1]
+            HL = np.cumsum(hh)[:-1]
+            GR, HR = G - GL, H - HL
+            ok = (HL >= min_child_weight) & (HR >= min_child_weight)
+            gain = np.where(
+                ok,
+                0.5 * (GL**2 / (HL + reg_lambda) + GR**2 / (HR + reg_lambda)) - base,
+                -np.inf,
+            )
+            b = int(np.argmax(gain))
+            if gain[b] > best[0]:
+                best = (float(gain[b]), int(f), b)
+        gain, f, b = best
+        if f < 0 or gain <= 1e-12 or next_free + 1 >= max_nodes:
+            continue
+        lo, hi = next_free, next_free + 1
+        next_free += 2
+        feature[node] = f
+        # training went left iff bin <= b iff x < edges[f, b]; nextafter makes
+        # the float-space rule ``x <= thr`` match the bin-space rule exactly.
+        threshold[node] = np.nextafter(edges[f, b], -np.inf)
+        split_bin[node] = b
+        left[node], right[node] = lo, hi
+        go_left = Xb[rows, f] <= b
+        frontier.append((lo, rows[go_left], depth + 1))
+        frontier.append((hi, rows[~go_left], depth + 1))
+
+    return dict(
+        feature=feature,
+        threshold=threshold,
+        split_bin=split_bin,
+        left=left,
+        right=right,
+        value=value,
+    )
+
+
+def _stack_trees(trees: list[dict], depth: int) -> TreeEnsemble:
+    return TreeEnsemble(
+        feature=jnp.asarray(np.stack([t["feature"] for t in trees])),
+        threshold=jnp.asarray(np.stack([t["threshold"] for t in trees])),
+        left=jnp.asarray(np.stack([t["left"] for t in trees])),
+        right=jnp.asarray(np.stack([t["right"] for t in trees])),
+        value=jnp.asarray(np.stack([t["value"] for t in trees])),
+        depth=depth,
+    )
+
+
+# --------------------------------------------------------------------------
+# Random Forest
+# --------------------------------------------------------------------------
+@dataclass
+class RandomForest:
+    """Bagged CART forest; regression or binary classification.
+
+    Stands in for the paper's sklearn RandomForest (Turbofan, Student-QA).
+    """
+
+    n_trees: int = 50
+    max_depth: int = 8
+    n_bins: int = 64
+    feature_frac: float = 0.7
+    task: str = "regression"
+    seed: int = 0
+    ensemble: TreeEnsemble | None = None
+    base: float = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForest":
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        rng = np.random.default_rng(self.seed)
+        edges = _quantile_bins(X, self.n_bins)
+        Xb = _apply_bins(X, edges)
+        self.base = float(y.mean())
+        trees = []
+        for _ in range(self.n_trees):
+            rows = rng.integers(0, len(y), len(y))  # bootstrap
+            # CART via boosting identity: grad = base − y, hess = 1 at the
+            # root means each tree independently fits (y − base).
+            g = (self.base - y[rows]).astype(np.float64)
+            h = np.ones_like(g)
+            trees.append(
+                fit_tree_arrays(
+                    Xb[rows],
+                    edges,
+                    g,
+                    h,
+                    self.max_depth,
+                    feature_frac=self.feature_frac,
+                    rng=rng,
+                )
+            )
+        self.ensemble = _stack_trees(trees, self.max_depth)
+        return self
+
+    # jittable prediction paths ------------------------------------------
+    def predict_raw(self, x: jnp.ndarray) -> jnp.ndarray:
+        ens = self.ensemble
+        return self.base + ensemble_predict_sum(ens, x) / ens.n_trees
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        raw = self.predict_raw(x)
+        if self.task == "classification":
+            return (raw > 0.5).astype(jnp.int32)
+        return raw
+
+    def predict_proba(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.clip(self.predict_raw(x), 0.0, 1.0)
+
+
+# --------------------------------------------------------------------------
+# Gradient Boosting (LightGBM / XGBoost stand-in)
+# --------------------------------------------------------------------------
+@dataclass
+class GradientBoosting:
+    """Second-order gradient boosting; squared loss or logistic loss."""
+
+    n_trees: int = 100
+    max_depth: int = 6
+    n_bins: int = 64
+    learning_rate: float = 0.1
+    reg_lambda: float = 1.0
+    task: str = "regression"
+    seed: int = 0
+    ensemble: TreeEnsemble | None = None
+    base: float = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GradientBoosting":
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float64)
+        rng = np.random.default_rng(self.seed)
+        edges = _quantile_bins(X, self.n_bins)
+        Xb = _apply_bins(X, edges)
+        if self.task == "classification":
+            p = np.clip(y.mean(), 1e-6, 1 - 1e-6)
+            self.base = float(np.log(p / (1 - p)))
+        else:
+            self.base = float(y.mean())
+        pred = np.full(len(y), self.base)
+        trees = []
+        for _ in range(self.n_trees):
+            if self.task == "classification":
+                p = 1.0 / (1.0 + np.exp(-pred))
+                g, h = p - y, np.maximum(p * (1 - p), 1e-6)
+            else:
+                g, h = pred - y, np.ones_like(y)
+            t = fit_tree_arrays(
+                Xb, edges, g, h, self.max_depth, reg_lambda=self.reg_lambda, rng=rng
+            )
+            trees.append(t)
+            # update predictions with the new tree's (shrunk) leaf values
+            contrib = _numpy_tree_predict(t, Xb, edges, self.max_depth)
+            pred = pred + self.learning_rate * contrib
+        # fold the learning rate into the stored leaf values
+        for t in trees:
+            t["value"] = (t["value"] * self.learning_rate).astype(np.float32)
+        self.ensemble = _stack_trees(trees, self.max_depth)
+        return self
+
+    def predict_raw(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.base + ensemble_predict_sum(self.ensemble, x)
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        raw = self.predict_raw(x)
+        if self.task == "classification":
+            return (raw > 0.0).astype(jnp.int32)
+        return raw
+
+    def predict_proba(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.nn.sigmoid(self.predict_raw(x))
+
+
+def _numpy_tree_predict(
+    tree: dict, Xb: np.ndarray, edges: np.ndarray, depth: int
+) -> np.ndarray:
+    """Training-time tree application on binned features (numpy, host)."""
+    del edges  # traversal happens in bin space
+    n = Xb.shape[0]
+    idx = np.zeros(n, np.int32)
+    rows = np.arange(n)
+    for _ in range(depth):
+        f = tree["feature"][idx]
+        go_left = Xb[rows, f] <= tree["split_bin"][idx]
+        idx = np.where(go_left, tree["left"][idx], tree["right"][idx]).astype(np.int32)
+    return tree["value"][idx].astype(np.float64)

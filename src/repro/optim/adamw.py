@@ -1,0 +1,112 @@
+"""Pure-JAX AdamW + gradient clipping + LR schedules (no optax on purpose —
+the brief requires every substrate built in-repo).
+
+The optimizer state is a plain PyTree mirroring the params PyTree, so it
+shards with the same ``NamedSharding`` rules as the parameters (fully sharded
+optimizer state — ZeRO-style — falls out of pjit for free) and checkpoints
+through ``repro.checkpoint`` like any other tree.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    mu: PyTree         # first moment
+    nu: PyTree         # second moment
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=zeros,
+        nu=jax.tree.map(jnp.copy, zeros),
+    )
+
+
+def adamw_update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    lr: jnp.ndarray | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[PyTree, AdamWState]:
+    """One AdamW step; returns (new_params, new_state).
+
+    Moments are kept in f32 even for bf16 params (mixed-precision training
+    convention); the update is computed in f32 and cast back to the param
+    dtype at the end.
+    """
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([x[0] for x in new])
+    new_m = treedef.unflatten([x[1] for x in new])
+    new_v = treedef.unflatten([x[2] for x in new])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def cosine_schedule(base_lr: float, total_steps: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return sched
+
+
+def linear_warmup_cosine(
+    base_lr: float, warmup: int, total_steps: int, min_frac: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        frac = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+
+    return sched

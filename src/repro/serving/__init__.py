@@ -1,0 +1,6 @@
+from repro.serving.server import BiathlonServer, ServerStats
+
+__all__ = ["BiathlonServer", "ServerStats"]
+from repro.serving.batched import BatchedFusedServer  # noqa: E402
+
+__all__.append("BatchedFusedServer")

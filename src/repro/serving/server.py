@@ -1,0 +1,179 @@
+"""Serving runtime: request queue, batcher, Biathlon-integrated serve path.
+
+Two execution modes per pipeline:
+
+* ``host``  — the paper-faithful HostLoopExecutor (dynamic plans, bucketed
+  shapes).  One request at a time, like the paper's evaluation.
+* ``fused`` — the beyond-paper single-XLA-program executor; requests are
+  admitted from the queue, their (k, cap) sample buffers gathered once, and
+  the whole iterate-until-guaranteed loop runs on device.  Compiled once per
+  pipeline; per-request state (exact features, group sizes, delta) is data.
+
+``ServerStats`` mirrors the paper's §4 metrics: mean latency, speedup vs the
+exact baseline, sample fraction, guarantee satisfaction rate, accuracy.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import BiathlonConfig, HostLoopExecutor, run_exact
+from repro.core.executor_fused import build_fused_executor
+from repro.data.store import bucket_size
+from repro.data.synthetic import PipelineBundle
+
+__all__ = ["BiathlonServer", "ServerStats"]
+
+_AGG_IDS = {"avg": 0, "sum": 1, "count": 2, "var": 3, "std": 4}
+
+
+@dataclass
+class ServerStats:
+    latencies: list = field(default_factory=list)
+    exact_latencies: list = field(default_factory=list)
+    errors_vs_exact: list = field(default_factory=list)
+    sample_fracs: list = field(default_factory=list)
+    iters: list = field(default_factory=list)
+    satisfied: list = field(default_factory=list)
+    y_hats: list = field(default_factory=list)
+    y_exacts: list = field(default_factory=list)
+
+    def summary(self, delta: float, task: str) -> dict:
+        lat = np.array(self.latencies)
+        ex = np.array(self.exact_latencies) if self.exact_latencies else np.array([np.nan])
+        err = np.array(self.errors_vs_exact)
+        within = (
+            (err <= max(delta, 1e-12) + 1e-9)
+            if task == "regression"
+            else (err == 0)
+        )
+        return {
+            "n": len(lat),
+            "mean_latency_s": float(lat.mean()),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "mean_exact_latency_s": float(np.nanmean(ex)),
+            "speedup": float(np.nanmean(ex) / lat.mean()) if len(lat) else 0.0,
+            "mean_sample_frac": float(np.mean(self.sample_fracs)),
+            "mean_iters": float(np.mean(self.iters)),
+            "guarantee_rate": float(np.mean(within)),
+            "mean_abs_err_vs_exact": float(err.mean()),
+        }
+
+
+class BiathlonServer:
+    def __init__(
+        self,
+        bundle: PipelineBundle,
+        config: BiathlonConfig | None = None,
+        mode: str = "host",
+    ):
+        self.bundle = bundle
+        self.config = config or BiathlonConfig()
+        self.mode = mode
+        self.pipeline = bundle.pipeline
+        self.store = bundle.store
+        self._host = HostLoopExecutor(self.store, self.config)
+        self._fused = None
+        if mode == "fused":
+            self._build_fused()
+
+    # ------------------------------------------------------------------
+    def _build_fused(self):
+        p = self.pipeline
+        unsupported = [f.agg for f in p.agg_features if f.agg not in _AGG_IDS]
+        if unsupported:
+            raise ValueError(
+                f"fused executor supports parametric aggregates only, got {unsupported}"
+            )
+        mean = jnp.asarray(p.scaler_mean)
+        scale = jnp.asarray(p.scaler_scale)
+        model = p.model
+
+        def model_fn(agg_rows, exact):
+            m = agg_rows.shape[0]
+            full = jnp.concatenate(
+                [agg_rows, jnp.broadcast_to(exact[None, :], (m, exact.shape[0]))], 1
+            )
+            if mean.shape[0] == full.shape[1]:
+                full = (full - mean[None, :]) / scale[None, :]
+            return model.predict(full)
+
+        cfg = self.config
+        self._fused = build_fused_executor(
+            model_fn,
+            k=p.k,
+            task=p.task,
+            n_classes=max(p.n_classes, 2),
+            m=cfg.m,
+            m_sobol=cfg.m_sobol,
+            alpha=cfg.alpha,
+            gamma=cfg.gamma,
+            tau=cfg.tau,
+            max_iters=cfg.max_iters,
+        )
+        self._agg_ids = jnp.asarray(
+            [_AGG_IDS[f.agg] for f in p.agg_features], jnp.int32
+        )
+        max_n = max(
+            self.store[f.table].group_size(g)
+            for f in p.agg_features
+            for g in self.store[f.table].group_ids
+        )
+        self._cap = bucket_size(max_n)
+
+    # ------------------------------------------------------------------
+    def serve(self, request: dict, key=None):
+        p = self.pipeline
+        delta = (
+            self.config.delta if self.config.delta is not None else p.delta_default
+        )
+        if self.mode == "host":
+            r = self._host.run(p, request, key)
+            return {
+                "y_hat": r.y_hat,
+                "latency": r.t_total,
+                "iters": r.iters,
+                "sample_frac": r.sample_fraction,
+                "prob": r.prob,
+            }
+        t0 = time.perf_counter()
+        specs = p.agg_specs(request)
+        vals, sizes = self.store.request_buffers(specs, self._cap)
+        n_true = jnp.asarray(p.group_sizes(self.store, request), jnp.int32)
+        exact = jnp.asarray(p.exact_feature_values(self.store, request))
+        res = self._fused(
+            vals, jnp.minimum(n_true, self._cap), self._agg_ids,
+            jnp.asarray(delta, jnp.float32), exact,
+        )
+        y = float(res.y_hat)
+        dt = time.perf_counter() - t0
+        return {
+            "y_hat": y,
+            "latency": dt,
+            "iters": int(res.iters),
+            "sample_frac": float(res.samples_used) / max(int(n_true.sum()), 1),
+            "prob": float(res.prob),
+        }
+
+    # ------------------------------------------------------------------
+    def serve_all(self, requests=None, compare_exact: bool = True, seed: int = 0):
+        """Drain a request log; returns ServerStats."""
+        requests = requests if requests is not None else self.bundle.requests
+        stats = ServerStats()
+        p = self.pipeline
+        for i, req in enumerate(requests):
+            out = self.serve(req, jax.random.PRNGKey(seed + i))
+            stats.latencies.append(out["latency"])
+            stats.iters.append(out["iters"])
+            stats.sample_fracs.append(out["sample_frac"])
+            stats.y_hats.append(out["y_hat"])
+            if compare_exact:
+                y_ex, t_ex = run_exact(self.store, p, req)
+                stats.exact_latencies.append(t_ex)
+                stats.errors_vs_exact.append(abs(out["y_hat"] - y_ex))
+                stats.y_exacts.append(y_ex)
+        return stats

@@ -1,0 +1,4 @@
+from repro.train.step import build_train_step, init_train_state
+from repro.train.trainer import Trainer, TrainerConfig, synthetic_batch
+
+__all__ = ["build_train_step", "init_train_state", "Trainer", "TrainerConfig", "synthetic_batch"]

@@ -1,0 +1,93 @@
+"""Online-aggregation estimators: correctness, exactness, CI coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.aggregates import estimate, exact_value
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _buf(vals, cap):
+    out = np.zeros(cap, np.float32)
+    out[: len(vals)] = vals
+    return jnp.asarray(out)
+
+
+@pytest.mark.parametrize("agg", ["avg", "sum", "var", "std"])
+def test_exact_when_full_sample(agg):
+    rng = np.random.default_rng(0)
+    vals = rng.normal(3.0, 2.0, 100).astype(np.float32)
+    res = estimate(agg, _buf(vals, 128), jnp.asarray(100), jnp.asarray(100), KEY)
+    expected = {
+        "avg": vals.mean(),
+        "sum": vals.sum(),
+        "var": vals.var(ddof=1),
+        "std": vals.std(ddof=1),
+    }[agg]
+    assert abs(float(res.value) - expected) < 1e-2 * max(abs(expected), 1.0)
+    assert float(res.sigma) == 0.0  # finite-population correction kills it
+
+
+def test_count_estimator():
+    rng = np.random.default_rng(1)
+    ind = (rng.random(1000) < 0.3).astype(np.float32)
+    res = estimate("count", _buf(ind[:200], 256), jnp.asarray(200), jnp.asarray(1000), KEY)
+    assert abs(float(res.value) - 1000 * ind[:200].mean()) < 1e-3
+    assert float(res.sigma) > 0
+
+
+def test_median_bootstrap_captures_truth():
+    rng = np.random.default_rng(2)
+    vals = rng.normal(5.0, 1.0, 4096).astype(np.float32)
+    z = 512
+    res = estimate(
+        "median", _buf(vals[:1024], 1024), jnp.asarray(z), jnp.asarray(4096), KEY
+    )
+    assert bool(res.is_empirical)
+    reps = np.asarray(res.replicates)
+    assert np.all(np.diff(reps) >= 0), "replicates must be sorted"
+    true_med = np.median(vals)
+    lo, hi = np.percentile(reps, [0.5, 99.5])
+    assert lo - 0.2 <= true_med <= hi + 0.2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mu=st.floats(-10, 10),
+    sd=st.floats(0.1, 5.0),
+    z=st.sampled_from([64, 128, 256]),
+)
+def test_avg_ci_is_calibrated(mu, sd, z):
+    """Hypothesis property: |estimate - truth| <= 4 sigma_hat (w.h.p.)."""
+    rng = np.random.default_rng(abs(hash((mu, sd, z))) % 2**32)
+    n = 2048
+    vals = rng.normal(mu, sd, n).astype(np.float32)
+    res = estimate("avg", _buf(vals[:z], z), jnp.asarray(z), jnp.asarray(n), KEY)
+    err = abs(float(res.value) - vals.mean())
+    assert err <= 4.5 * float(res.sigma) + 1e-4
+
+
+def test_sigma_decreases_with_samples():
+    rng = np.random.default_rng(3)
+    vals = rng.normal(0, 1, 4096).astype(np.float32)
+    sig = []
+    for z in (64, 256, 1024):
+        r = estimate("avg", _buf(vals[:1024], 1024), jnp.asarray(z), jnp.asarray(4096), KEY)
+        sig.append(float(r.sigma))
+    assert sig[0] > sig[1] > sig[2]
+
+
+def test_exact_value_matches_numpy():
+    rng = np.random.default_rng(4)
+    vals = rng.normal(1, 2, 500).astype(np.float32)
+    for agg, exp in [
+        ("avg", vals.mean()),
+        ("sum", vals.sum()),
+        ("std", vals.std(ddof=1)),
+        ("median", np.median(vals)),
+    ]:
+        got = float(exact_value(agg, jnp.asarray(vals), 500))
+        assert abs(got - exp) < 2e-2 * max(abs(exp), 1.0), agg

@@ -1,0 +1,141 @@
+"""Uncertainty propagation + Sobol indices + guarantee + planner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.guarantee import regression_prob, satisfied
+from repro.core.planner import direction, gamma_abs, initial_plan, next_plan
+from repro.core.propagation import (
+    InferenceUncertainty,
+    propagate_classification,
+    propagate_regression,
+)
+from repro.core.sobol_indices import main_effect_indices
+from repro.core.uncertainty import FeatureUncertainty, exact_uncertainty, sample_features
+
+
+def _normal_unc(values, sigmas, n_rep=16):
+    values = jnp.asarray(values, jnp.float32)
+    sigmas = jnp.asarray(sigmas, jnp.float32)
+    k = values.shape[0]
+    return FeatureUncertainty(
+        value=values,
+        sigma=sigmas,
+        replicates=jnp.broadcast_to(values[:, None], (k, n_rep)),
+        is_empirical=jnp.zeros((k,), bool),
+    )
+
+
+# ---------------------------------------------------------------- propagation
+def test_linear_model_variance_propagation():
+    """For y = c.x, Var(y) = sum c_j^2 sigma_j^2 — QMC must recover it."""
+    c = jnp.asarray([2.0, -1.0, 0.5])
+    unc = _normal_unc([1.0, 2.0, 3.0], [0.3, 0.2, 0.1])
+    out = propagate_regression(lambda x: x @ c, unc, m=1024)
+    analytic_sd = float(jnp.sqrt(jnp.sum((c * unc.sigma) ** 2)))
+    assert abs(float(out.std) - analytic_sd) / analytic_sd < 0.05
+    assert abs(float(out.mean) - float(unc.value @ c)) < 0.02
+    assert abs(float(out.y_hat) - float(unc.value @ c)) < 1e-5
+
+
+def test_exact_features_give_zero_uncertainty():
+    unc = exact_uncertainty(jnp.asarray([1.0, -2.0]))
+    out = propagate_regression(lambda x: x.sum(-1), unc, m=64)
+    assert float(out.std) == 0.0
+
+
+def test_classification_propagation_probs():
+    unc = _normal_unc([0.0], [1.0])
+    out = propagate_classification(
+        lambda x: (x[:, 0] > 0).astype(jnp.int32), unc, m=2048, n_classes=2
+    )
+    # P(x > 0) = 0.5 for N(0,1): both classes about equally likely
+    assert abs(float(out.probs[1]) - 0.5) < 0.05
+    assert float(out.probs.sum()) == 1.0
+
+
+def test_empirical_replicate_sampling():
+    reps = jnp.sort(jnp.asarray([[1.0, 2.0, 3.0, 4.0]]), axis=1)
+    unc = FeatureUncertainty(
+        value=jnp.asarray([2.5]),
+        sigma=jnp.zeros((1,)),
+        replicates=reps,
+        is_empirical=jnp.ones((1,), bool),
+    )
+    u = jnp.linspace(0.01, 0.99, 64)[:, None]
+    x = sample_features(unc, u)
+    assert set(np.unique(np.asarray(x))) <= {1.0, 2.0, 3.0, 4.0}
+
+
+# ---------------------------------------------------------------- sobol idx
+def test_main_effect_indices_linear_additive():
+    """Linear additive model: I_j = c_j^2 s_j^2 / sum(c^2 s^2) exactly."""
+    c = jnp.asarray([3.0, 1.0, 0.0])
+    unc = _normal_unc([0.0, 0.0, 0.0], [1.0, 1.0, 1.0])
+    est = main_effect_indices(lambda x: x @ c, unc, m=512)
+    expected = np.array([9.0, 1.0, 0.0]) / 10.0
+    np.testing.assert_allclose(np.asarray(est.indices), expected, atol=0.06)
+
+
+def test_indices_track_importance_not_scale():
+    # feature 1 has larger sigma -> more output variance -> higher index
+    c = jnp.asarray([1.0, 1.0])
+    unc = _normal_unc([0.0, 0.0], [2.0, 0.5])
+    est = main_effect_indices(lambda x: x @ c, unc, m=512)
+    assert float(est.indices[0]) > float(est.indices[1])
+
+
+# ---------------------------------------------------------------- guarantee
+def test_regression_prob_known_values():
+    u = InferenceUncertainty(
+        y_hat=jnp.asarray(0.0), mean=jnp.asarray(0.0), std=jnp.asarray(1.0),
+        probs=jnp.zeros((0,)), samples=jnp.zeros((4,)),
+    )
+    # P(|N(0,1)| <= 1.96) ~ 0.95
+    assert abs(float(regression_prob(u, jnp.asarray(1.96))) - 0.95) < 0.005
+    prob, ok = satisfied(u, 1.96, 0.94, "regression")
+    assert bool(ok)
+
+
+def test_guarantee_degenerate_sigma():
+    u = InferenceUncertainty(
+        y_hat=jnp.asarray(1.0), mean=jnp.asarray(1.0), std=jnp.asarray(0.0),
+        probs=jnp.zeros((0,)), samples=jnp.zeros((4,)),
+    )
+    assert float(regression_prob(u, jnp.asarray(0.1))) == 1.0
+
+
+# ---------------------------------------------------------------- planner
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(2, 8),
+    seed=st.integers(0, 1000),
+)
+def test_direction_is_lfp_argmax(k, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.random(k), jnp.float32)
+    n = jnp.asarray(rng.integers(100, 1000, k), jnp.int32)
+    z = jnp.asarray(rng.integers(1, 99, k), jnp.int32)
+    d = np.asarray(direction(idx, z, n))
+    assert d.sum() == 1
+    score = np.asarray(idx) / np.asarray(n - z)
+    assert d[np.argmax(score)] == 1
+
+
+def test_direction_excludes_exhausted():
+    idx = jnp.asarray([10.0, 0.1])
+    n = jnp.asarray([100, 100])
+    z = jnp.asarray([100, 50])  # feature 0 exhausted despite high importance
+    d = np.asarray(direction(idx, z, n))
+    assert d[0] == 0 and d[1] == 1
+
+
+def test_plan_monotone_and_clipped():
+    n = jnp.asarray([100, 200])
+    z = initial_plan(n, 0.05)
+    assert np.all(np.asarray(z) >= 2)
+    step = gamma_abs(n, 0.5)
+    z2 = next_plan(z, jnp.asarray([1, 0]), step, n)
+    assert int(z2[0]) == 100  # clipped at N
+    assert int(z2[1]) == int(z[1])

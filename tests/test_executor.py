@@ -1,0 +1,112 @@
+"""End-to-end Biathlon executor behaviour (the paper's core loop)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import BiathlonConfig, HostLoopExecutor, run_exact
+from repro.core.executor_fused import build_fused_executor
+from repro.core.pipeline import AggFeature, Pipeline
+from repro.data.store import ColumnStore, build_table
+from repro.models.tabular import LinearRegression
+
+
+@pytest.fixture(scope="module")
+def toy():
+    rng = np.random.default_rng(0)
+    G, R = 30, 3000
+    gid = np.repeat(np.arange(G), R)
+    mu = rng.normal(0, 5, G)
+    vals = mu[gid] + rng.normal(0, 2.0, G * R)
+    aux = 0.5 * mu[gid] + rng.normal(0, 1.0, G * R)
+    store = ColumnStore().add("t", build_table({"v": vals, "a": aux}, gid, seed=1))
+    X = np.stack([mu, 0.5 * mu], axis=1)
+    y = 3 * X[:, 0] + 1.0 * X[:, 1] + rng.normal(0, 0.01, G)
+    lr = LinearRegression().fit(X, y)
+    pipe = Pipeline(
+        name="toy",
+        agg_features=[
+            AggFeature("avg_v", "t", "v", "avg", "g"),
+            AggFeature("avg_a", "t", "a", "avg", "g"),
+        ],
+        exact_features=[],
+        model=lr,
+        task="regression",
+        scaler_mean=np.zeros(2, np.float32),
+        scaler_scale=np.ones(2, np.float32),
+        delta_default=0.5,
+    )
+    return store, pipe
+
+
+def test_guarantee_holds_statistically(toy):
+    store, pipe = toy
+    ex = HostLoopExecutor(store, BiathlonConfig(m=400, m_sobol=96))
+    hits = 0
+    n_req = 8
+    for i in range(n_req):
+        req = {"g": i}
+        y_exact, _ = run_exact(store, pipe, req)
+        r = ex.run(pipe, req, jax.random.PRNGKey(i))
+        assert r.satisfied
+        if abs(r.y_hat - y_exact) <= 0.5:
+            hits += 1
+    # tau = 0.95 with slack for small n
+    assert hits >= n_req - 1
+
+
+def test_sample_fraction_small(toy):
+    store, pipe = toy
+    ex = HostLoopExecutor(store, BiathlonConfig(m=400, m_sobol=96))
+    r = ex.run(pipe, {"g": 3}, jax.random.PRNGKey(42))
+    assert r.sample_fraction < 0.5
+    assert r.iters <= 10
+
+
+def test_tighter_delta_needs_more_samples(toy):
+    store, pipe = toy
+    loose = HostLoopExecutor(store, BiathlonConfig(delta=2.0, m=400, m_sobol=96))
+    tight = HostLoopExecutor(store, BiathlonConfig(delta=0.08, m=400, m_sobol=96))
+    rl = loose.run(pipe, {"g": 5}, jax.random.PRNGKey(0))
+    rt = tight.run(pipe, {"g": 5}, jax.random.PRNGKey(0))
+    assert rt.samples_used >= rl.samples_used
+
+
+def test_worst_case_falls_back_to_exact(toy):
+    """With an impossible delta=0 the loop must exhaust to exact features."""
+    store, pipe = toy
+    ex = HostLoopExecutor(store, BiathlonConfig(delta=0.0, m=128, m_sobol=64, max_iters=200))
+    r = ex.run(pipe, {"g": 1}, jax.random.PRNGKey(0))
+    # all features exact -> deterministic model -> satisfied with prob 1
+    assert r.satisfied
+    assert np.all(r.z == r.n)
+    y_exact, _ = run_exact(store, pipe, {"g": 1})
+    assert abs(r.y_hat - y_exact) < 1e-3
+
+
+def test_fused_matches_host(toy):
+    store, pipe = toy
+    cfg = BiathlonConfig(m=400, m_sobol=96)
+    host = HostLoopExecutor(store, cfg)
+    model = pipe.model
+
+    def model_fn(aggs, exact):
+        return model.predict(aggs)
+
+    fused = build_fused_executor(
+        model_fn, k=2, task="regression", m=cfg.m, m_sobol=cfg.m_sobol,
+        alpha=cfg.alpha, gamma=cfg.gamma, tau=cfg.tau,
+    )
+    req = {"g": 7}
+    n = pipe.group_sizes(store, req)
+    cap = 4096
+    vals, sizes = store.request_buffers(pipe.agg_specs(req), cap)
+    res = fused(
+        vals, jnp.asarray(n, jnp.int32), jnp.asarray([0, 0], jnp.int32),
+        jnp.asarray(0.5, jnp.float32), jnp.zeros((0,), jnp.float32),
+    )
+    rh = host.run(pipe, req, jax.random.PRNGKey(3))
+    y_exact, _ = run_exact(store, pipe, req)
+    assert abs(float(res.y_hat) - y_exact) <= 0.5 + 1e-6
+    assert abs(rh.y_hat - y_exact) <= 0.5 + 1e-6
+    assert float(res.prob) >= cfg.tau or int(res.samples_used) == int(n.sum())

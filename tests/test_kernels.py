@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qmc import sobol_uint32
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.sampled_agg.ref import sampled_moments_ref
+from repro.kernels.sampled_agg.sampled_agg import sampled_moments
+from repro.kernels.sobol.sobol import sobol_points
+from repro.kernels.tree_qmc.tree_qmc import ensemble_sum
+from repro.models.lm.layers import attention_full
+from repro.models.tabular.trees import GradientBoosting, ensemble_predict_sum
+
+
+# ------------------------------------------------------------- sampled_agg
+@pytest.mark.parametrize("k,cap,block_k,block_c", [
+    (4, 512, 4, 128),
+    (8, 2048, 8, 1024),
+    (16, 1024, 4, 256),
+    (2, 64, 2, 64),
+])
+def test_sampled_agg_sweep(k, cap, block_k, block_c):
+    key = jax.random.PRNGKey(k * cap)
+    vals = jax.random.normal(key, (k, cap)) * 3.0 + 1.0
+    z = jax.random.randint(jax.random.PRNGKey(1), (k,), 0, cap + 1)
+    got = sampled_moments(vals, z, block_k=block_k, block_c=block_c, interpret=True)
+    want = sampled_moments_ref(vals, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=1e-3)
+
+
+def test_sampled_agg_dtype_bf16_input():
+    vals = (jax.random.normal(jax.random.PRNGKey(0), (4, 256))).astype(jnp.bfloat16)
+    z = jnp.asarray([0, 17, 128, 256], jnp.int32)
+    got = sampled_moments(vals.astype(jnp.float32), z, interpret=True)
+    want = sampled_moments_ref(vals.astype(jnp.float32), z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=1e-3)
+
+
+# ------------------------------------------------------------------ sobol
+@pytest.mark.parametrize("m,d,block_m", [(256, 4, 64), (512, 21, 256), (128, 1, 128)])
+def test_sobol_kernel_bit_exact(m, d, block_m):
+    got = sobol_points(m, d, 0, block_m=block_m, interpret=True)
+    want = sobol_uint32(m, d, 0)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_sobol_kernel_skip():
+    got = sobol_points(128, 6, skip=64, interpret=True)
+    want = sobol_uint32(128, 6, 64)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# --------------------------------------------------------------- tree_qmc
+@pytest.fixture(scope="module")
+def small_ensemble():
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (1500, 5)).astype(np.float32)
+    y = X[:, 0] * 2 + np.sin(X[:, 1] * 3)
+    gb = GradientBoosting(n_trees=12, max_depth=4).fit(X, y)
+    return gb.ensemble
+
+
+@pytest.mark.parametrize("m,block_m,block_t", [(256, 64, 4), (512, 256, 12), (128, 128, 6)])
+def test_tree_qmc_sweep(small_ensemble, m, block_m, block_t):
+    e = small_ensemble
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, 5), jnp.float32)
+    got = ensemble_sum(
+        e.feature, e.threshold, e.left, e.right, e.value, x,
+        depth=e.depth, block_m=block_m, block_t=block_t, interpret=True,
+    )
+    want = ensemble_predict_sum(e, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,h,s,d,bq,bk", [
+    (1, 2, 128, 64, 64, 64),
+    (2, 1, 256, 32, 128, 128),
+    (1, 2, 256, 64, 128, 64),
+])
+def test_flash_attention_sweep(causal, b, h, s, d, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(s + d), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=True)
+    want = attention_full(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = attention_full(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
+    )

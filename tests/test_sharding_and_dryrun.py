@@ -1,0 +1,106 @@
+"""Sharding rules + dry-run plumbing (mesh-free parts; full cells run via
+``python -m repro.launch.dryrun`` which owns the 512-device env flag)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, cells, get_config
+from repro.launch.hlo_cost import analyze_hlo
+from repro.models.lm import LM
+from repro.models.lm.sharding import ShardingRules, param_pspecs
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_cell_applicability_matrix():
+    cs = cells()
+    assert len(cs) == 40
+    skipped = [(a, s) for a, s, ok, _ in cs if not ok]
+    # exactly the 8 full-attention long_500k cells skip
+    assert len(skipped) == 8
+    assert all(s == "long_500k" for _, s in skipped)
+    ok_long = [a for a, s, ok, _ in cs if ok and s == "long_500k"]
+    assert sorted(ok_long) == ["xlstm-1.3b", "zamba2-2.7b"]
+
+
+def test_param_pspecs_cover_all_leaves(mesh11):
+    for arch in ("qwen3-8b", "deepseek-v2-236b", "zamba2-2.7b", "xlstm-1.3b",
+                 "seamless-m4t-large-v2"):
+        cfg = get_config(arch).reduced()
+        model = LM(cfg)
+        shapes = model.init_shapes()
+        rules = ShardingRules(mesh11, cfg)
+        specs = param_pspecs(rules, shapes)
+        n_shapes = len(jax.tree.leaves(shapes))
+        n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+        assert n_shapes == n_specs, arch
+
+
+def test_divisibility_guard():
+    """granite KV heads (8) must fall back to replicated on a 16-way axis."""
+    mesh = jax.make_mesh((1, 16), ("data", "model"), devices=np.array(
+        [jax.devices()[0]] * 16
+    )) if False else None
+    # can't build a 16-device mesh on CPU here; check the rule logic directly
+    from repro.models.lm.sharding import _match_spec
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    cfg = get_config("granite-moe-1b-a400m")
+    rules = ShardingRules.__new__(ShardingRules)
+    object.__setattr__(rules, "mesh", FakeMesh())
+    object.__setattr__(rules, "cfg", cfg)
+    object.__setattr__(rules, "dp_axes", ("data",))
+    object.__setattr__(rules, "tp_axis", "model")
+    spec = _match_spec("/blocks/attn/wk", (24, 1024, 8, 64), rules)
+    assert spec == P(None, None, None, None)  # kv=8 not divisible -> replicated
+    spec_q = _match_spec("/blocks/attn/wq", (24, 1024, 16, 64), rules)
+    assert spec_q == P(None, None, "model", None)
+
+
+def test_input_specs_all_cells():
+    from repro.launch.dryrun import input_specs
+
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            cfg = get_config(arch)
+            ok, _ = cell_applicable(cfg, SHAPES[shape_name])
+            if not ok:
+                continue
+            specs = input_specs(arch, shape_name)
+            assert "tokens" in specs
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+def test_hlo_cost_trip_count_accounting():
+    def g(a, ws):
+        def body(x, w):
+            return jax.nn.relu(x @ w), None
+        out, _ = jax.lax.scan(body, a, ws)
+        return out
+
+    c = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((10, 64, 64), jnp.float32),
+    ).compile()
+    hc = analyze_hlo(c.as_text(), 1)
+    assert hc.flops == 10 * 2 * 64**3
+
+
+def test_hlo_cost_handles_tuple_types():
+    def g(a):
+        def body(c, _):
+            return (c[0] @ c[0], c[1] + 1), None
+        (out, cnt), _ = jax.lax.scan(body, (a, jnp.zeros((), jnp.int32)), None, length=5)
+        return out, cnt
+
+    c = jax.jit(g).lower(jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    hc = analyze_hlo(c.as_text(), 1)
+    assert hc.flops == 5 * 2 * 32**3
