@@ -1,7 +1,9 @@
-"""Shared benchmark infrastructure: bundle cache, warmup, CSV rows."""
+"""Shared benchmark infrastructure: bundle cache, warmup, CSV rows, JSON log."""
 from __future__ import annotations
 
 import functools
+import json
+import pathlib
 import time
 
 import jax
@@ -86,6 +88,40 @@ def accuracy(b, y_hats: np.ndarray, labels: np.ndarray | None = None) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# --------------------------------------------------------------------------
+# Machine-readable perf trajectory (tracked across PRs)
+# --------------------------------------------------------------------------
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused.json"
+
+
+def write_bench_json(section: str, payload: dict, path: str | None = None) -> None:
+    """Merge ``payload`` under ``section`` in BENCH_fused.json at the repo root.
+
+    Sections are overwritten wholesale; other sections are preserved, so
+    individual benchmarks can update their slice independently.
+    """
+    p = pathlib.Path(path) if path else BENCH_JSON
+    data: dict = {}
+    if p.exists():
+        try:
+            data = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data[section] = payload
+    p.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+
+
+def latency_stats(seconds: list[float] | np.ndarray) -> dict:
+    """mean/p50/p99 in microseconds — the BENCH_fused.json latency contract."""
+    t = np.asarray(seconds, np.float64) * 1e6
+    return {
+        "mean_us": float(t.mean()),
+        "p50_us": float(np.percentile(t, 50)),
+        "p99_us": float(np.percentile(t, 99)),
+        "n": int(t.size),
+    }
 
 
 def timed(fn, *args, reps=3, **kw):

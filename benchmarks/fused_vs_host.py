@@ -3,41 +3,92 @@
 Measures the serving-side optimization recorded in EXPERIMENTS.md §Perf:
 one XLA program per request (lax.while_loop, prefix-masked buffers) vs the
 host-driven feedback loop with its per-iteration dispatch + D2H syncs.
+
+Besides the CSV rows, writes mean/p50/p99 latency and the per-iteration
+model-row counts (pre-fusion three-dispatch body vs the single megabatch)
+to ``BENCH_fused.json`` at the repo root so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import DEFAULT_CFG, bundle, csv_row
+from benchmarks.common import (
+    DEFAULT_CFG,
+    bundle,
+    csv_row,
+    latency_stats,
+    write_bench_json,
+)
 from repro.core.executor import BiathlonConfig
+from repro.core.executor_fused import fused_rows_per_iteration
+from repro.data.store import bucket_size
 from repro.serving import BiathlonServer
 
 PIPES = ("bearing_imbalance", "tick_price", "turbofan")
 
 
+def model_rows_per_iteration(k: int, m: int, m_sobol: int) -> dict:
+    """Model rows the while-loop body evaluates, before vs after fusion.
+
+    Before: two AMI evaluations, each two model_fn calls (m QMC rows + the
+    1-row point estimate), plus a separate Saltelli batch — five model_fn
+    calls.  After: ONE call on the concatenated megabatch.
+    """
+    sobol_rows = (k + 2) * m_sobol
+    return {
+        "before": 2 * (m + 1) + sobol_rows,
+        "after": fused_rows_per_iteration(k, m, m_sobol),
+        "before_dispatches": 5,
+        "after_dispatches": 1,
+        "sobol_rows": sobol_rows,
+    }
+
+
 def run(pipelines=PIPES) -> list[str]:
     out = []
+    cfg = BiathlonConfig(**DEFAULT_CFG)
+    payload: dict = {
+        "config": {"m": cfg.m, "m_sobol": cfg.m_sobol, "tau": cfg.tau},
+        "pipelines": {},
+    }
     for name in pipelines:
         b = bundle(name)
-        cfg = BiathlonConfig(**DEFAULT_CFG)
         res = {}
+        # one warm request per distinct cap bucket (serving is steady-state:
+        # ≤ log2(max_cap) compiles ever, paid once)
+        bucket_reps = {}
+        for req in b.requests:
+            n_max = int(b.pipeline.group_sizes(b.store, req).max())
+            bucket_reps.setdefault(bucket_size(n_max), req)
         for mode in ("host", "fused"):
             srv = BiathlonServer(b, cfg, mode=mode)
-            srv.serve(b.requests[0])  # warm / compile
+            for req in bucket_reps.values():
+                srv.serve(req)
             stats = srv.serve_all(b.requests, compare_exact=(mode == "host"))
-            lat = np.mean(stats.latencies)
             res[mode] = dict(
-                lat=lat,
-                frac=np.mean(stats.sample_fracs),
-                iters=np.mean(stats.iters),
+                latency=latency_stats(stats.latencies),
+                frac=float(np.mean(stats.sample_fracs)),
+                iters=float(np.mean(stats.iters)),
             )
+        rows = model_rows_per_iteration(b.pipeline.k, cfg.m, cfg.m_sobol)
+        speedup = res["host"]["latency"]["mean_us"] / res["fused"]["latency"]["mean_us"]
+        payload["pipelines"][name] = {
+            "k": b.pipeline.k,
+            "model_rows_per_iter": rows,
+            "host": res["host"],
+            "fused": res["fused"],
+            "speedup_vs_host": speedup,
+        }
         out.append(
             csv_row(
                 f"perf/fused_vs_host/{name}",
-                res["fused"]["lat"] * 1e6,
-                f"host_us={res['host']['lat']*1e6:.0f};"
-                f"speedup={res['host']['lat']/res['fused']['lat']:.2f};"
+                res["fused"]["latency"]["mean_us"],
+                f"host_us={res['host']['latency']['mean_us']:.0f};"
+                f"speedup={speedup:.2f};"
+                f"rows_per_iter={rows['before']}->{rows['after']};"
                 f"frac_host={res['host']['frac']:.3f};frac_fused={res['fused']['frac']:.3f}",
             )
         )
+    write_bench_json("fused_vs_host", payload)
     return out

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, timed
+from benchmarks.common import csv_row, timed, write_bench_json
 from repro.core.qmc import sobol_uint32
 from repro.kernels.sampled_agg.ref import sampled_moments_ref
 from repro.models.tabular.trees import GradientBoosting, ensemble_predict_sum
@@ -16,17 +16,30 @@ from repro.models.lm.layers import attention_blockwise, attention_full
 
 def run() -> list[str]:
     out = []
+    micro: dict = {}
     # sampled moments: k=16 features x 64k rows
     vals = jax.random.normal(jax.random.PRNGKey(0), (16, 65536))
     z = jnp.full((16,), 32768, jnp.int32)
     f = jax.jit(sampled_moments_ref)
     us, _ = timed(lambda: jax.block_until_ready(f(vals, z)))
     out.append(csv_row("kernel/sampled_moments_16x64k", us, "oracle_jit"))
+    micro["sampled_moments_16x64k_us"] = us
+
+    # AFC estimates (moments + estimator tail), the fused loop's per-iter cost
+    from repro.kernels.sampled_agg.ops import masked_estimates
+
+    ids = jnp.zeros((16,), jnp.int32)
+    n = jnp.full((16,), 65536, jnp.int32)
+    g_est = jax.jit(lambda v, zz: masked_estimates(v, zz, n, ids, use_kernel=False))
+    us, _ = timed(lambda: jax.block_until_ready(g_est(vals, z)))
+    out.append(csv_row("kernel/afc_estimates_16x64k", us, "oracle_jit"))
+    micro["afc_estimates_16x64k_us"] = us
 
     # sobol generation: 1000 x 21 (paper default m, max k)
     g = jax.jit(lambda: sobol_uint32(1024, 21))
     us, _ = timed(lambda: jax.block_until_ready(g()))
     out.append(csv_row("kernel/sobol_1024x21", us, "oracle_jit"))
+    micro["sobol_1024x21_us"] = us
 
     # tree ensemble over QMC batch: 60 trees depth 5, m(k+2)=11.5k rows
     rng = np.random.default_rng(0)
@@ -36,6 +49,7 @@ def run() -> list[str]:
     t = jax.jit(lambda x: ensemble_predict_sum(gb.ensemble, x))
     us, _ = timed(lambda: jax.block_until_ready(t(xq)))
     out.append(csv_row("kernel/tree_qmc_60x11520", us, "oracle_jit"))
+    micro["tree_qmc_60x11520_us"] = us
 
     # blockwise vs full attention (the XLA fallback pair), 2x8x2048x64
     q = jax.random.normal(jax.random.PRNGKey(1), (2, 2048, 8, 64), jnp.float32)
@@ -46,4 +60,7 @@ def run() -> list[str]:
     out.append(
         csv_row("kernel/attention_2k_blockwise_vs_full", us_b, f"full_us={us_f:.0f}")
     )
+    micro["attention_2k_blockwise_us"] = us_b
+    micro["attention_2k_full_us"] = us_f
+    write_bench_json("kernel_micro", micro)
     return out

@@ -11,16 +11,37 @@ The fused variant expresses the iterate-until-guaranteed loop as a
 
 * sample growth is a *monotone prefix mask* over pre-gathered, pre-permuted
   (k, cap) buffers — the plan z is data, not shape;
-* AFC = masked-moment estimators (the sampled_agg kernel's math);
-* AMI + Sobol indices reuse one fused QMC evaluation batch of
-  m x (k + 2) rows per iteration;
+* AFC = one-pass power-sum moments (the Pallas ``sampled_agg`` kernel on
+  TPU, its jnp oracle elsewhere) turned into (value, sigma) with
+  finite-population correction;
+* AMI + Sobol indices share ONE fused QMC evaluation megabatch: the m AMI
+  rows, the single point-estimate row, and the (k+2)·m_sobol Saltelli
+  A/B/AB rows are concatenated and evaluated with a single ``model_fn``
+  call per planner iteration — ``m + 1 + (k+2)·m_sobol`` model rows,
+  sliced afterwards for the Eq. 1 guarantee check and the main-effect
+  indices (the Saltelli-style model-call amortization);
+* the loop state carries ``(z, iter, y_hat, prob, indices)`` so each
+  iteration steps the plan with the *previous* evaluation's indices and
+  then evaluates the new plan exactly once — no duplicate pre-step call;
+* the initial plan gets a cheap AMI-only dispatch (m+1 rows); its Sobol
+  block runs under ``lax.cond`` only when the guarantee fails at z⁰, so
+  immediately-satisfied requests (the common case at the paper's α) never
+  pay Saltelli rows — in the single-request path.  Under ``vmap`` (batched
+  serving) a batched predicate executes both cond branches, so admission
+  batches always pay the init Sobol block;
 * the loop condition is the Eq. 1 guarantee check.
 
 Restrictions vs the host loop (documented): parametric aggregates only
 (SUM/COUNT/AVG/VAR/STD — bootstrap resampling for MEDIAN needs per-iteration
 RNG shapes that stay host-side), and the per-request buffer is capped at
 ``cap`` rows (the guarantee's worst case degrades to exact-over-cap).
-Batched serving vmaps this executor over concurrent requests.
+Batched serving vmaps this executor over concurrent requests with
+power-of-two bucketed caps (serving/batched.py).
+
+Per-iteration cost model (EXPERIMENTS.md §Perf): one model dispatch of
+``m + 1 + (k+2)·m_sobol`` rows, one AFC moments pass, zero host round
+trips — vs the pre-fusion body's three dispatches totalling
+``2·(m+1) + (k+2)·m_sobol`` rows.
 """
 from __future__ import annotations
 
@@ -33,10 +54,11 @@ import jax.numpy as jnp
 from repro.core.planner import direction, next_plan
 from repro.core.propagation import qmc_uniforms
 from repro.core.qmc import uniform_to_normal
+from repro.kernels.sampled_agg.ops import masked_estimates
 
 f32 = jnp.float32
 
-__all__ = ["FusedResult", "build_fused_executor"]
+__all__ = ["FusedResult", "build_fused_executor", "fused_rows_per_iteration"]
 
 
 class FusedResult(NamedTuple):
@@ -47,7 +69,9 @@ class FusedResult(NamedTuple):
     samples_used: jnp.ndarray
 
 
-from repro.data.aggregates import masked_estimates_batch as _masked_estimates  # noqa: E402
+def fused_rows_per_iteration(k: int, m: int, m_sobol: int) -> int:
+    """Model rows evaluated per planner iteration (the single megabatch)."""
+    return m + 1 + (k + 2) * m_sobol
 
 
 def build_fused_executor(
@@ -62,6 +86,7 @@ def build_fused_executor(
     gamma: float = 0.01,
     tau: float = 0.95,
     max_iters: int = 32,
+    afc_backend: str = "auto",
 ):
     """Returns jit-able ``run(vals (k,cap), n (k,), agg_ids (k,), delta) -> FusedResult``.
 
@@ -69,24 +94,22 @@ def build_fused_executor(
     values or class ids); must be jittable — tabular models and LM heads both
     qualify.  ``exact`` carries the request's exactly-computed features so a
     single compiled executor serves every request of the pipeline.
+
+    ``model_fn`` is invoked exactly ONCE per planner iteration, on a
+    ``(m + 1 + (k+2)*m_sobol, k)`` megabatch (see module docstring).
+
+    ``afc_backend``: "auto" routes the AFC moments pass through the Pallas
+    ``sampled_moments`` kernel on TPU and the jnp oracle elsewhere;
+    "kernel" forces the kernel (interpret-mode fallback off-TPU — correctness
+    testing, not speed); "ref" forces the oracle.
     """
+    use_kernel = {"auto": None, "kernel": True, "ref": False}[afc_backend]
 
     u_ami = qmc_uniforms(m, k)                       # (m, k) static
     u_sob = qmc_uniforms(m_sobol, 2 * k, None)       # (m_sobol, 2k)
 
     def sample_rows(value, sigma, u):
         return value[None, :] + sigma[None, :] * uniform_to_normal(u)
-
-    def ami(value, sigma, exact):
-        x = sample_rows(value, sigma, u_ami)
-        y = model_fn(x, exact).astype(f32)
-        y_hat = model_fn(value[None, :], exact).astype(f32).reshape(())
-        if task == "regression":
-            y_bar = jnp.mean(y)
-            sd = jnp.sqrt(jnp.mean((y - y_bar) ** 2))
-            return y_hat, y_bar, sd
-        probs = jnp.bincount(y.astype(jnp.int32), length=n_classes).astype(f32) / m
-        return y_hat, probs[y_hat.astype(jnp.int32)], jnp.zeros((), f32)
 
     def guarantee_prob(y_hat, mean, sd, delta):
         if task == "classification":
@@ -97,13 +120,8 @@ def build_fused_executor(
         prob = phi((delta - bias) / safe) - phi((-delta - bias) / safe)
         return jnp.where(sd <= 1e-12, (jnp.abs(bias) <= delta).astype(f32), prob)
 
-    def sobol_indices(value, sigma, y_hat, exact):
-        ua, ub = u_sob[:, :k], u_sob[:, k:]
-        xa = sample_rows(value, sigma, ua)
-        xb = sample_rows(value, sigma, ub)
-        eye = jnp.eye(k, dtype=bool)
-        xab = jnp.where(eye[:, None, :], xb[None], xa[None]).reshape(k * m_sobol, k)
-        f_all = model_fn(jnp.concatenate([xa, xb, xab], 0), exact).astype(f32)
+    def sobol_from_outputs(f_all, y_hat):
+        """Main-effect indices from the pre-evaluated Saltelli block."""
         if task == "classification":
             f_all = (f_all.astype(jnp.int32) == y_hat.astype(jnp.int32)).astype(f32)
         f_all = f_all - jnp.mean(f_all)  # center (see sobol_indices.py)
@@ -111,7 +129,9 @@ def build_fused_executor(
         fab = f_all[2 * m_sobol :].reshape(k, m_sobol)
         var_y = jnp.var(f_all)
         v_j = jnp.mean(fb[None] * (fab - fa[None]), axis=1)
-        return jnp.where(var_y > 1e-12, jnp.clip(v_j / jnp.maximum(var_y, 1e-12), 0, 1), 0.0)
+        return jnp.where(
+            var_y > 1e-12, jnp.clip(v_j / jnp.maximum(var_y, 1e-12), 0, 1), 0.0
+        )
 
     @jax.jit
     def run(vals, n, agg_ids, delta, exact) -> FusedResult:
@@ -124,28 +144,82 @@ def build_fused_executor(
             jnp.ceil(gamma * jnp.sum(n).astype(f32)).astype(jnp.int32), 1
         )
 
+        def ami_prob(y, y_hat):
+            """Eq. 1 guarantee probability from the AMI output slice."""
+            if task == "regression":
+                y_bar = jnp.mean(y)
+                sd = jnp.sqrt(jnp.mean((y - y_bar) ** 2))
+                return guarantee_prob(y_hat, y_bar, sd, delta)
+            probs = (
+                jnp.bincount(y.astype(jnp.int32), length=n_classes).astype(f32) / m
+            )
+            return probs[y_hat.astype(jnp.int32)]
+
+        def sobol_rows(value, sigma):
+            """Saltelli A/B/AB block: ((k+2)*m_sobol, k)."""
+            ua, ub = u_sob[:, :k], u_sob[:, k:]
+            xa = sample_rows(value, sigma, ua)
+            xb = sample_rows(value, sigma, ub)
+            eye = jnp.eye(k, dtype=bool)
+            xab = jnp.where(eye[:, None, :], xb[None], xa[None]).reshape(
+                k * m_sobol, k
+            )
+            return jnp.concatenate([xa, xb, xab], 0)
+
         def evaluate(z):
-            value, sigma = _masked_estimates(vals, z, n, agg_ids)
-            y_hat, mean, sd = ami(value, sigma, exact)
-            prob = guarantee_prob(y_hat, mean, sd, delta)
-            return value, sigma, y_hat, prob
+            """AFC + AMI + Sobol via ONE model dispatch at plan z.
+
+            Rows: [AMI (m,k) | point estimate (1,k) | Saltelli A/B/AB
+            ((k+2)*m_sobol, k)] -> slice outputs for the guarantee check and
+            the main-effect indices.
+            """
+            value, sigma = masked_estimates(
+                vals, z, n, agg_ids, use_kernel=use_kernel
+            )
+            x_ami = sample_rows(value, sigma, u_ami)
+            batch = jnp.concatenate(
+                [x_ami, value[None, :], sobol_rows(value, sigma)], 0
+            )
+            y_all = model_fn(batch, exact).astype(f32)
+
+            y_hat = y_all[m]
+            prob = ami_prob(y_all[:m], y_hat)
+            idx = sobol_from_outputs(y_all[m + 1 :], y_hat)
+            return y_hat, prob, idx
 
         def cond(state):
-            z, it, y_hat, prob = state
+            z, it, y_hat, prob, idx = state
             return (prob < tau) & (it < max_iters) & jnp.any(z < n)
 
         def body(state):
-            z, it, _, _ = state
-            value, sigma, y_hat, _ = evaluate(z)
-            idx = sobol_indices(value, sigma, y_hat, exact)
+            z, it, _, _, idx = state
             d = direction(idx, z, n)
             z = next_plan(z, d, step, n)
-            _, _, y_hat, prob = evaluate(z)
-            return (z, it + 1, y_hat, prob)
+            y_hat, prob, idx = evaluate(z)
+            return (z, it + 1, y_hat, prob, idx)
 
-        _, _, y_hat0, prob0 = evaluate(z0)
-        z, iters, y_hat, prob = jax.lax.while_loop(
-            cond, body, (z0, jnp.zeros((), jnp.int32), y_hat0, prob0)
+        # Initial plan: AMI-only dispatch (m+1 rows).  The Saltelli block is
+        # only evaluated — via lax.cond, so immediately-guaranteed requests
+        # skip its cost entirely — when the loop is actually entered.
+        # (Under vmap the cond becomes a select and both branches run.)
+        value0, sigma0 = masked_estimates(
+            vals, z0, n, agg_ids, use_kernel=use_kernel
+        )
+        y0_all = model_fn(
+            jnp.concatenate([sample_rows(value0, sigma0, u_ami), value0[None, :]], 0),
+            exact,
+        ).astype(f32)
+        y_hat0 = y0_all[m]
+        prob0 = ami_prob(y0_all[:m], y_hat0)
+        idx0 = jax.lax.cond(
+            (prob0 < tau) & jnp.any(z0 < n) & (max_iters > 0),
+            lambda: sobol_from_outputs(
+                model_fn(sobol_rows(value0, sigma0), exact).astype(f32), y_hat0
+            ),
+            lambda: jnp.zeros((k,), f32),
+        )
+        z, iters, y_hat, prob, _ = jax.lax.while_loop(
+            cond, body, (z0, jnp.zeros((), jnp.int32), y_hat0, prob0, idx0)
         )
         return FusedResult(
             y_hat=y_hat,

@@ -23,7 +23,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AggResult", "estimate", "exact_value", "PARAMETRIC_AGGS", "HOLISTIC_AGGS", "AGG_IDS", "masked_estimates_batch"]
+__all__ = [
+    "AggResult",
+    "estimate",
+    "exact_value",
+    "PARAMETRIC_AGGS",
+    "HOLISTIC_AGGS",
+    "AGG_IDS",
+    "masked_estimates_batch",
+    "estimates_from_power_sums",
+]
 
 PARAMETRIC_AGGS = ("sum", "count", "avg", "var", "std")
 HOLISTIC_AGGS = ("median", "quantile")
@@ -175,23 +184,13 @@ def exact_value(
 AGG_IDS = {"avg": 0, "sum": 1, "count": 2, "var": 3, "std": 4}
 
 
-@jax.jit
-def masked_estimates_batch(vals, z, n, agg_ids):
-    """Vectorized parametric estimators over (k, cap) prefix-masked buffers.
+def _select_value_sigma(mean, m2, m4, zf, z, n, agg_ids):
+    """Shared tail of the batched parametric estimators.
 
-    agg_ids: (k,) int32 per AGG_IDS.  Returns (value, sigma) each (k,).
-    One XLA call replaces k per-feature ``estimate`` dispatches — the AFC
-    batching optimization recorded in EXPERIMENTS.md §Perf (serving).
+    Inputs are per-feature centered moments (biased m2/m4 over zf samples);
+    applies the unbiasing, FPC, delta-method σ's and the AGG_IDS select.
     """
-    k, cap = vals.shape
-    f32 = jnp.float32
-    mask = (jnp.arange(cap)[None, :] < z[:, None]).astype(f32)
-    zf = jnp.maximum(z.astype(f32), 1.0)
-    nf = n.astype(f32)
-    mean = jnp.sum(vals * mask, axis=1) / zf
-    d = (vals - mean[:, None]) * mask
-    m2 = jnp.sum(d**2, axis=1) / zf
-    m4 = jnp.sum(d**4, axis=1) / zf
+    nf = n.astype(jnp.float32)
     s2 = m2 * zf / jnp.maximum(zf - 1.0, 1.0)
     fpc = jnp.sqrt(jnp.clip((nf - zf) / jnp.maximum(nf - 1.0, 1.0), 0.0, 1.0))
     se_mean = jnp.sqrt(jnp.maximum(s2, 0.0) / zf) * fpc
@@ -211,3 +210,59 @@ def masked_estimates_batch(vals, z, n, agg_ids):
     )
     sigma = jnp.where(z >= n, 0.0, sigma)
     return value, sigma
+
+
+@jax.jit
+def masked_estimates_batch(vals, z, n, agg_ids):
+    """Vectorized parametric estimators over (k, cap) prefix-masked buffers.
+
+    agg_ids: (k,) int32 per AGG_IDS.  Returns (value, sigma) each (k,).
+    One XLA call replaces k per-feature ``estimate`` dispatches — the AFC
+    batching optimization recorded in EXPERIMENTS.md §Perf (serving).
+    """
+    k, cap = vals.shape
+    f32 = jnp.float32
+    mask = (jnp.arange(cap)[None, :] < z[:, None]).astype(f32)
+    zf = jnp.maximum(z.astype(f32), 1.0)
+    mean = jnp.sum(vals * mask, axis=1) / zf
+    d = (vals - mean[:, None]) * mask
+    m2 = jnp.sum(d**2, axis=1) / zf
+    m4 = jnp.sum(d**4, axis=1) / zf
+    return _select_value_sigma(mean, m2, m4, zf, z, n, agg_ids)
+
+
+@jax.jit
+def estimates_from_power_sums(moments, z, n, agg_ids, shift=None):
+    """(value, sigma) from the sampled_agg kernel's power sums.
+
+    moments: (k, 5) [count, Σu, Σu², Σu³, Σu⁴] with ``u = v - shift`` over
+    the z-prefix (the Pallas ``sampled_moments`` kernel's output, or its ref
+    oracle; shift=None means the sums are of the raw values).  Centered
+    moments are shift-invariant, so they are recovered about the shifted
+    mean — accumulating about a shift near the data keeps the 4th-moment
+    cancellation at O(std⁴) instead of O(mean⁴).  Then applies the same
+    FPC/delta-method tail as :func:`masked_estimates_batch`, so the kernel
+    path and the jnp path are numerically interchangeable up to float32
+    rounding.
+    """
+    zf = jnp.maximum(moments[:, 0], 1.0)
+    r1 = moments[:, 1] / zf               # E[u^p] over the prefix
+    r2 = moments[:, 2] / zf
+    r3 = moments[:, 3] / zf
+    r4 = moments[:, 4] / zf
+    m2 = jnp.maximum(r2 - r1**2, 0.0)
+    m4 = jnp.maximum(
+        r4 - 4.0 * r1 * r3 + 6.0 * r1**2 * r2 - 3.0 * r1**4, 0.0
+    )
+    # A single sample has zero centered moments by definition, but the
+    # raw-minus-centered arithmetic leaves a float32 residual that σ would
+    # amplify (SUM multiplies se_mean by N) — zero it exactly.
+    m2 = jnp.where(zf <= 1.0, 0.0, m2)
+    m4 = jnp.where(zf <= 1.0, 0.0, m4)
+    if shift is None:
+        mean = r1
+    else:
+        # empty prefix: sums are all zero and the mean is 0 by convention
+        # (matching the masked oracle), not the arbitrary shift origin
+        mean = jnp.where(moments[:, 0] < 1.0, 0.0, r1 + shift)
+    return _select_value_sigma(mean, m2, m4, zf, z, n, agg_ids)

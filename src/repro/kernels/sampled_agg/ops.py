@@ -4,25 +4,62 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.data.aggregates import estimates_from_power_sums
 from repro.kernels.sampled_agg.ref import sampled_moments_ref
 from repro.kernels.sampled_agg.sampled_agg import sampled_moments
 
-__all__ = ["moments", "estimates_from_moments"]
+__all__ = ["moments", "estimates_from_moments", "masked_estimates"]
 
 
-def moments(vals: jnp.ndarray, z: jnp.ndarray, *, use_kernel: bool | None = None):
-    """(k, cap), (k,) -> (k, 4) [count, s1, s2, s3].
+def _resolve_backend(use_kernel: bool | None) -> bool:
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return use_kernel
+
+
+def moments(
+    vals: jnp.ndarray,
+    z: jnp.ndarray,
+    shift: jnp.ndarray | None = None,
+    *,
+    use_kernel: bool | None = None,
+):
+    """(k, cap), (k,) -> (k, 5) [count, s1, s2, s3, s4] of ``vals - shift``.
 
     use_kernel=None auto-selects: Pallas on TPU, oracle elsewhere (the
     interpret-mode kernel is for correctness tests, not speed).
     """
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if use_kernel:
+    if _resolve_backend(use_kernel):
         return sampled_moments(
-            vals, z, interpret=jax.default_backend() != "tpu"
+            vals, z, shift, interpret=jax.default_backend() != "tpu"
         )
-    return sampled_moments_ref(vals, z)
+    return sampled_moments_ref(vals, z, shift)
+
+
+def masked_estimates(
+    vals: jnp.ndarray,
+    z: jnp.ndarray,
+    n: jnp.ndarray,
+    agg_ids: jnp.ndarray,
+    *,
+    use_kernel: bool | None = None,
+):
+    """AFC in one call: kernel/oracle power sums -> (value, sigma) per feature.
+
+    This is the fused executor's per-iteration AFC stage: one pass over the
+    (k, cap) prefix-masked buffers (the Pallas ``sampled_moments`` kernel on
+    TPU, interpret-mode fallback for kernel testing, ref oracle on CPU), then
+    the parametric estimator tail with finite-population correction from
+    ``aggregates.estimates_from_power_sums``.
+
+    Sums are accumulated about each feature's first buffered sample so the
+    4th-moment cancellation stays at O(std⁴) even when |mean| >> std (the
+    VAR/STD σ's would otherwise collapse to zero in float32).
+    """
+    shift = vals[:, 0]
+    return estimates_from_power_sums(
+        moments(vals, z, shift, use_kernel=use_kernel), z, n, agg_ids, shift
+    )
 
 
 def estimates_from_moments(m: jnp.ndarray, n: jnp.ndarray):

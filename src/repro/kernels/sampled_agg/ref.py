@@ -6,30 +6,47 @@ sizes z (k,), compute per-feature streaming moments in ONE pass:
     count  = z
     sum    = sum of the first z values
     sum2   = sum of squares
-    sum4   = centered 4th power sum is NOT computed here (needs the mean);
-             instead we return raw power sums so the host can build any of
-             SUM / COUNT / AVG / VAR / STD estimators (aggregates.py).
+    sum3   = sum of cubes
+    sum4   = sum of 4th powers (centered moments need the mean, so the
+             kernel returns raw power sums; the host turns them into any of
+             SUM / COUNT / AVG / VAR / STD estimators *and* their error
+             stddevs — aggregates.estimates_from_power_sums).
 
 This mirrors the paper's AFC inner loop (§3.2): one scan over the sampled
-rows produces every parametric aggregate at once.
+rows produces every parametric aggregate at once, including the 4th-moment
+term the VAR/STD uncertainty estimators need.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["sampled_moments_ref"]
+__all__ = ["sampled_moments_ref", "N_MOMENTS"]
+
+N_MOMENTS = 5  # [count, s1, s2, s3, s4]
 
 
-def sampled_moments_ref(vals: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
-    """vals: (k, cap) f32; z: (k,) int32 -> (k, 4) [count, sum, sum2, sum3].
+def sampled_moments_ref(
+    vals: jnp.ndarray, z: jnp.ndarray, shift: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """vals: (k, cap) f32; z: (k,) int32 -> (k, 5) [count, s1, s2, s3, s4].
 
-    Raw power sums over the valid prefix; padding contributes zero.
+    Raw power sums of ``vals - shift`` over the valid prefix; padding
+    contributes zero.  ``shift`` (k,) is an arbitrary per-feature origin —
+    centered moments are shift-invariant, so accumulating about a value
+    near the data (e.g. the first buffered sample) avoids the float32
+    cancellation that raw 4th powers suffer when |mean| >> std.  None means
+    no shift (sums of the raw values).
     """
     k, cap = vals.shape
     mask = (jnp.arange(cap)[None, :] < z[:, None]).astype(jnp.float32)
-    v = vals.astype(jnp.float32) * mask
+    v = vals.astype(jnp.float32)
+    if shift is not None:
+        v = v - shift.astype(jnp.float32)[:, None]
+    v = v * mask
     count = jnp.sum(mask, axis=1)
+    v2 = v * v
     s1 = jnp.sum(v, axis=1)
-    s2 = jnp.sum(v * v, axis=1)
-    s3 = jnp.sum(v * v * v, axis=1)
-    return jnp.stack([count, s1, s2, s3], axis=1)
+    s2 = jnp.sum(v2, axis=1)
+    s3 = jnp.sum(v2 * v, axis=1)
+    s4 = jnp.sum(v2 * v2, axis=1)
+    return jnp.stack([count, s1, s2, s3, s4], axis=1)

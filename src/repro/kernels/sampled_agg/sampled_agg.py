@@ -5,7 +5,8 @@ The paper's AFC stage re-scans the sampled rows once per aggregate operator
 parametric aggregates into ONE pass: each grid step loads a (block_k,
 block_c) VMEM tile of the sample buffers, applies the prefix mask with an
 iota compare (branch-free — the mask IS the sample size), and accumulates
-four power sums per feature into a VMEM accumulator.
+five power sums per feature into a VMEM accumulator ([count, Σv, Σv², Σv³,
+Σv⁴] — the 4th power is what the VAR/STD error estimators need).
 
 Grid: (k_tiles, c_tiles) with c innermost so each feature row's accumulator
 stays resident in VMEM across its column tiles.
@@ -26,24 +27,27 @@ from jax.experimental import pallas as pl
 __all__ = ["sampled_moments"]
 
 
-def _kernel(z_ref, vals_ref, out_ref, *, block_c: int, cap: int):
+def _kernel(z_ref, shift_ref, vals_ref, out_ref, *, block_c: int):
     ci = pl.program_id(1)
     # (block_k, block_c) tile of sample values
     v = vals_ref[...].astype(jnp.float32)
     z = z_ref[...]  # (block_k,) int32 live sample sizes
+    shift = shift_ref[...]  # (block_k,) f32 per-feature accumulation origin
     col0 = ci * block_c
     cols = col0 + jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
     mask = (cols < z[:, None]).astype(jnp.float32)
-    v = v * mask
+    v = (v - shift[:, None]) * mask
+    v2 = v * v
     tile = jnp.stack(
         [
             jnp.sum(mask, axis=1),
             jnp.sum(v, axis=1),
-            jnp.sum(v * v, axis=1),
-            jnp.sum(v * v * v, axis=1),
+            jnp.sum(v2, axis=1),
+            jnp.sum(v2 * v, axis=1),
+            jnp.sum(v2 * v2, axis=1),
         ],
         axis=1,
-    )  # (block_k, 4)
+    )  # (block_k, 5)
 
     @pl.when(ci == 0)
     def _init():
@@ -56,25 +60,41 @@ def _kernel(z_ref, vals_ref, out_ref, *, block_c: int, cap: int):
 def sampled_moments(
     vals: jnp.ndarray,            # (k, cap) f32
     z: jnp.ndarray,               # (k,) int32
+    shift: jnp.ndarray | None = None,  # (k,) f32 accumulation origin
     *,
     block_k: int = 8,
     block_c: int = 1024,
     interpret: bool = True,       # CPU container: interpret; TPU: False
 ) -> jnp.ndarray:
-    """(k, 4) raw power sums [count, s1, s2, s3] over each valid prefix."""
+    """(k, 5) power sums [count, s1, s2, s3, s4] of ``vals - shift`` over
+    each valid prefix (see ref.py for the shift rationale; None = no shift).
+
+    Shapes need not divide the block sizes: inputs are zero-padded up to the
+    tile grid (padded rows carry z=0, so they contribute nothing) and the
+    output is sliced back to k rows.
+    """
     k, cap = vals.shape
+    if shift is None:
+        shift = jnp.zeros((k,), jnp.float32)
     block_k = min(block_k, k)
     block_c = min(block_c, cap)
-    assert k % block_k == 0 and cap % block_c == 0, (k, cap, block_k, block_c)
-    grid = (k // block_k, cap // block_c)
-    return pl.pallas_call(
-        functools.partial(_kernel, block_c=block_c, cap=cap),
+    kp = -(-k // block_k) * block_k
+    capp = -(-cap // block_c) * block_c
+    if (kp, capp) != (k, cap):
+        vals = jnp.pad(vals, ((0, kp - k), (0, capp - cap)))
+        z = jnp.pad(z, (0, kp - k))
+        shift = jnp.pad(shift, (0, kp - k))
+    grid = (kp // block_k, capp // block_c)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_c=block_c),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_k,), lambda i, j: (i,)),
+            pl.BlockSpec((block_k,), lambda i, j: (i,)),
             pl.BlockSpec((block_k, block_c), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((block_k, 4), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, 4), jnp.float32),
+        out_specs=pl.BlockSpec((block_k, 5), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, 5), jnp.float32),
         interpret=interpret,
-    )(z, vals)
+    )(z, shift.astype(jnp.float32), vals)
+    return out[:k]

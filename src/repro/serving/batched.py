@@ -8,6 +8,14 @@ batch satisfies Eq. 1 or exhausts — the standard continuous-batching trade:
 stragglers in a batch pay for each other, so admission batches should be
 sized to the arrival rate).
 
+Buffer caps are *bucketed per admission batch*: the (R, k, cap) gather pads
+to the next power of two above the BATCH's largest group, not the store-wide
+worst case, so a batch of small-group requests does proportionally small AFC
+work (power-of-two caps bound recompilation, the same trick
+``HostLoopExecutor`` uses for its bucketed shapes).  Each bucket gets its own
+compiled executor; ``straggler_report`` makes the batching trade measurable
+(per-request iterations vs the batch's shared iteration count).
+
 This is the throughput-serving mode a TPU deployment would run: one
 (R, k, cap) gather, one program, R guarantees.
 """
@@ -23,18 +31,47 @@ from repro.core.executor_fused import build_fused_executor
 from repro.data.aggregates import AGG_IDS
 from repro.data.store import bucket_size
 
-__all__ = ["BatchedFusedServer"]
+__all__ = ["BatchedFusedServer", "BatchResult", "straggler_report"]
 
 
 class BatchResult(NamedTuple):
     y_hat: np.ndarray
     prob: np.ndarray
-    iters: np.ndarray
+    iters: np.ndarray       # (R,) per-request planner iterations
     sample_frac: np.ndarray
+    batch_iters: int        # shared while_loop trip count = max(iters)
+    cap: int                # bucketed buffer cap used for this batch
+
+
+def straggler_report(res: BatchResult) -> dict:
+    """How much the admission batch paid for its slowest request.
+
+    ``wasted_iters[i]`` counts loop trips request i sat through after its own
+    guarantee was met (predicated no-ops that still burn compute in the
+    shared program); ``wasted_frac`` is their share of the batch's total
+    lane-iterations — the admission-sizing signal.
+    """
+    iters = np.asarray(res.iters)
+    wasted = res.batch_iters - iters
+    total = max(int(res.batch_iters) * len(iters), 1)
+    return {
+        "batch_iters": int(res.batch_iters),
+        "per_request_iters": iters,
+        "wasted_iters": wasted,
+        "wasted_frac": float(wasted.sum()) / total,
+        "straggler": int(np.argmax(iters)),
+        "cap": int(res.cap),
+    }
 
 
 class BatchedFusedServer:
-    """vmapped FusedExecutor over admission batches of requests."""
+    """vmapped FusedExecutor over admission batches of requests.
+
+    One compiled program per power-of-two cap bucket: the jit cache is keyed
+    by the gathered (R, k, cap) shapes, so bucketing caps (and keeping
+    admission batches at a fixed size) bounds the number of compilations
+    while letting small-group batches skip the store-wide worst-case padding.
+    """
 
     def __init__(self, bundle, config, batch_size: int = 8):
         self.bundle = bundle
@@ -57,20 +94,39 @@ class BatchedFusedServer:
                 full = (full - mean[None, :]) / scale[None, :]
             return model.predict(full)
 
-        run = build_fused_executor(
+        self._run = build_fused_executor(
             model_fn, k=p.k, task=p.task, n_classes=max(p.n_classes, 2),
             m=config.m, m_sobol=config.m_sobol, alpha=config.alpha,
             gamma=config.gamma, tau=config.tau, max_iters=config.max_iters,
         )
-        self._batched = jax.jit(jax.vmap(run))
+        # jit caches one executable per distinct (R, k, cap) input shape, so
+        # power-of-two cap bucketing alone bounds compilations; the set just
+        # makes the buckets observable.
+        self._batched = jax.jit(jax.vmap(self._run))
+        self._caps_seen: set[int] = set()
         self._agg_ids = jnp.asarray([AGG_IDS[f.agg] for f in p.agg_features], jnp.int32)
         max_n = max(
             bundle.store[f.table].group_size(g)
             for f in p.agg_features
             for g in bundle.store[f.table].group_ids
         )
-        self._cap = bucket_size(max_n)
+        self._max_cap = bucket_size(max_n)  # store-wide ceiling, not the default
 
+    # ------------------------------------------------------------------
+    @property
+    def compiled_buckets(self) -> list[int]:
+        """Cap buckets served so far (≤ log2(max_cap) entries ever)."""
+        return sorted(self._caps_seen)
+
+    def batch_cap(self, requests: list[dict]) -> int:
+        """Power-of-two bucket over THIS batch's largest group."""
+        p = self.bundle.pipeline
+        max_n = max(
+            int(p.group_sizes(self.bundle.store, req).max()) for req in requests
+        )
+        return min(bucket_size(max_n), self._max_cap)
+
+    # ------------------------------------------------------------------
     def serve_batch(self, requests: list[dict]) -> BatchResult:
         p = self.bundle.pipeline
         store = self.bundle.store
@@ -78,14 +134,16 @@ class BatchedFusedServer:
             self.config.delta if self.config.delta is not None else p.delta_default
         )
         r = len(requests)
-        vals = np.zeros((r, p.k, self._cap), np.float32)
+        cap = self.batch_cap(requests)
+        vals = np.zeros((r, p.k, cap), np.float32)
         ns = np.zeros((r, p.k), np.int32)
         exacts = np.zeros((r, len(p.exact_features)), np.float32)
         for i, req in enumerate(requests):
-            v, _ = store.request_buffers(p.agg_specs(req), self._cap)
+            v, _ = store.request_buffers(p.agg_specs(req), cap)
             vals[i] = np.asarray(v)
-            ns[i] = np.minimum(p.group_sizes(store, req), self._cap)
+            ns[i] = np.minimum(p.group_sizes(store, req), cap)
             exacts[i] = p.exact_feature_values(store, req)
+        self._caps_seen.add(cap)
         res = self._batched(
             jnp.asarray(vals),
             jnp.asarray(ns),
@@ -93,9 +151,12 @@ class BatchedFusedServer:
             jnp.full((r,), delta, jnp.float32),
             jnp.asarray(exacts),
         )
+        iters = np.asarray(res.iters)
         return BatchResult(
             y_hat=np.asarray(res.y_hat),
             prob=np.asarray(res.prob),
-            iters=np.asarray(res.iters),
+            iters=iters,
             sample_frac=np.asarray(res.samples_used) / np.maximum(ns.sum(1), 1),
+            batch_iters=int(iters.max(initial=0)),
+            cap=cap,
         )

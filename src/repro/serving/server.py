@@ -123,6 +123,8 @@ class BiathlonServer:
             for f in p.agg_features
             for g in self.store[f.table].group_ids
         )
+        # store-wide ceiling; each request gathers at its own power-of-two
+        # bucket below this, so small groups skip the worst-case padding
         self._cap = bucket_size(max_n)
 
     # ------------------------------------------------------------------
@@ -142,11 +144,13 @@ class BiathlonServer:
             }
         t0 = time.perf_counter()
         specs = p.agg_specs(request)
-        vals, sizes = self.store.request_buffers(specs, self._cap)
-        n_true = jnp.asarray(p.group_sizes(self.store, request), jnp.int32)
+        n_np = p.group_sizes(self.store, request)
+        cap = min(bucket_size(int(max(n_np.max(), 1))), self._cap)
+        vals, sizes = self.store.request_buffers(specs, cap)
+        n_true = jnp.asarray(n_np, jnp.int32)
         exact = jnp.asarray(p.exact_feature_values(self.store, request))
         res = self._fused(
-            vals, jnp.minimum(n_true, self._cap), self._agg_ids,
+            vals, jnp.minimum(n_true, cap), self._agg_ids,
             jnp.asarray(delta, jnp.float32), exact,
         )
         y = float(res.y_hat)

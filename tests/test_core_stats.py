@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.guarantee import regression_prob, satisfied
 from repro.core.planner import direction, gamma_abs, initial_plan, next_plan

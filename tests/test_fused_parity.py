@@ -1,0 +1,155 @@
+"""Single-dispatch fused executor: call counting, host parity, bucketed batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import BiathlonConfig, run_exact
+from repro.core.executor_fused import build_fused_executor, fused_rows_per_iteration
+from repro.core.pipeline import AggFeature, Pipeline
+from repro.data.store import ColumnStore, build_table
+from repro.data.synthetic import PipelineBundle, make_pipeline
+from repro.models.tabular import LinearRegression
+from repro.serving import BatchedFusedServer, BiathlonServer
+from repro.serving.batched import straggler_report
+
+SMALL = dict(rows_per_group=1200, n_train_groups=100, n_serve_groups=5, n_requests=4)
+
+
+# ------------------------------------------------------- one dispatch per iter
+def test_exactly_one_model_call_per_iteration():
+    """The while-loop body must contain a single model_fn dispatch.
+
+    Trace-time counting: jitting the executor traces model_fn exactly three
+    times — the AMI-only init (m+1 rows), the lax.cond-guarded init Sobol
+    block ((k+2)*m_sobol rows), and ONE megabatch inside the loop body
+    (m + 1 + (k+2)*m_sobol rows).  A duplicate pre-step evaluation or a
+    separate per-iteration Sobol batch would show up as extra traced calls
+    or wrong row counts.
+    """
+    m, m_sobol, k = 64, 16, 2
+    calls: list[int] = []
+    w = jnp.asarray([3.0, 1.0])
+
+    def model_fn(rows, exact):
+        calls.append(int(rows.shape[0]))
+        return rows @ w
+
+    fused = build_fused_executor(
+        model_fn, k=k, task="regression", m=m, m_sobol=m_sobol,
+        alpha=0.05, gamma=0.01, tau=0.95, max_iters=16,
+    )
+    rng = np.random.default_rng(0)
+    cap = 1024
+    vals = jnp.asarray(rng.normal(0, 1, (k, cap)).astype(np.float32))
+    n = jnp.asarray([cap, cap], jnp.int32)
+    res = fused(
+        vals, n, jnp.zeros((k,), jnp.int32),
+        jnp.asarray(0.05, jnp.float32), jnp.zeros((0,), jnp.float32),
+    )
+    sobol_block = (k + 2) * m_sobol
+    megabatch = fused_rows_per_iteration(k, m, m_sobol)
+    assert megabatch == m + 1 + sobol_block
+    assert len(calls) == 3, f"init AMI + init Sobol + body, got {calls}"
+    assert sorted(calls) == sorted([m + 1, sobol_block, megabatch]), calls
+    # exactly ONE traced call is the per-iteration megabatch (the loop body)
+    assert calls.count(megabatch) == 1
+    assert int(res.iters) >= 1  # the loop actually iterated
+
+    # same shapes -> cached executable, no retrace, still 3 traced calls
+    fused(
+        vals, n, jnp.zeros((k,), jnp.int32),
+        jnp.asarray(0.05, jnp.float32), jnp.zeros((0,), jnp.float32),
+    )
+    assert len(calls) == 3
+
+
+# ------------------------------------------------------------- host parity
+def test_fused_vs_host_parity_parametric_pipeline():
+    """On a parametric-only pipeline both executors meet Eq. 1 at the same
+    (alpha, gamma, tau, delta) and land within tolerance of each other."""
+    b = make_pipeline("turbofan", **SMALL)
+    cfg = BiathlonConfig(m=192, m_sobol=48)
+    host = BiathlonServer(b, cfg, mode="host")
+    fused = BiathlonServer(b, cfg, mode="fused")
+    delta = b.pipeline.delta_default
+    agree = 0
+    reqs = b.requests[:4]
+    for i, req in enumerate(reqs):
+        rh = host.serve(req, jax.random.PRNGKey(i))
+        rf = fused.serve(req)
+        y_ex, _ = run_exact(b.store, b.pipeline, req)
+        # each path satisfied Eq. 1 (or provably exhausted to exact)
+        assert rh["prob"] >= cfg.tau or rh["sample_frac"] >= 0.999
+        assert rf["prob"] >= cfg.tau or rf["sample_frac"] >= 0.999
+        if (
+            abs(rf["y_hat"] - rh["y_hat"]) <= 2 * delta + 1e-6
+            and abs(rf["y_hat"] - y_ex) <= delta + 1e-6
+        ):
+            agree += 1
+    # tau=0.95 per request; allow one miss across paths on a small log
+    assert agree >= len(reqs) - 1
+
+
+# ----------------------------------------------------------- bucketed batches
+@pytest.fixture(scope="module")
+def mixed_bundle():
+    """10 small groups (120 rows) + 3 large groups (5000 rows), linear model."""
+    rng = np.random.default_rng(0)
+    sizes = [120] * 10 + [5000] * 3
+    gid = np.concatenate([np.full(s, g) for g, s in enumerate(sizes)])
+    mu = rng.normal(0, 5, len(sizes))
+    vals = mu[gid] + rng.normal(0, 2.0, len(gid))
+    aux = 0.5 * mu[gid] + rng.normal(0, 1.0, len(gid))
+    store = ColumnStore().add("t", build_table({"v": vals, "a": aux}, gid, seed=1))
+    X = np.stack([mu, 0.5 * mu], axis=1)
+    y = 3 * X[:, 0] + X[:, 1] + rng.normal(0, 0.01, len(sizes))
+    pipe = Pipeline(
+        name="mixed",
+        agg_features=[
+            AggFeature("avg_v", "t", "v", "avg", "g"),
+            AggFeature("avg_a", "t", "a", "avg", "g"),
+        ],
+        exact_features=[],
+        model=LinearRegression().fit(X, y),
+        task="regression",
+        scaler_mean=np.zeros(2, np.float32),
+        scaler_scale=np.ones(2, np.float32),
+        delta_default=0.5,
+    )
+    return PipelineBundle(
+        pipeline=pipe, store=store, requests=[{"g": g} for g in range(len(sizes))],
+        labels=y, table_rows=len(gid), name="mixed",
+    )
+
+
+def test_batched_cap_derives_from_admission_batch(mixed_bundle):
+    srv = BatchedFusedServer(mixed_bundle, BiathlonConfig(m=96, m_sobol=32))
+    small = [{"g": 0}, {"g": 1}, {"g": 2}]
+    large = [{"g": 10}, {"g": 11}]
+    mixed = [{"g": 3}, {"g": 12}]
+    assert srv.batch_cap(small) == 128          # bucket(120), NOT the store max
+    assert srv.batch_cap(large) == 8192
+    assert srv.batch_cap(mixed) == 8192         # batch max rules
+
+    rs = srv.serve_batch(small)
+    assert rs.cap == 128
+    rl = srv.serve_batch(large)
+    assert rl.cap == 8192
+    assert sorted(srv.compiled_buckets) == [128, 8192]
+    for res in (rs, rl):
+        assert np.isfinite(res.y_hat).all()
+        assert ((res.prob >= 0.95) | (res.sample_frac >= 0.999)).all()
+        assert res.batch_iters == int(res.iters.max())
+
+
+def test_straggler_report(mixed_bundle):
+    srv = BatchedFusedServer(mixed_bundle, BiathlonConfig(m=96, m_sobol=32))
+    res = srv.serve_batch([{"g": 4}, {"g": 5}, {"g": 12}])
+    rep = straggler_report(res)
+    assert rep["batch_iters"] == int(res.iters.max())
+    assert (rep["wasted_iters"] >= 0).all()
+    assert (rep["wasted_iters"] == rep["batch_iters"] - res.iters).all()
+    assert 0.0 <= rep["wasted_frac"] <= 1.0
+    assert rep["cap"] == res.cap
+    assert rep["straggler"] == int(np.argmax(res.iters))

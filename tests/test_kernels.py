@@ -5,8 +5,10 @@ import numpy as np
 import pytest
 
 from repro.core.qmc import sobol_uint32
+from repro.data.aggregates import masked_estimates_batch
 from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.sampled_agg.ref import sampled_moments_ref
+from repro.kernels.sampled_agg.ops import masked_estimates
+from repro.kernels.sampled_agg.ref import N_MOMENTS, sampled_moments_ref
 from repro.kernels.sampled_agg.sampled_agg import sampled_moments
 from repro.kernels.sobol.sobol import sobol_points
 from repro.kernels.tree_qmc.tree_qmc import ensemble_sum
@@ -36,6 +38,62 @@ def test_sampled_agg_dtype_bf16_input():
     got = sampled_moments(vals.astype(jnp.float32), z, interpret=True)
     want = sampled_moments_ref(vals.astype(jnp.float32), z)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=1e-3)
+
+
+def test_sampled_agg_emits_five_power_sums():
+    """[count, Σv, Σv², Σv³, Σv⁴] — the 4th power feeds VAR/STD sigmas."""
+    vals = jax.random.normal(jax.random.PRNGKey(2), (2, 128)) * 2.0 + 0.5
+    z = jnp.asarray([31, 128], jnp.int32)
+    out = np.asarray(sampled_moments(vals, z, interpret=True))
+    assert out.shape == (2, N_MOMENTS) == (2, 5)
+    v = np.asarray(vals)
+    for j, zz in enumerate([31, 128]):
+        pre = v[j, :zz].astype(np.float64)
+        np.testing.assert_allclose(out[j, 0], zz, rtol=1e-6)
+        for p in range(1, 5):
+            np.testing.assert_allclose(
+                out[j, p], (pre**p).sum(), rtol=5e-5, atol=1e-3
+            )
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_sampled_agg_estimates_match_masked_oracle(use_kernel):
+    """Kernel power sums -> (value, sigma) vs masked_estimates_batch, ragged z
+    including the z=0 and z=cap edges, across every parametric aggregate."""
+    cap = 512
+    vals = jax.random.normal(jax.random.PRNGKey(7), (10, cap)) * 3.0 + 1.0
+    z = jnp.asarray([0, 1, 2, 7, 64, 200, 511, 512, 0, 512], jnp.int32)
+    n = jnp.asarray([1024, 1024, 2, 1024, 64, 1024, 1024, 512, 4096, 4096], jnp.int32)
+    agg_ids = jnp.asarray([0, 1, 2, 3, 4, 0, 3, 4, 1, 2], jnp.int32)
+    got_v, got_s = masked_estimates(vals, z, n, agg_ids, use_kernel=use_kernel)
+    want_v, want_s = masked_estimates_batch(vals, z, n, agg_ids)
+    np.testing.assert_allclose(
+        np.asarray(got_v), np.asarray(want_v), rtol=2e-3, atol=2e-3
+    )
+    # sigma: raw-vs-centered moment arithmetic in float32 — looser tolerance
+    np.testing.assert_allclose(
+        np.asarray(got_s), np.asarray(want_s), rtol=2e-2, atol=5e-3
+    )
+    # exactness edges: z >= n must kill sigma entirely on both paths
+    exact_rows = np.asarray(z) >= np.asarray(n)
+    assert (np.asarray(got_s)[exact_rows] == 0).all()
+
+
+def test_power_sum_estimates_keep_sigma_when_mean_dominates():
+    """|mean| >> std: raw-moment cancellation noise must NOT collapse sigma
+    to zero — a sigma of 0 here would fake a satisfied Eq. 1 guarantee."""
+    cap = 1024
+    vals = jax.random.normal(jax.random.PRNGKey(3), (5, cap)) * 3.0 + 200.0
+    z = jnp.full((5,), 256, jnp.int32)
+    n = jnp.full((5,), 4096, jnp.int32)
+    agg_ids = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)  # avg sum count var std
+    got_v, got_s = masked_estimates(vals, z, n, agg_ids, use_kernel=False)
+    want_v, want_s = masked_estimates_batch(vals, z, n, agg_ids)
+    assert (np.asarray(got_s) > 0).all(), "sigma collapsed to zero"
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-3)
+    # shifted accumulation keeps cancellation at O(std^4), so the sigmas
+    # agree tightly even though mean^4 ~ 1.6e9 in float32
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), rtol=2e-2)
 
 
 # ------------------------------------------------------------------ sobol
