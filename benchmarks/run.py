@@ -20,6 +20,7 @@ def main() -> None:
         median_bootstrap,
         median_imbalance,
         roofline,
+        serving_load,
         vary_alpha,
         vary_delta,
         vary_gamma,
@@ -39,6 +40,7 @@ def main() -> None:
         "fig13_14_imbalance": median_imbalance.run,
         "kernel_micro": kernel_micro.run,
         "perf_fused_vs_host": fused_vs_host.run,
+        "perf_serving_load": serving_load.run,
         "roofline": roofline.run,
     }
     only = os.environ.get("ONLY")

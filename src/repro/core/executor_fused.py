@@ -95,6 +95,15 @@ def build_fused_executor(
     qualify.  ``exact`` carries the request's exactly-computed features so a
     single compiled executor serves every request of the pipeline.
 
+    ``run`` also accepts an optional trailing ``active`` flag (scalar bool)
+    used by fixed-lane admission batching (serving/runtime.py): a vmapped
+    batch pads to a constant lane count and marks pad lanes inactive, so the
+    jit cache sees ONE shape per cap bucket regardless of batch fill.  An
+    inactive lane never enters the while_loop (its guarantee predicate is
+    forced false), reports ``iters == 0`` and ``samples_used == 0``, and its
+    y_hat/prob are the init-dispatch values over its zero-padded buffers —
+    callers slice inactive lanes off before interpreting results.
+
     ``model_fn`` is invoked exactly ONCE per planner iteration, on a
     ``(m + 1 + (k+2)*m_sobol, k)`` megabatch (see module docstring).
 
@@ -134,7 +143,8 @@ def build_fused_executor(
         )
 
     @jax.jit
-    def run(vals, n, agg_ids, delta, exact) -> FusedResult:
+    def run(vals, n, agg_ids, delta, exact, active=None) -> FusedResult:
+        act = jnp.asarray(True) if active is None else active
         cap = vals.shape[1]
         n = jnp.minimum(n.astype(jnp.int32), cap)
         z0 = jnp.clip(
@@ -189,7 +199,7 @@ def build_fused_executor(
 
         def cond(state):
             z, it, y_hat, prob, idx = state
-            return (prob < tau) & (it < max_iters) & jnp.any(z < n)
+            return act & (prob < tau) & (it < max_iters) & jnp.any(z < n)
 
         def body(state):
             z, it, _, _, idx = state
@@ -212,7 +222,7 @@ def build_fused_executor(
         y_hat0 = y0_all[m]
         prob0 = ami_prob(y0_all[:m], y_hat0)
         idx0 = jax.lax.cond(
-            (prob0 < tau) & jnp.any(z0 < n) & (max_iters > 0),
+            act & (prob0 < tau) & jnp.any(z0 < n) & (max_iters > 0),
             lambda: sobol_from_outputs(
                 model_fn(sobol_rows(value0, sigma0), exact).astype(f32), y_hat0
             ),
@@ -226,7 +236,7 @@ def build_fused_executor(
             prob=prob,
             iters=iters,
             z=z,
-            samples_used=jnp.sum(jnp.minimum(z, n)),
+            samples_used=jnp.where(act, jnp.sum(jnp.minimum(z, n)), 0),
         )
 
     return run

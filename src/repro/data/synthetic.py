@@ -35,7 +35,36 @@ from repro.models.tabular import (
     RandomForest,
 )
 
-__all__ = ["PipelineBundle", "make_pipeline", "PIPELINE_NAMES"]
+__all__ = [
+    "PipelineBundle",
+    "make_pipeline",
+    "PIPELINE_NAMES",
+    "poisson_arrivals",
+]
+
+
+def poisson_arrivals(
+    requests: list[dict],
+    rate_rps: float,
+    n: int | None = None,
+    seed: int = 0,
+    start_t: float = 0.0,
+) -> list[tuple[float, dict]]:
+    """Timestamped Poisson arrival trace over a request log.
+
+    Inter-arrival gaps are Exp(rate) — the M/*/1 open-loop workload the
+    serving runtime replays (serving/runtime.py).  Requests are cycled from
+    ``requests`` when ``n`` exceeds the log.  Returns ``[(t_seconds, req)]``
+    sorted by time; deterministic in ``seed``.
+    """
+    if rate_rps <= 0:
+        raise ValueError("rate_rps must be > 0")
+    if not requests:
+        return []
+    n = len(requests) if n is None else n
+    rng = np.random.default_rng(seed)
+    ts = start_t + np.cumsum(rng.exponential(1.0 / rate_rps, n))
+    return [(float(t), requests[i % len(requests)]) for i, t in enumerate(ts)]
 
 PIPELINE_NAMES = (
     "trip_fare",

@@ -1,25 +1,41 @@
 """Serving launcher: ``python -m repro.launch.serve --pipeline <name>``.
 
-Builds one of the seven paper pipelines and drains its request log through
-the chosen executor, printing the paper's §4 metrics.
+Builds one of the seven paper pipelines and serves it through the chosen
+executor, printing the paper's §4 metrics.
+
+Modes:
+  host           paper-faithful host-loop executor, one request at a time
+  fused          single-XLA-program executor, one request at a time
+  fused-batched  arrival-driven runtime: Poisson arrivals -> request queue
+                 -> max-wait/max-size admission -> fixed-lane batched
+                 dispatch (serving/runtime.py)
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --pipeline trip_fare
   PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan --mode fused
+  PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan \
+      --mode fused-batched --arrival-rate 50 --batch-size 8 --max-wait-ms 20
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.core.executor import BiathlonConfig
-from repro.data.synthetic import PIPELINE_NAMES, make_pipeline
-from repro.serving import BiathlonServer
+from repro.data.synthetic import PIPELINE_NAMES, make_pipeline, poisson_arrivals
+from repro.serving import BatchedFusedServer, BiathlonServer, ServingRuntime
+
+
+def _print_table(d: dict) -> None:
+    for k, v in d.items():
+        print(f"  {k:24s} {v:.4f}" if isinstance(v, float) else f"  {k:24s} {v}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pipeline", choices=PIPELINE_NAMES, required=True)
-    ap.add_argument("--mode", choices=("host", "fused"), default="host")
+    ap.add_argument(
+        "--mode", choices=("host", "fused", "fused-batched"), default="host"
+    )
     ap.add_argument("--rows-per-group", type=int, default=20000)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--tau", type=float, default=0.95)
@@ -27,6 +43,14 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.05)
     ap.add_argument("--gamma", type=float, default=0.01)
     ap.add_argument("--m", type=int, default=500)
+    # fused-batched runtime knobs
+    ap.add_argument("--arrival-rate", type=float, default=20.0,
+                    help="Poisson arrival rate in requests/s (fused-batched)")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="fixed lane count per admission batch (fused-batched)")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="admission max-wait in milliseconds (fused-batched)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     bundle = make_pipeline(
@@ -37,14 +61,27 @@ def main():
         tau=args.tau, delta=args.delta, alpha=args.alpha, gamma=args.gamma,
         m=args.m, m_sobol=max(args.m // 4, 64),
     )
+    delta = cfg.delta if cfg.delta is not None else bundle.pipeline.delta_default
+
+    if args.mode == "fused-batched":
+        srv = BatchedFusedServer(bundle, cfg, batch_size=args.batch_size)
+        runtime = ServingRuntime(srv, max_wait_s=args.max_wait_ms / 1e3)
+        arrivals = poisson_arrivals(
+            bundle.requests, args.arrival_rate, n=args.requests, seed=args.seed
+        )
+        stats = runtime.run(arrivals)
+        print(f"[serve] {args.pipeline} mode=fused-batched "
+              f"rate={args.arrival_rate:.1f}rps lanes={args.batch_size} "
+              f"max_wait={args.max_wait_ms:.0f}ms delta={delta:.4f}")
+        _print_table(stats.summary())
+        return
+
     srv = BiathlonServer(bundle, cfg, mode=args.mode)
     srv.serve(bundle.requests[0])  # warm the jit caches
     stats = srv.serve_all(bundle.requests)
     s = stats.summary(bundle.pipeline.delta_default, bundle.pipeline.task)
-    print(f"[serve] {args.pipeline} mode={args.mode} "
-          f"delta={cfg.delta if cfg.delta is not None else bundle.pipeline.delta_default:.4f}")
-    for k, v in s.items():
-        print(f"  {k:24s} {v:.4f}" if isinstance(v, float) else f"  {k:24s} {v}")
+    print(f"[serve] {args.pipeline} mode={args.mode} delta={delta:.4f}")
+    _print_table(s)
 
 
 if __name__ == "__main__":

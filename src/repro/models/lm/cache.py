@@ -107,7 +107,24 @@ def init_cache(model, batch: int, max_seq: int):
 # ==========================================================================
 # prefill
 # ==========================================================================
-def build_prefill_cache(model, params, tokens, frontend=None):
+# Decode slots reserved past the prefill length when the caller does not pass
+# an explicit ``max_seq``.  Without headroom the FIRST decode step corrupts
+# the cache: ``dynamic_update_slice`` clamps its start index so a write at
+# ``pos == cache_len`` lands on slot ``cache_len - 1``, silently overwriting
+# the last prefilled key/value (the long-standing qwen prefill/decode
+# consistency failure).  Positions past ``pos`` are masked in attention, so
+# the zero padding never leaks into logits.
+DECODE_RESERVE = 64
+
+
+def build_prefill_cache(model, params, tokens, frontend=None, max_seq=None):
+    """Run the full-sequence forward, returning (last logits, decode cache).
+
+    ``max_seq`` bounds the total sequence (prefill + decode steps) the cache
+    can hold; defaults to ``prefill_len + DECODE_RESERVE``.  Decoding past
+    it requires re-prefilling with a larger ``max_seq`` (shapes are static).
+    State-space / windowed families carry O(1) state and ignore it.
+    """
     cfg = model.cfg
     b, s = tokens.shape
     x = params["embed"][jnp.clip(tokens, 0, model.vp - 1)].astype(model.dtype)
@@ -128,7 +145,7 @@ def build_prefill_cache(model, params, tokens, frontend=None):
             return h, extra
 
         x, extras = jax.lax.scan(body, x, params["blocks"])
-        cache = _assemble_prefill_cache(model, caches_extra, extras, b, s)
+        cache = _assemble_prefill_cache(model, caches_extra, extras, b, s, max_seq)
     elif fam == "hybrid":
         shared = params["shared_block"]
         w = min(cfg.sliding_window or s, s)
@@ -215,7 +232,8 @@ def build_prefill_cache(model, params, tokens, frontend=None):
 
         x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_blocks"])
         cache = {
-            "k": ks, "v": vs, "ck": cks, "cv": cvs,
+            "k": _pad_seq(ks, s, max_seq), "v": _pad_seq(vs, s, max_seq),
+            "ck": cks, "cv": cvs,
             "pos": jnp.asarray(s, jnp.int32),
         }
     else:  # pragma: no cover
@@ -243,7 +261,22 @@ def _prefill_attn_ffn(model, bp, x):
     return x + f, extra
 
 
-def _assemble_prefill_cache(model, dense0_extras, scanned_extras, b, s):
+def _pad_seq(arr, s: int, max_seq: int | None):
+    """Right-pad the (stacked-layer) cache's sequence axis to ``max_seq``.
+
+    arr: (L, B, S, ...) — pads axis 2 with zeros.  Attention masks every
+    position > ``pos``, so the padding is inert until a decode step claims
+    its slot.
+    """
+    target = s + DECODE_RESERVE if max_seq is None else max_seq
+    if target <= s:
+        return arr
+    pad = [(0, 0)] * arr.ndim
+    pad[2] = (0, target - s)
+    return jnp.pad(arr, pad)
+
+
+def _assemble_prefill_cache(model, dense0_extras, scanned_extras, b, s, max_seq=None):
     cfg = model.cfg
     pos = jnp.asarray(s, jnp.int32)
     if cfg.mla:
@@ -255,21 +288,48 @@ def _assemble_prefill_cache(model, dense0_extras, scanned_extras, b, s):
             kpe = jnp.concatenate(
                 [jnp.stack([e[1] for e in dense0_extras]), kpe], axis=0
             )
-        return {"ckv": ckv.astype(model.dtype), "kpe": kpe.astype(model.dtype), "pos": pos}
+        ckv = _pad_seq(ckv.astype(model.dtype), s, max_seq)
+        kpe = _pad_seq(kpe.astype(model.dtype), s, max_seq)
+        return {"ckv": ckv, "kpe": kpe, "pos": pos}
     k, v = scanned_extras
     if dense0_extras:
         k = jnp.concatenate([jnp.stack([e[0] for e in dense0_extras]), k], axis=0)
         v = jnp.concatenate([jnp.stack([e[1] for e in dense0_extras]), v], axis=0)
-    return {"k": k.astype(model.dtype), "v": v.astype(model.dtype), "pos": pos}
+    k = _pad_seq(k.astype(model.dtype), s, max_seq)
+    v = _pad_seq(v.astype(model.dtype), s, max_seq)
+    return {"k": k, "v": v, "pos": pos}
 
 
 # ==========================================================================
 # decode step
 # ==========================================================================
+def _check_cache_capacity(pos, limit: int) -> None:
+    """Refuse writes past the cache's sequence capacity (eager calls only).
+
+    ``dynamic_update_slice`` clamps out-of-range starts, which would silently
+    overwrite the newest cached position — the bug the prefill headroom
+    fixed.  Under jit ``pos`` is a tracer and the check is skipped (shapes
+    are the caller's contract there).
+    """
+    try:
+        p = int(pos)
+    except (jax.errors.TracerIntegerConversionError, jax.errors.ConcretizationTypeError):
+        return
+    if p >= limit:
+        raise ValueError(
+            f"KV cache exhausted: decode position {p} >= capacity {limit}; "
+            f"re-prefill with a larger max_seq (see cache.DECODE_RESERVE)"
+        )
+
+
 def decode_step(model, params, cache, tokens):
     """tokens (B, 1) -> (logits (B, Vp), updated cache)."""
     cfg = model.cfg
     pos = cache["pos"]
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        # absolute-slot caches; hybrid rings wrap and ssm state is O(1)
+        seq_cap = cache["ckv"].shape[2] if cfg.mla else cache["k"].shape[2]
+        _check_cache_capacity(pos, seq_cap)
     x = params["embed"][jnp.clip(tokens, 0, model.vp - 1)].astype(model.dtype)
     fam = cfg.family
 

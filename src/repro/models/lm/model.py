@@ -452,11 +452,16 @@ class LM:
     # ==================================================================
     # Serving: prefill + decode (caches built in cache.py)
     # ==================================================================
-    def prefill(self, params, tokens, frontend=None):
-        """Returns (last-position logits (B, Vp), populated cache)."""
+    def prefill(self, params, tokens, frontend=None, max_seq=None):
+        """Returns (last-position logits (B, Vp), populated cache).
+
+        The cache reserves decode headroom up to ``max_seq`` total positions
+        (default: prefill length + ``cache.DECODE_RESERVE``) so subsequent
+        ``decode_step`` writes land on fresh slots.
+        """
         from repro.models.lm.cache import build_prefill_cache
 
-        return build_prefill_cache(self, params, tokens, frontend)
+        return build_prefill_cache(self, params, tokens, frontend, max_seq)
 
     def decode_step(self, params, cache, tokens):
         """tokens: (B, 1) -> (logits (B, Vp), updated cache)."""

@@ -1,6 +1,22 @@
 from repro.serving.server import BiathlonServer, ServerStats
+from repro.serving.batched import BatchedFusedServer, BatchResult, straggler_report
+from repro.serving.runtime import (
+    AdmissionBatcher,
+    Arrival,
+    RequestRecord,
+    RuntimeStats,
+    ServingRuntime,
+)
 
-__all__ = ["BiathlonServer", "ServerStats"]
-from repro.serving.batched import BatchedFusedServer  # noqa: E402
-
-__all__.append("BatchedFusedServer")
+__all__ = [
+    "BiathlonServer",
+    "ServerStats",
+    "BatchedFusedServer",
+    "BatchResult",
+    "straggler_report",
+    "AdmissionBatcher",
+    "Arrival",
+    "RequestRecord",
+    "RuntimeStats",
+    "ServingRuntime",
+]

@@ -8,16 +8,25 @@ batch satisfies Eq. 1 or exhausts — the standard continuous-batching trade:
 stragglers in a batch pay for each other, so admission batches should be
 sized to the arrival rate).
 
-Buffer caps are *bucketed per admission batch*: the (R, k, cap) gather pads
-to the next power of two above the BATCH's largest group, not the store-wide
-worst case, so a batch of small-group requests does proportionally small AFC
-work (power-of-two caps bound recompilation, the same trick
-``HostLoopExecutor`` uses for its bucketed shapes).  Each bucket gets its own
-compiled executor; ``straggler_report`` makes the batching trade measurable
-(per-request iterations vs the batch's shared iteration count).
+Two mechanisms bound the jit cache:
+
+* **Fixed lanes** — every admission batch is padded to exactly
+  ``batch_size`` rows; pad lanes carry zero buffers and an ``active=False``
+  flag that forces their while_loop predicate false inside the executor
+  (executor_fused.py).  The compiled shape is therefore
+  ``(batch_size, k, cap)`` for ANY batch fill 1..batch_size — one executable
+  per cap bucket, not one per distinct fill.
+* **Per-batch cap bucketing** — the (lanes, k, cap) gather pads to the next
+  power of two above the BATCH's largest group, not the store-wide worst
+  case, so a batch of small-group requests does proportionally small AFC
+  work (the same power-of-two trick ``HostLoopExecutor`` uses).
+
+``straggler_report`` makes the batching trade measurable (per-request
+iterations vs the batch's shared iteration count, over ACTIVE lanes only).
 
 This is the throughput-serving mode a TPU deployment would run: one
-(R, k, cap) gather, one program, R guarantees.
+(lanes, k, cap) gather, one program, R guarantees.  The arrival-driven
+admission loop that feeds it lives in serving/runtime.py.
 """
 from __future__ import annotations
 
@@ -37,10 +46,11 @@ __all__ = ["BatchedFusedServer", "BatchResult", "straggler_report"]
 class BatchResult(NamedTuple):
     y_hat: np.ndarray
     prob: np.ndarray
-    iters: np.ndarray       # (R,) per-request planner iterations
-    sample_frac: np.ndarray
+    iters: np.ndarray       # (R,) per-request planner iterations (active lanes)
+    sample_frac: np.ndarray  # samples touched / TRUE group rows (paper §4)
     batch_iters: int        # shared while_loop trip count = max(iters)
     cap: int                # bucketed buffer cap used for this batch
+    lanes: int              # padded lane count the executable was compiled for
 
 
 def straggler_report(res: BatchResult) -> dict:
@@ -49,9 +59,24 @@ def straggler_report(res: BatchResult) -> dict:
     ``wasted_iters[i]`` counts loop trips request i sat through after its own
     guarantee was met (predicated no-ops that still burn compute in the
     shared program); ``wasted_frac`` is their share of the batch's total
-    lane-iterations — the admission-sizing signal.
+    *active*-lane-iterations — the admission-sizing signal.  Pad lanes never
+    iterate (their predicate is forced false), so they are excluded from the
+    waste accounting; ``fill`` reports how full the fixed-lane batch was.
+
+    An empty batch (zero active lanes) yields zeros and ``straggler == -1``.
     """
     iters = np.asarray(res.iters)
+    if iters.size == 0:
+        return {
+            "batch_iters": 0,
+            "per_request_iters": iters,
+            "wasted_iters": iters,
+            "wasted_frac": 0.0,
+            "straggler": -1,
+            "cap": int(res.cap),
+            "lanes": int(res.lanes),
+            "fill": 0.0,
+        }
     wasted = res.batch_iters - iters
     total = max(int(res.batch_iters) * len(iters), 1)
     return {
@@ -61,19 +86,28 @@ def straggler_report(res: BatchResult) -> dict:
         "wasted_frac": float(wasted.sum()) / total,
         "straggler": int(np.argmax(iters)),
         "cap": int(res.cap),
+        "lanes": int(res.lanes),
+        "fill": float(len(iters)) / max(int(res.lanes), 1),
     }
 
 
 class BatchedFusedServer:
-    """vmapped FusedExecutor over admission batches of requests.
+    """vmapped FusedExecutor over fixed-lane admission batches of requests.
 
-    One compiled program per power-of-two cap bucket: the jit cache is keyed
-    by the gathered (R, k, cap) shapes, so bucketing caps (and keeping
-    admission batches at a fixed size) bounds the number of compilations
-    while letting small-group batches skip the store-wide worst-case padding.
+    One compiled program per power-of-two cap bucket: batches are padded to
+    exactly ``batch_size`` lanes (inactive lanes predicated out on device),
+    so the jit cache is keyed by ``(batch_size, k, cap)`` only — varying
+    batch fill never recompiles.  ``compile_count`` / ``compiled_buckets``
+    make that observable (and testable).
+
+    ``max_cap`` optionally lowers the store-wide buffer ceiling (bounded
+    device memory); groups larger than the cap degrade gracefully — the
+    executor exhausts at ``cap`` rows and ``sample_frac`` stays honest
+    because its denominator is the TRUE group size.
     """
 
-    def __init__(self, bundle, config, batch_size: int = 8):
+    def __init__(self, bundle, config, batch_size: int = 8,
+                 max_cap: int | None = None):
         self.bundle = bundle
         self.config = config
         self.batch_size = batch_size
@@ -99,10 +133,18 @@ class BatchedFusedServer:
             m=config.m, m_sobol=config.m_sobol, alpha=config.alpha,
             gamma=config.gamma, tau=config.tau, max_iters=config.max_iters,
         )
-        # jit caches one executable per distinct (R, k, cap) input shape, so
-        # power-of-two cap bucketing alone bounds compilations; the set just
-        # makes the buckets observable.
-        self._batched = jax.jit(jax.vmap(self._run))
+
+        # jit caches one executable per distinct (lanes, k, cap) input shape;
+        # fixed lanes + power-of-two caps bound that to one per cap bucket.
+        # The trace hook fires exactly once per cache miss (= per compile),
+        # making the compile count observable without backend internals.
+        self._compile_count = 0
+
+        def _counted(vals, ns, agg_ids, delta, exacts, active):
+            self._compile_count += 1
+            return self._run(vals, ns, agg_ids, delta, exacts, active)
+
+        self._batched = jax.jit(jax.vmap(_counted))
         self._caps_seen: set[int] = set()
         self._agg_ids = jnp.asarray([AGG_IDS[f.agg] for f in p.agg_features], jnp.int32)
         max_n = max(
@@ -111,12 +153,19 @@ class BatchedFusedServer:
             for g in bundle.store[f.table].group_ids
         )
         self._max_cap = bucket_size(max_n)  # store-wide ceiling, not the default
+        if max_cap is not None:
+            self._max_cap = min(self._max_cap, bucket_size(max_cap))
 
     # ------------------------------------------------------------------
     @property
     def compiled_buckets(self) -> list[int]:
         """Cap buckets served so far (≤ log2(max_cap) entries ever)."""
         return sorted(self._caps_seen)
+
+    @property
+    def compile_count(self) -> int:
+        """Executables built so far — must equal ``len(compiled_buckets)``."""
+        return self._compile_count
 
     def batch_cap(self, requests: list[dict]) -> int:
         """Power-of-two bucket over THIS batch's largest group."""
@@ -128,35 +177,64 @@ class BatchedFusedServer:
 
     # ------------------------------------------------------------------
     def serve_batch(self, requests: list[dict]) -> BatchResult:
+        """Serve an admission batch of 0..batch_size requests.
+
+        The batch is padded to exactly ``batch_size`` lanes; results are
+        sliced back to the real requests before returning.  Oversize lists
+        are rejected — admitting them would compile one executable per
+        distinct oversize fill, breaking the fixed-lane no-recompile
+        contract (callers chunk at admission time; serving/runtime.py does).
+        """
         p = self.bundle.pipeline
         store = self.bundle.store
         delta = (
             self.config.delta if self.config.delta is not None else p.delta_default
         )
         r = len(requests)
+        if r > self.batch_size:
+            raise ValueError(
+                f"admission batch of {r} exceeds the fixed lane count "
+                f"{self.batch_size}; chunk before dispatch"
+            )
+        if r == 0:
+            empty = np.zeros((0,), np.float32)
+            return BatchResult(
+                y_hat=empty, prob=empty, iters=np.zeros((0,), np.int32),
+                sample_frac=empty, batch_iters=0, cap=0, lanes=self.batch_size,
+            )
+        lanes = self.batch_size
         cap = self.batch_cap(requests)
-        vals = np.zeros((r, p.k, cap), np.float32)
-        ns = np.zeros((r, p.k), np.int32)
-        exacts = np.zeros((r, len(p.exact_features)), np.float32)
+        vals = np.zeros((lanes, p.k, cap), np.float32)
+        ns = np.zeros((lanes, p.k), np.int32)
+        true_ns = np.zeros((r, p.k), np.int64)
+        exacts = np.zeros((lanes, len(p.exact_features)), np.float32)
         for i, req in enumerate(requests):
             v, _ = store.request_buffers(p.agg_specs(req), cap)
             vals[i] = np.asarray(v)
-            ns[i] = np.minimum(p.group_sizes(store, req), cap)
+            true_ns[i] = p.group_sizes(store, req)
+            ns[i] = np.minimum(true_ns[i], cap)
             exacts[i] = p.exact_feature_values(store, req)
+        active = np.arange(lanes) < r
         self._caps_seen.add(cap)
         res = self._batched(
             jnp.asarray(vals),
             jnp.asarray(ns),
-            jnp.broadcast_to(self._agg_ids, (r, p.k)),
-            jnp.full((r,), delta, jnp.float32),
+            jnp.broadcast_to(self._agg_ids, (lanes, p.k)),
+            jnp.full((lanes,), delta, jnp.float32),
             jnp.asarray(exacts),
+            jnp.asarray(active),
         )
-        iters = np.asarray(res.iters)
+        iters = np.asarray(res.iters)[:r]
         return BatchResult(
-            y_hat=np.asarray(res.y_hat),
-            prob=np.asarray(res.prob),
+            y_hat=np.asarray(res.y_hat)[:r],
+            prob=np.asarray(res.prob)[:r],
             iters=iters,
-            sample_frac=np.asarray(res.samples_used) / np.maximum(ns.sum(1), 1),
+            # paper §4 sample fraction: touched rows over TRUE group rows
+            # (matches BiathlonServer.serve across modes; cap clipping only
+            # shrinks the numerator)
+            sample_frac=np.asarray(res.samples_used)[:r]
+            / np.maximum(true_ns.sum(1), 1),
             batch_iters=int(iters.max(initial=0)),
             cap=cap,
+            lanes=lanes,
         )

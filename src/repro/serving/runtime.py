@@ -1,0 +1,276 @@
+"""Arrival-driven serving runtime: queue → admission → fixed-lane dispatch.
+
+The serving layer so far drained a request *list* synchronously; real
+user-facing load is a timestamped arrival process.  This module adds the
+missing runtime around :class:`~repro.serving.batched.BatchedFusedServer`
+(DESIGN.md §Serving runtime):
+
+* a FIFO **request queue** fed by timestamped arrivals (Poisson traces come
+  from ``repro.data.synthetic.poisson_arrivals``);
+* an **admission batcher** with the classic max-wait / max-size policy: a
+  batch launches when ``max_batch`` requests are waiting OR the oldest
+  request has waited ``max_wait_s`` (or the trace is drained) — the
+  InferLine-style knob trading per-request queueing delay against batch
+  efficiency;
+* **fixed-lane dispatch**: every admission batch is padded to the server's
+  ``batch_size`` lanes (inactive lanes predicated out on device), so the jit
+  cache holds exactly ONE executable per power-of-two cap bucket regardless
+  of batch fill — varying load never recompiles;
+* per-request **queueing delay vs execution latency** records, the numbers a
+  provisioning decision actually needs.
+
+Time model: arrivals and queueing evolve on a *virtual* clock (so a trace
+replays identically regardless of host speed), while each batch's service
+time is the real measured wall-clock of ``serve_batch`` — the runtime is a
+single-server queueing simulation whose service process is the actual
+compiled executor.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.batched import BatchedFusedServer
+
+__all__ = [
+    "Arrival",
+    "RequestRecord",
+    "AdmissionBatcher",
+    "RuntimeStats",
+    "ServingRuntime",
+]
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """A timestamped request: ``t`` seconds on the virtual arrival clock."""
+
+    t: float
+    request: dict
+
+
+@dataclass(frozen=True)
+class RequestRecord:
+    """Per-request accounting emitted by the runtime."""
+
+    req_id: int
+    arrival_t: float
+    admit_t: float          # when its admission batch started executing
+    done_t: float
+    queue_delay_s: float    # admit_t - arrival_t  (the batching cost)
+    exec_s: float           # its batch's wall-clock service time
+    latency_s: float        # done_t - arrival_t   (what the user sees)
+    batch_id: int
+    batch_fill: int         # active lanes in its batch
+    y_hat: float
+    prob: float
+    iters: int
+    sample_frac: float
+
+
+class AdmissionBatcher:
+    """max-wait / max-size admission policy (pure, for unit testing)."""
+
+    # tolerance for "the wait expired": the runtime advances its clock to
+    # ``t_oldest + max_wait_s`` and recomputes ``now - t_oldest``, which can
+    # round to just under max_wait_s — without the epsilon that state admits
+    # nothing and the virtual clock stops advancing (a livelock).
+    _EPS = 1e-9
+
+    def __init__(self, max_size: int, max_wait_s: float):
+        if max_size < 1:
+            raise ValueError("max_size must be >= 1")
+        if max_wait_s < 0:
+            raise ValueError("max_wait_s must be >= 0")
+        self.max_size = max_size
+        self.max_wait_s = max_wait_s
+
+    def ready(self, queue_len: int, oldest_wait_s: float, more_coming: bool) -> bool:
+        """Admit now?  Full batch, expired wait, or a drained trace."""
+        if queue_len <= 0:
+            return False
+        return (
+            queue_len >= self.max_size
+            or oldest_wait_s >= self.max_wait_s - self._EPS
+            or not more_coming
+        )
+
+
+@dataclass
+class RuntimeStats:
+    """Everything one load run produced; ``summary()`` is the §4-style table."""
+
+    records: list[RequestRecord] = field(default_factory=list)
+    makespan_s: float = 0.0     # first arrival -> last completion (virtual)
+    busy_s: float = 0.0         # total wall time spent inside serve_batch
+    n_batches: int = 0
+    compile_count: int = 0      # executables built DURING the run (post-warmup)
+    compiled_buckets: list[int] = field(default_factory=list)
+    tau: float = 0.95           # the server's confidence target (for summary)
+
+    def summary(self) -> dict:
+        n = len(self.records)
+        if n == 0:
+            return {
+                "n": 0,
+                "throughput_rps": 0.0,
+                "p50_latency_ms": float("nan"),
+                "p99_latency_ms": float("nan"),
+                "mean_latency_ms": float("nan"),
+                "mean_queue_delay_ms": float("nan"),
+                "p99_queue_delay_ms": float("nan"),
+                "mean_exec_ms": float("nan"),
+                "mean_batch_fill": 0.0,
+                "n_batches": 0,
+                "utilization": 0.0,
+                "mean_sample_frac": float("nan"),
+                "guarantee_rate": 0.0,
+                "compile_count": int(self.compile_count),
+                "compiled_buckets": list(self.compiled_buckets),
+            }
+        lat = np.array([r.latency_s for r in self.records]) * 1e3
+        qd = np.array([r.queue_delay_s for r in self.records]) * 1e3
+        ex = np.array([r.exec_s for r in self.records]) * 1e3
+        fill = np.array([r.batch_fill for r in self.records], np.float64)
+        frac = np.array([r.sample_frac for r in self.records])
+        prob = np.array([r.prob for r in self.records])
+        span = max(self.makespan_s, 1e-12)
+        return {
+            "n": n,
+            "throughput_rps": n / span,
+            "p50_latency_ms": float(np.percentile(lat, 50)),
+            "p99_latency_ms": float(np.percentile(lat, 99)),
+            "mean_latency_ms": float(lat.mean()),
+            "mean_queue_delay_ms": float(qd.mean()),
+            "p99_queue_delay_ms": float(np.percentile(qd, 99)),
+            "mean_exec_ms": float(ex.mean()),
+            "mean_batch_fill": float(fill.mean()),
+            "n_batches": int(self.n_batches),
+            "utilization": float(self.busy_s / span),
+            # the paper's §4 quality metrics, so the CLI table is comparable
+            # across host / fused / fused-batched modes (a request also counts
+            # as satisfied when it provably exhausted its groups)
+            "mean_sample_frac": float(frac.mean()),
+            "guarantee_rate": float(
+                np.mean((prob >= self.tau) | (frac >= 0.999))
+            ),
+            "compile_count": int(self.compile_count),
+            "compiled_buckets": list(self.compiled_buckets),
+        }
+
+
+class ServingRuntime:
+    """Single-server arrival loop over a :class:`BatchedFusedServer`."""
+
+    def __init__(
+        self,
+        server: BatchedFusedServer,
+        max_wait_s: float = 0.05,
+        max_batch: int | None = None,
+    ):
+        self.server = server
+        max_batch = max_batch if max_batch is not None else server.batch_size
+        if max_batch > server.batch_size:
+            raise ValueError(
+                f"max_batch {max_batch} exceeds the server's fixed lane count "
+                f"{server.batch_size}"
+            )
+        self.batcher = AdmissionBatcher(max_batch, max_wait_s)
+
+    # ------------------------------------------------------------------
+    def warmup(self, requests: list[dict] | None = None) -> list[int]:
+        """Compile every cap bucket the request population can hit.
+
+        A mixed batch's cap is ``bucket(max group)`` = the max of its
+        members' single-request caps, so warming one full-lane batch per
+        distinct per-request cap covers every batch composition.  Returns
+        the warmed buckets.
+        """
+        reqs = requests if requests is not None else self.server.bundle.requests
+        by_cap: dict[int, dict] = {}
+        for req in reqs:
+            by_cap.setdefault(self.server.batch_cap([req]), req)
+        already = set(self.server.compiled_buckets)
+        for cap in sorted(by_cap):
+            if cap not in already:  # don't re-pay a warm bucket every run()
+                self.server.serve_batch([by_cap[cap]])
+        return sorted(by_cap)
+
+    # ------------------------------------------------------------------
+    def run(self, arrivals, warmup: bool = True) -> RuntimeStats:
+        """Replay a timestamped arrival trace; returns per-request records.
+
+        ``arrivals``: iterable of :class:`Arrival` or ``(t, request)`` pairs
+        (seconds on the virtual clock; sorted internally).
+        """
+        arr = sorted(
+            (
+                a if isinstance(a, Arrival) else Arrival(float(a[0]), a[1])
+                for a in arrivals
+            ),
+            key=lambda a: a.t,
+        )
+        if warmup:
+            self.warmup([a.request for a in arr])
+        compiles_before = self.server.compile_count
+
+        stats = RuntimeStats(tau=self.server.config.tau)
+        if not arr:
+            stats.compiled_buckets = self.server.compiled_buckets
+            return stats
+
+        records: list[RequestRecord | None] = [None] * len(arr)
+        queue: deque[int] = deque()
+        now = arr[0].t
+        i = 0
+        batch_id = 0
+        while i < len(arr) or queue:
+            if not queue:
+                now = max(now, arr[i].t)
+            while i < len(arr) and arr[i].t <= now:
+                queue.append(i)
+                i += 1
+            oldest_wait = now - arr[queue[0]].t
+            if not self.batcher.ready(len(queue), oldest_wait, i < len(arr)):
+                # idle until the next decision point: the oldest request's
+                # max-wait deadline or the next arrival, whichever is first
+                # (both are strictly > now, so the loop always progresses)
+                now = min(arr[queue[0]].t + self.batcher.max_wait_s, arr[i].t)
+                continue
+            idxs = [
+                queue.popleft()
+                for _ in range(min(self.batcher.max_size, len(queue)))
+            ]
+            admit_t = now
+            t0 = time.perf_counter()
+            res = self.server.serve_batch([arr[j].request for j in idxs])
+            dt = time.perf_counter() - t0
+            now += dt
+            stats.busy_s += dt
+            for lane, j in enumerate(idxs):
+                records[j] = RequestRecord(
+                    req_id=j,
+                    arrival_t=arr[j].t,
+                    admit_t=admit_t,
+                    done_t=now,
+                    queue_delay_s=admit_t - arr[j].t,
+                    exec_s=dt,
+                    latency_s=now - arr[j].t,
+                    batch_id=batch_id,
+                    batch_fill=len(idxs),
+                    y_hat=float(res.y_hat[lane]),
+                    prob=float(res.prob[lane]),
+                    iters=int(res.iters[lane]),
+                    sample_frac=float(res.sample_frac[lane]),
+                )
+            batch_id += 1
+
+        stats.records = [r for r in records if r is not None]
+        stats.makespan_s = now - arr[0].t
+        stats.n_batches = batch_id
+        stats.compile_count = self.server.compile_count - compiles_before
+        stats.compiled_buckets = self.server.compiled_buckets
+        return stats

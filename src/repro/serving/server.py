@@ -23,12 +23,11 @@ import numpy as np
 
 from repro.core.executor import BiathlonConfig, HostLoopExecutor, run_exact
 from repro.core.executor_fused import build_fused_executor
+from repro.data.aggregates import AGG_IDS
 from repro.data.store import bucket_size
 from repro.data.synthetic import PipelineBundle
 
 __all__ = ["BiathlonServer", "ServerStats"]
-
-_AGG_IDS = {"avg": 0, "sum": 1, "count": 2, "var": 3, "std": 4}
 
 
 @dataclass
@@ -44,6 +43,19 @@ class ServerStats:
 
     def summary(self, delta: float, task: str) -> dict:
         lat = np.array(self.latencies)
+        if len(lat) == 0:
+            # zero served requests: well-defined zeros/NaNs, never a crash
+            return {
+                "n": 0,
+                "mean_latency_s": float("nan"),
+                "p95_latency_s": float("nan"),
+                "mean_exact_latency_s": float("nan"),
+                "speedup": 0.0,
+                "mean_sample_frac": float("nan"),
+                "mean_iters": 0.0,
+                "guarantee_rate": 0.0,
+                "mean_abs_err_vs_exact": float("nan"),
+            }
         ex = np.array(self.exact_latencies) if self.exact_latencies else np.array([np.nan])
         err = np.array(self.errors_vs_exact)
         within = (
@@ -56,11 +68,11 @@ class ServerStats:
             "mean_latency_s": float(lat.mean()),
             "p95_latency_s": float(np.percentile(lat, 95)),
             "mean_exact_latency_s": float(np.nanmean(ex)),
-            "speedup": float(np.nanmean(ex) / lat.mean()) if len(lat) else 0.0,
+            "speedup": float(np.nanmean(ex) / lat.mean()),
             "mean_sample_frac": float(np.mean(self.sample_fracs)),
             "mean_iters": float(np.mean(self.iters)),
-            "guarantee_rate": float(np.mean(within)),
-            "mean_abs_err_vs_exact": float(err.mean()),
+            "guarantee_rate": float(np.mean(within)) if len(err) else 0.0,
+            "mean_abs_err_vs_exact": float(err.mean()) if len(err) else float("nan"),
         }
 
 
@@ -70,6 +82,7 @@ class BiathlonServer:
         bundle: PipelineBundle,
         config: BiathlonConfig | None = None,
         mode: str = "host",
+        max_cap: int | None = None,
     ):
         self.bundle = bundle
         self.config = config or BiathlonConfig()
@@ -78,13 +91,14 @@ class BiathlonServer:
         self.store = bundle.store
         self._host = HostLoopExecutor(self.store, self.config)
         self._fused = None
+        self._max_cap_override = max_cap
         if mode == "fused":
             self._build_fused()
 
     # ------------------------------------------------------------------
     def _build_fused(self):
         p = self.pipeline
-        unsupported = [f.agg for f in p.agg_features if f.agg not in _AGG_IDS]
+        unsupported = [f.agg for f in p.agg_features if f.agg not in AGG_IDS]
         if unsupported:
             raise ValueError(
                 f"fused executor supports parametric aggregates only, got {unsupported}"
@@ -116,7 +130,7 @@ class BiathlonServer:
             max_iters=cfg.max_iters,
         )
         self._agg_ids = jnp.asarray(
-            [_AGG_IDS[f.agg] for f in p.agg_features], jnp.int32
+            [AGG_IDS[f.agg] for f in p.agg_features], jnp.int32
         )
         max_n = max(
             self.store[f.table].group_size(g)
@@ -126,6 +140,8 @@ class BiathlonServer:
         # store-wide ceiling; each request gathers at its own power-of-two
         # bucket below this, so small groups skip the worst-case padding
         self._cap = bucket_size(max_n)
+        if self._max_cap_override is not None:
+            self._cap = min(self._cap, bucket_size(self._max_cap_override))
 
     # ------------------------------------------------------------------
     def serve(self, request: dict, key=None):

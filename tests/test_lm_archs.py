@@ -77,6 +77,28 @@ def test_prefill_decode_consistency(arch):
     )
 
 
+def test_decode_capacity_guard():
+    """Decoding past the cache's reserved headroom must raise, not clamp.
+
+    dynamic_update_slice clamps out-of-range starts onto the newest cached
+    slot — the silent corruption behind the old qwen prefill/decode
+    inconsistency.  The eager decode path now refuses the write instead.
+    """
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    model = LM(cfg, remat=False, attn_block=64, loss_chunk=32)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, 16), 0, cfg.vocab)
+    _, cache = model.prefill(params, tokens, max_seq=16)  # zero headroom
+    with pytest.raises(ValueError, match="cache exhausted"):
+        model.decode_step(params, cache, tokens[:, :1])
+    # two reserved slots: two decode steps succeed, the third refuses
+    _, cache = model.prefill(params, tokens, max_seq=18)
+    _, cache = model.decode_step(params, cache, tokens[:, :1])
+    _, cache = model.decode_step(params, cache, tokens[:, :1])
+    with pytest.raises(ValueError, match="cache exhausted"):
+        model.decode_step(params, cache, tokens[:, :1])
+
+
 def test_mamba2_chunked_equals_recurrent():
     """Chunked SSD scan == token-by-token recurrence (zamba2 decode)."""
     from repro.models.lm import ssm as ssm_lib

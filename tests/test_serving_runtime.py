@@ -1,0 +1,229 @@
+"""Arrival-driven serving runtime: fixed lanes, admission policy, stats.
+
+Covers the PR-2 serving contract:
+
+* one compiled executable per power-of-two cap bucket across batch fills
+  r = 1, 3, batch_size (the fixed-lane property);
+* padded-lane results identical to an exact-``r`` batch;
+* sample_frac parity across serve modes (true-group-size denominator);
+* empty-input guards (ServerStats.summary, straggler_report, RuntimeStats);
+* the max-wait / max-size admission policy and the Poisson trace generator;
+* per-request queue-delay vs execution-latency accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.core.executor import BiathlonConfig
+from repro.core.pipeline import AggFeature, Pipeline
+from repro.data.store import ColumnStore, build_table
+from repro.data.synthetic import PipelineBundle, poisson_arrivals
+from repro.models.tabular import LinearRegression
+from repro.serving import (
+    AdmissionBatcher,
+    BatchedFusedServer,
+    BiathlonServer,
+    ServerStats,
+    ServingRuntime,
+)
+from repro.serving.batched import BatchResult, straggler_report
+
+CFG = BiathlonConfig(m=64, m_sobol=16)
+
+
+@pytest.fixture(scope="module")
+def small_bundle():
+    """8 groups of 120 rows + 2 groups of 900 rows, linear model."""
+    rng = np.random.default_rng(0)
+    sizes = [120] * 8 + [900] * 2
+    gid = np.concatenate([np.full(s, g) for g, s in enumerate(sizes)])
+    mu = rng.normal(0, 5, len(sizes))
+    vals = mu[gid] + rng.normal(0, 2.0, len(gid))
+    aux = 0.5 * mu[gid] + rng.normal(0, 1.0, len(gid))
+    store = ColumnStore().add("t", build_table({"v": vals, "a": aux}, gid, seed=1))
+    X = np.stack([mu, 0.5 * mu], axis=1)
+    y = 3 * X[:, 0] + X[:, 1] + rng.normal(0, 0.01, len(sizes))
+    pipe = Pipeline(
+        name="small",
+        agg_features=[
+            AggFeature("avg_v", "t", "v", "avg", "g"),
+            AggFeature("avg_a", "t", "a", "avg", "g"),
+        ],
+        exact_features=[],
+        model=LinearRegression().fit(X, y),
+        task="regression",
+        scaler_mean=np.zeros(2, np.float32),
+        scaler_scale=np.ones(2, np.float32),
+        delta_default=0.5,
+    )
+    return PipelineBundle(
+        pipeline=pipe, store=store,
+        requests=[{"g": g} for g in range(len(sizes))],
+        labels=y, table_rows=len(gid), name="small",
+    )
+
+
+@pytest.fixture(scope="module")
+def server8(small_bundle):
+    return BatchedFusedServer(small_bundle, CFG, batch_size=8)
+
+
+# ---------------------------------------------------------------- fixed lanes
+def test_one_compile_per_cap_bucket_across_fills(small_bundle):
+    """Fills r=1, 3, batch_size share ONE executable per cap bucket."""
+    srv = BatchedFusedServer(small_bundle, CFG, batch_size=4)
+    assert srv.compile_count == 0
+    r1 = srv.serve_batch([{"g": 0}])
+    r3 = srv.serve_batch([{"g": 1}, {"g": 2}, {"g": 3}])
+    r4 = srv.serve_batch([{"g": c} for c in range(4)])
+    assert srv.compile_count == 1, "fill variation must not recompile"
+    assert srv.compiled_buckets == [128]
+    assert r1.lanes == r3.lanes == r4.lanes == 4
+    assert (r1.y_hat.shape, r3.y_hat.shape, r4.y_hat.shape) == ((1,), (3,), (4,))
+    # a new cap bucket is the ONLY thing that compiles
+    rb = srv.serve_batch([{"g": 8}])
+    assert srv.compile_count == 2
+    assert srv.compiled_buckets == [128, 1024]
+    assert rb.cap == 1024
+
+
+def test_padded_lane_results_match_unpadded(small_bundle, server8):
+    """r < batch_size padded to fixed lanes == exact-r lane count."""
+    reqs = [{"g": 1}, {"g": 2}, {"g": 3}]
+    padded = server8.serve_batch(reqs)               # 3 active lanes of 8
+    exact = BatchedFusedServer(small_bundle, CFG, batch_size=3).serve_batch(reqs)
+    assert padded.lanes == 8 and exact.lanes == 3
+    np.testing.assert_allclose(padded.y_hat, exact.y_hat, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(padded.iters, exact.iters)
+    np.testing.assert_allclose(padded.sample_frac, exact.sample_frac, rtol=1e-7)
+    np.testing.assert_allclose(padded.prob, exact.prob, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- sample_frac parity
+def test_sample_frac_true_denominator_across_modes(small_bundle):
+    """§4 sample fraction must be touched-rows / TRUE group rows in every
+    mode, including when a max_cap ceiling clips the buffers."""
+    cap = 64  # < the 120-row groups: numerator is clipped, denominator not
+    batched = BatchedFusedServer(small_bundle, CFG, batch_size=2, max_cap=cap)
+    fused = BiathlonServer(small_bundle, CFG, mode="fused", max_cap=cap)
+    req = {"g": 4}
+    rb = batched.serve_batch([req])
+    rf = fused.serve(req)
+    # identical executors + identical buffers -> identical fractions
+    assert rb.sample_frac[0] == pytest.approx(rf["sample_frac"], rel=1e-7)
+    # the fraction is measured against the true 120-row group
+    assert rb.sample_frac[0] <= cap * 2 / (120 * 2) + 1e-9
+    host = BiathlonServer(small_bundle, CFG, mode="host")
+    rh = host.serve(req)
+    assert 0.0 < rh["sample_frac"] <= 1.0  # same true-size denominator scale
+
+
+# ----------------------------------------------------------- empty guards
+def test_server_stats_summary_empty():
+    s = ServerStats().summary(delta=0.5, task="regression")
+    assert s["n"] == 0
+    assert s["speedup"] == 0.0
+    assert np.isnan(s["mean_latency_s"])
+    assert np.isnan(s["p95_latency_s"])
+
+
+def test_straggler_report_empty_and_padded(server8):
+    empty = BatchResult(
+        y_hat=np.zeros((0,), np.float32), prob=np.zeros((0,), np.float32),
+        iters=np.zeros((0,), np.int32), sample_frac=np.zeros((0,), np.float32),
+        batch_iters=0, cap=0, lanes=8,
+    )
+    rep = straggler_report(empty)
+    assert rep["batch_iters"] == 0
+    assert rep["straggler"] == -1
+    assert rep["wasted_frac"] == 0.0
+    assert rep["fill"] == 0.0
+
+    res = server8.serve_batch([{"g": 5}, {"g": 6}, {"g": 8}])
+    rep = straggler_report(res)
+    assert len(rep["per_request_iters"]) == 3   # active lanes only
+    assert rep["lanes"] == 8
+    assert rep["fill"] == pytest.approx(3 / 8)
+    assert (rep["wasted_iters"] >= 0).all()
+    assert rep["straggler"] == int(np.argmax(res.iters))
+
+
+def test_serve_batch_empty(server8):
+    res = server8.serve_batch([])
+    assert res.y_hat.shape == (0,)
+    assert res.batch_iters == 0
+
+
+def test_serve_batch_rejects_oversize(server8):
+    """> batch_size would compile per distinct oversize fill — refuse it."""
+    reqs = [{"g": i % 4} for i in range(server8.batch_size + 1)]
+    with pytest.raises(ValueError, match="fixed lane count"):
+        server8.serve_batch(reqs)
+
+
+# ------------------------------------------------------------ admission policy
+def test_admission_batcher_policy():
+    b = AdmissionBatcher(max_size=4, max_wait_s=0.02)
+    assert not b.ready(0, 0.0, more_coming=True)      # empty never admits
+    assert not b.ready(2, 0.001, more_coming=True)    # partial, fresh, waiting
+    assert b.ready(4, 0.0, more_coming=True)          # full batch
+    assert b.ready(1, 0.02, more_coming=True)         # max-wait expired
+    assert b.ready(1, 0.02 - 1e-12, more_coming=True)  # fp-tolerant deadline
+    assert b.ready(1, 0.0, more_coming=False)         # drained trace flushes
+    with pytest.raises(ValueError):
+        AdmissionBatcher(0, 0.01)
+    with pytest.raises(ValueError):
+        AdmissionBatcher(4, -1.0)
+
+
+def test_poisson_arrivals_deterministic_and_sorted(small_bundle):
+    reqs = small_bundle.requests[:3]
+    a1 = poisson_arrivals(reqs, rate_rps=100.0, n=50, seed=7)
+    a2 = poisson_arrivals(reqs, rate_rps=100.0, n=50, seed=7)
+    assert a1 == a2
+    ts = [t for t, _ in a1]
+    assert ts == sorted(ts) and ts[0] > 0.0
+    assert len(a1) == 50
+    assert [r for _, r in a1[:4]] == [reqs[0], reqs[1], reqs[2], reqs[0]]
+    # mean gap ~ 1/rate (loose: 50 samples)
+    gaps = np.diff([0.0] + ts)
+    assert 0.3 / 100 < gaps.mean() < 3.0 / 100
+    with pytest.raises(ValueError):
+        poisson_arrivals(reqs, rate_rps=0.0)
+    assert poisson_arrivals([], rate_rps=5.0) == []
+
+
+# ------------------------------------------------------------ runtime loop
+def test_runtime_serves_all_and_accounts_delay(small_bundle, server8):
+    runtime = ServingRuntime(server8, max_wait_s=0.01)
+    arrivals = poisson_arrivals(small_bundle.requests, rate_rps=300.0, n=16, seed=3)
+    stats = runtime.run(arrivals)
+    assert len(stats.records) == 16
+    # after warmup, fill variation must not compile anything new
+    assert stats.compile_count == 0
+    for rec in stats.records:
+        assert rec.queue_delay_s >= 0.0
+        assert rec.exec_s > 0.0
+        assert rec.latency_s == pytest.approx(
+            rec.queue_delay_s + (rec.done_t - rec.admit_t), abs=1e-9
+        )
+        assert 1 <= rec.batch_fill <= server8.batch_size
+        assert np.isfinite(rec.y_hat)
+    s = stats.summary()
+    assert s["n"] == 16
+    assert s["throughput_rps"] > 0
+    assert s["n_batches"] == len({r.batch_id for r in stats.records})
+    assert s["p99_latency_ms"] >= s["p50_latency_ms"] > 0
+    assert 0 < s["mean_batch_fill"] <= server8.batch_size
+
+    # empty trace: well-defined zeros, no crash
+    empty = ServingRuntime(server8).run([])
+    assert empty.summary()["n"] == 0
+
+
+def test_runtime_max_batch_respects_lanes(server8):
+    with pytest.raises(ValueError):
+        ServingRuntime(server8, max_batch=server8.batch_size + 1)
+    rt = ServingRuntime(server8, max_wait_s=0.0, max_batch=2)
+    arrivals = [(0.001 * i, {"g": i % 4}) for i in range(6)]
+    stats = rt.run(arrivals)
+    assert all(r.batch_fill <= 2 for r in stats.records)
