@@ -8,6 +8,11 @@ Besides the CSV rows, writes mean/p50/p99 latency and the per-iteration
 model-row counts (pre-fusion three-dispatch body vs the single megabatch)
 to ``BENCH_fused.json`` at the repo root so the perf trajectory is tracked
 across PRs.
+
+``run_holistic`` measures the same comparison on MEDIAN/QUANTILE pipelines
+(the appendix-D operators the fused path now serves) and writes the
+``fused_vs_host_holistic`` section; the host loop pays per-feature bootstrap
+dispatches there, so scale is the QUICK-tier bundle.
 """
 from __future__ import annotations
 
@@ -26,6 +31,8 @@ from repro.data.store import bucket_size
 from repro.serving import BiathlonServer
 
 PIPES = ("bearing_imbalance", "tick_price", "turbofan")
+# (pipeline, appendix-D median substitution?) — holistic-featured workloads
+HOLISTIC_PIPES = (("sensor_health", False), ("turbofan", True))
 
 
 def model_rows_per_iteration(k: int, m: int, m_sobol: int) -> dict:
@@ -45,6 +52,41 @@ def model_rows_per_iteration(k: int, m: int, m_sobol: int) -> dict:
     }
 
 
+def _measure_modes(b, cfg, *, compare_exact, quality: bool = False) -> dict:
+    """Warm every cap bucket, then serve the full log in host + fused modes.
+
+    One warm request per distinct cap bucket (serving is steady-state:
+    ≤ log2(max_cap) compiles ever, paid once).  ``compare_exact(mode)``
+    decides whether the exact baseline runs alongside; ``quality`` adds
+    guarantee-rate / mean-|err| fields (needs compare_exact truthy).
+    """
+    bucket_reps = {}
+    for req in b.requests:
+        n_max = int(b.pipeline.group_sizes(b.store, req).max())
+        bucket_reps.setdefault(bucket_size(n_max), req)
+    out = {}
+    for mode in ("host", "fused"):
+        srv = BiathlonServer(b, cfg, mode=mode)
+        for req in bucket_reps.values():
+            srv.serve(req)
+        stats = srv.serve_all(b.requests, compare_exact=compare_exact(mode))
+        out[mode] = dict(
+            latency=latency_stats(stats.latencies),
+            frac=float(np.mean(stats.sample_fracs)),
+            iters=float(np.mean(stats.iters)),
+        )
+        if quality:
+            err = np.asarray(stats.errors_vs_exact)
+            tol = (
+                b.pipeline.delta_default + 1e-9
+                if b.pipeline.task == "regression"
+                else 1e-9
+            )
+            out[mode]["guarantee_rate"] = float(np.mean(err <= tol))
+            out[mode]["mean_abs_err"] = float(err.mean())
+    return out
+
+
 def run(pipelines=PIPES) -> list[str]:
     out = []
     cfg = BiathlonConfig(**DEFAULT_CFG)
@@ -54,23 +96,7 @@ def run(pipelines=PIPES) -> list[str]:
     }
     for name in pipelines:
         b = bundle(name)
-        res = {}
-        # one warm request per distinct cap bucket (serving is steady-state:
-        # ≤ log2(max_cap) compiles ever, paid once)
-        bucket_reps = {}
-        for req in b.requests:
-            n_max = int(b.pipeline.group_sizes(b.store, req).max())
-            bucket_reps.setdefault(bucket_size(n_max), req)
-        for mode in ("host", "fused"):
-            srv = BiathlonServer(b, cfg, mode=mode)
-            for req in bucket_reps.values():
-                srv.serve(req)
-            stats = srv.serve_all(b.requests, compare_exact=(mode == "host"))
-            res[mode] = dict(
-                latency=latency_stats(stats.latencies),
-                frac=float(np.mean(stats.sample_fracs)),
-                iters=float(np.mean(stats.iters)),
-            )
+        res = _measure_modes(b, cfg, compare_exact=lambda mode: mode == "host")
         rows = model_rows_per_iteration(b.pipeline.k, cfg.m, cfg.m_sobol)
         speedup = res["host"]["latency"]["mean_us"] / res["fused"]["latency"]["mean_us"]
         payload["pipelines"][name] = {
@@ -91,4 +117,56 @@ def run(pipelines=PIPES) -> list[str]:
             )
         )
     write_bench_json("fused_vs_host", payload)
+    return out
+
+
+def run_holistic(pipelines=HOLISTIC_PIPES, scale: dict | None = None) -> list[str]:
+    """Fused-vs-host on MEDIAN/QUANTILE pipelines -> BENCH_fused.json.
+
+    Also records guarantee rate and mean |err| vs the exact baseline for the
+    fused path — the acceptance evidence that the holistic fused executor
+    matches the host loop's quality, not just its speed.  Holistic host
+    iterations pay B-replicate bootstraps per feature, so this section runs
+    at a reduced scale (recorded in the payload).
+    """
+    from repro.data.synthetic import make_pipeline, make_pipeline_median
+
+    scale = scale or dict(
+        rows_per_group=8000, n_train_groups=150, n_serve_groups=5, n_requests=8
+    )
+    out = []
+    cfg = BiathlonConfig(**DEFAULT_CFG)
+    payload: dict = {
+        "config": {"m": cfg.m, "m_sobol": cfg.m_sobol, "tau": cfg.tau,
+                   "n_bootstrap": cfg.n_bootstrap},
+        "scale": scale,
+        "pipelines": {},
+    }
+    for name, median in pipelines:
+        label = f"{name}_median" if median else name
+        b = (make_pipeline_median if median else make_pipeline)(name, **scale)
+        res = _measure_modes(b, cfg, compare_exact=lambda mode: True, quality=True)
+        speedup = res["host"]["latency"]["mean_us"] / res["fused"]["latency"]["mean_us"]
+        payload["pipelines"][label] = {
+            "k": b.pipeline.k,
+            "holistic_features": sum(
+                f.agg in ("median", "quantile") for f in b.pipeline.agg_features
+            ),
+            "delta": b.pipeline.delta_default,
+            "host": res["host"],
+            "fused": res["fused"],
+            "speedup_vs_host": speedup,
+        }
+        out.append(
+            csv_row(
+                f"perf/fused_vs_host_holistic/{label}",
+                res["fused"]["latency"]["mean_us"],
+                f"host_us={res['host']['latency']['mean_us']:.0f};"
+                f"speedup={speedup:.2f};"
+                f"guar_fused={res['fused']['guarantee_rate']:.2f};"
+                f"guar_host={res['host']['guarantee_rate']:.2f};"
+                f"frac_fused={res['fused']['frac']:.3f}",
+            )
+        )
+    write_bench_json("fused_vs_host_holistic", payload)
     return out

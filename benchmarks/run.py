@@ -40,6 +40,7 @@ def main() -> None:
         "fig13_14_imbalance": median_imbalance.run,
         "kernel_micro": kernel_micro.run,
         "perf_fused_vs_host": fused_vs_host.run,
+        "perf_fused_vs_host_holistic": fused_vs_host.run_holistic,
         "perf_serving_load": serving_load.run,
         "roofline": roofline.run,
     }

@@ -11,18 +11,36 @@ The fused variant expresses the iterate-until-guaranteed loop as a
 
 * sample growth is a *monotone prefix mask* over pre-gathered, pre-permuted
   (k, cap) buffers — the plan z is data, not shape;
-* AFC = one-pass power-sum moments (the Pallas ``sampled_agg`` kernel on
-  TPU, its jnp oracle elsewhere) turned into (value, sigma) with
-  finite-population correction;
+* AFC covers the FULL operator set.  Parametric aggregates
+  (SUM/COUNT/AVG/VAR/STD) are one-pass power-sum moments (the Pallas
+  ``sampled_agg`` kernel on TPU, its jnp oracle elsewhere) turned into
+  (value, sigma) with finite-population correction.  Holistic aggregates
+  (MEDIAN/QUANTILE, paper appendix D) get a fixed-shape ``(h, B)`` sorted
+  bootstrap-replicate table recomputed on device each iteration: replicate
+  ranks come from counter-based RNG (``jax.random.fold_in`` on the
+  iteration index, so shapes and keys are static inside the while_loop)
+  and are selected from the prefix in one ``masked_select_ranks`` pass
+  (kernel or oracle, ``afc_backend``-routed);
+* the megabatch row sampler ports ``uncertainty.sample_features``:
+  parametric features draw ``value + sigma·Φ⁻¹(u)``, holistic features draw
+  the empirical inverse CDF of their replicate table at the same QMC
+  uniform — so a MEDIAN feature's uncertainty is propagated exactly as the
+  host loop propagates it;
 * AMI + Sobol indices share ONE fused QMC evaluation megabatch: the m AMI
   rows, the single point-estimate row, and the (k+2)·m_sobol Saltelli
   A/B/AB rows are concatenated and evaluated with a single ``model_fn``
   call per planner iteration — ``m + 1 + (k+2)·m_sobol`` model rows,
   sliced afterwards for the Eq. 1 guarantee check and the main-effect
   indices (the Saltelli-style model-call amortization);
-* the loop state carries ``(z, iter, y_hat, prob, indices)`` so each
-  iteration steps the plan with the *previous* evaluation's indices and
-  then evaluates the new plan exactly once — no duplicate pre-step call;
+* the loop state carries ``(z, iter, y_hat, prob, indices, replicates)`` so
+  each iteration steps the plan with the *previous* evaluation's indices
+  and then evaluates the new plan exactly once — no duplicate pre-step
+  call;
+* features declared ``approximate=False`` (the paper's Fig. 10 exactness
+  ablation) are pinned to ``z_j = n_j`` from z⁰ onward, exactly as the host
+  loop pins them — the planner never grows them (they are exhausted) and
+  their sigma/replicates are degenerate, so they contribute zero
+  uncertainty;
 * the initial plan gets a cheap AMI-only dispatch (m+1 rows); its Sobol
   block runs under ``lax.cond`` only when the guarantee fails at z⁰, so
   immediately-satisfied requests (the common case at the paper's α) never
@@ -31,34 +49,42 @@ The fused variant expresses the iterate-until-guaranteed loop as a
   batches always pay the init Sobol block;
 * the loop condition is the Eq. 1 guarantee check.
 
-Restrictions vs the host loop (documented): parametric aggregates only
-(SUM/COUNT/AVG/VAR/STD — bootstrap resampling for MEDIAN needs per-iteration
-RNG shapes that stay host-side), and the per-request buffer is capped at
-``cap`` rows (the guarantee's worst case degrades to exact-over-cap).
-Batched serving vmaps this executor over concurrent requests with
-power-of-two bucketed caps (serving/batched.py).
-
-Per-iteration cost model (EXPERIMENTS.md §Perf): one model dispatch of
-``m + 1 + (k+2)·m_sobol`` rows, one AFC moments pass, zero host round
-trips — vs the pre-fusion body's three dispatches totalling
-``2·(m+1) + (k+2)·m_sobol`` rows.
+Cost model (EXPERIMENTS.md §Perf): one model dispatch of
+``m + 1 + (k+2)·m_sobol`` rows and one AFC pass per iteration, zero host
+round trips.  A pipeline with ``h`` holistic features adds one
+``masked_select_ranks`` pass per iteration — ``h·(1+B)`` order-statistic
+selections over the (h, cap) buffers (B = ``n_boot`` replicates, default
+256) plus ``h·B`` Beta draws for the replicate ranks; pipelines with
+``h = 0`` compile to exactly the parametric-only program.  The remaining
+restriction vs the host loop is the ``cap``-row buffer bound (the
+guarantee's worst case degrades to exact-over-cap).  Batched serving vmaps
+this executor over concurrent requests with power-of-two bucketed caps
+(serving/batched.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.planner import direction, next_plan
+from repro.core.planner import direction, gamma_abs, initial_plan, next_plan
 from repro.core.propagation import qmc_uniforms
 from repro.core.qmc import uniform_to_normal
-from repro.kernels.sampled_agg.ops import masked_estimates
+from repro.data.aggregates import AGG_IDS_FULL, HOLISTIC_AGGS
+from repro.kernels.sampled_agg.ops import (
+    masked_estimates,
+    masked_quantile_estimates,
+)
 
 f32 = jnp.float32
 
-__all__ = ["FusedResult", "build_fused_executor", "fused_rows_per_iteration"]
+__all__ = [
+    "FusedResult",
+    "build_fused_executor",
+    "fused_rows_per_iteration",
+    "pipeline_executor_kwargs",
+]
 
 
 class FusedResult(NamedTuple):
@@ -74,6 +100,35 @@ def fused_rows_per_iteration(k: int, m: int, m_sobol: int) -> int:
     return m + 1 + (k + 2) * m_sobol
 
 
+def pipeline_executor_kwargs(agg_features) -> dict:
+    """Per-feature executor kwargs from a pipeline's ``agg_features``.
+
+    Returns the ``holistic`` / ``quantiles`` / ``approximate`` build
+    arguments plus the runtime ``agg_ids`` row — the one place the
+    feature-spec -> executor translation lives, shared by both fused
+    serving paths.  Raises on operators outside AGG_IDS_FULL.
+    """
+    unsupported = sorted(
+        {f.agg for f in agg_features if f.agg not in AGG_IDS_FULL}
+    )
+    if unsupported:
+        raise ValueError(f"unsupported aggregates {unsupported}")
+    holistic = tuple(
+        j for j, f in enumerate(agg_features) if f.agg in HOLISTIC_AGGS
+    )
+    return dict(
+        holistic=holistic,
+        quantiles=tuple(
+            0.5 if agg_features[j].agg == "median" else agg_features[j].quantile
+            for j in holistic
+        ),
+        approximate=tuple(f.approximate for f in agg_features),
+        agg_ids=jnp.asarray(
+            [AGG_IDS_FULL[f.agg] for f in agg_features], jnp.int32
+        ),
+    )
+
+
 def build_fused_executor(
     model_fn,
     *,
@@ -87,6 +142,11 @@ def build_fused_executor(
     tau: float = 0.95,
     max_iters: int = 32,
     afc_backend: str = "auto",
+    holistic: Sequence[int] = (),
+    quantiles: Sequence[float] | None = None,
+    n_boot: int = 256,
+    approximate: Sequence[bool] | None = None,
+    boot_seed: int = 0,
 ):
     """Returns jit-able ``run(vals (k,cap), n (k,), agg_ids (k,), delta) -> FusedResult``.
 
@@ -107,18 +167,55 @@ def build_fused_executor(
     ``model_fn`` is invoked exactly ONCE per planner iteration, on a
     ``(m + 1 + (k+2)*m_sobol, k)`` megabatch (see module docstring).
 
-    ``afc_backend``: "auto" routes the AFC moments pass through the Pallas
-    ``sampled_moments`` kernel on TPU and the jnp oracle elsewhere;
-    "kernel" forces the kernel (interpret-mode fallback off-TPU — correctness
-    testing, not speed); "ref" forces the oracle.
+    ``afc_backend``: "auto" routes the AFC passes (``sampled_moments`` and
+    the holistic ``masked_select_ranks``) through the Pallas kernels on TPU
+    and the jnp oracles elsewhere; "kernel" forces the kernels
+    (interpret-mode fallback off-TPU — correctness testing, not speed);
+    "ref" forces the oracles.
+
+    Holistic support (static, per-pipeline): ``holistic`` lists the feature
+    indices whose ``agg_ids`` are MEDIAN/QUANTILE, ``quantiles`` their q's
+    (aligned with ``holistic``; median = 0.5), ``n_boot`` the bootstrap
+    replicate count B, ``boot_seed`` the base of the counter-based replicate
+    RNG (folded with the iteration index; shared across vmapped lanes, like
+    the QMC uniforms).  ``approximate`` flags per feature whether Biathlon
+    may sample it (False = Fig. 10 exact-only: pinned to z = n).
     """
     use_kernel = {"auto": None, "kernel": True, "ref": False}[afc_backend]
+
+    hol = tuple(int(j) for j in holistic)
+    n_hol = len(hol)
+    hol_idx = jnp.asarray(hol, jnp.int32) if n_hol else None
+    qs = jnp.asarray(
+        [0.5] * n_hol if quantiles is None else list(quantiles), f32
+    )
+    if qs.shape[0] != n_hol:
+        raise ValueError("quantiles must align with holistic indices")
+    approx = jnp.asarray(
+        [True] * k if approximate is None else list(approximate), bool
+    )
+    n_boot = int(n_boot)
+    base_key = jax.random.PRNGKey(boot_seed)
 
     u_ami = qmc_uniforms(m, k)                       # (m, k) static
     u_sob = qmc_uniforms(m_sobol, 2 * k, None)       # (m_sobol, 2k)
 
-    def sample_rows(value, sigma, u):
-        return value[None, :] + sigma[None, :] * uniform_to_normal(u)
+    def sample_rows(value, sigma, reps, u):
+        """uncertainty.sample_features, fused-state edition.
+
+        Parametric: x̂ + σ·Φ⁻¹(u).  Holistic: empirical inverse CDF of the
+        sorted (h, B) replicate table at the feature's own uniform column.
+        """
+        rows = value[None, :] + sigma[None, :] * uniform_to_normal(u)
+        if n_hol:
+            idx = jnp.clip(
+                (u[:, hol_idx] * n_boot).astype(jnp.int32), 0, n_boot - 1
+            )
+            emp = jax.vmap(
+                lambda col, i: col[i], in_axes=(0, 1), out_axes=1
+            )(reps, idx)                              # (m', h)
+            rows = rows.at[:, hol_idx].set(emp)
+        return rows
 
     def guarantee_prob(y_hat, mean, sd, delta):
         if task == "classification":
@@ -147,12 +244,10 @@ def build_fused_executor(
         act = jnp.asarray(True) if active is None else active
         cap = vals.shape[1]
         n = jnp.minimum(n.astype(jnp.int32), cap)
-        z0 = jnp.clip(
-            jnp.ceil(alpha * n.astype(f32)).astype(jnp.int32), jnp.minimum(2, n), n
-        )
-        step = jnp.maximum(
-            jnp.ceil(gamma * jnp.sum(n).astype(f32)).astype(jnp.int32), 1
-        )
+        # exact-only operators (Fig. 10 ablation) consume their full groups
+        # from z⁰ on — the planner then never selects them (exhausted).
+        z0 = jnp.where(approx, initial_plan(n, alpha), n)
+        step = gamma_abs(n, gamma)
 
         def ami_prob(y, y_hat):
             """Eq. 1 guarantee probability from the AMI output slice."""
@@ -165,58 +260,80 @@ def build_fused_executor(
             )
             return probs[y_hat.astype(jnp.int32)]
 
-        def sobol_rows(value, sigma):
+        def afc(z, it):
+            """(value, sigma, replicates) at plan z — kernel/oracle routed.
+
+            Replicate ranks use counter-based RNG on the iteration index so
+            the while_loop body stays shape- and key-static.
+            """
+            value, sigma = masked_estimates(
+                vals, z, n, agg_ids, use_kernel=use_kernel
+            )
+            if not n_hol:
+                return value, sigma, jnp.zeros((0, n_boot), f32)
+            q_val, reps = masked_quantile_estimates(
+                vals[hol_idx],
+                z[hol_idx],
+                n[hol_idx],
+                qs,
+                jax.random.fold_in(base_key, it),
+                n_boot,
+                use_kernel=use_kernel,
+            )
+            value = value.at[hol_idx].set(q_val)
+            sigma = sigma.at[hol_idx].set(0.0)
+            return value, sigma, reps
+
+        def sobol_rows(value, sigma, reps):
             """Saltelli A/B/AB block: ((k+2)*m_sobol, k)."""
             ua, ub = u_sob[:, :k], u_sob[:, k:]
-            xa = sample_rows(value, sigma, ua)
-            xb = sample_rows(value, sigma, ub)
+            xa = sample_rows(value, sigma, reps, ua)
+            xb = sample_rows(value, sigma, reps, ub)
             eye = jnp.eye(k, dtype=bool)
             xab = jnp.where(eye[:, None, :], xb[None], xa[None]).reshape(
                 k * m_sobol, k
             )
             return jnp.concatenate([xa, xb, xab], 0)
 
-        def evaluate(z):
+        def evaluate(z, it):
             """AFC + AMI + Sobol via ONE model dispatch at plan z.
 
             Rows: [AMI (m,k) | point estimate (1,k) | Saltelli A/B/AB
             ((k+2)*m_sobol, k)] -> slice outputs for the guarantee check and
             the main-effect indices.
             """
-            value, sigma = masked_estimates(
-                vals, z, n, agg_ids, use_kernel=use_kernel
-            )
-            x_ami = sample_rows(value, sigma, u_ami)
+            value, sigma, reps = afc(z, it)
+            x_ami = sample_rows(value, sigma, reps, u_ami)
             batch = jnp.concatenate(
-                [x_ami, value[None, :], sobol_rows(value, sigma)], 0
+                [x_ami, value[None, :], sobol_rows(value, sigma, reps)], 0
             )
             y_all = model_fn(batch, exact).astype(f32)
 
             y_hat = y_all[m]
             prob = ami_prob(y_all[:m], y_hat)
             idx = sobol_from_outputs(y_all[m + 1 :], y_hat)
-            return y_hat, prob, idx
+            return y_hat, prob, idx, reps
 
         def cond(state):
-            z, it, y_hat, prob, idx = state
+            z, it, y_hat, prob, idx, reps = state
             return act & (prob < tau) & (it < max_iters) & jnp.any(z < n)
 
         def body(state):
-            z, it, _, _, idx = state
+            z, it, _, _, idx, _ = state
             d = direction(idx, z, n)
             z = next_plan(z, d, step, n)
-            y_hat, prob, idx = evaluate(z)
-            return (z, it + 1, y_hat, prob, idx)
+            y_hat, prob, idx, reps = evaluate(z, it + 1)
+            return (z, it + 1, y_hat, prob, idx, reps)
 
         # Initial plan: AMI-only dispatch (m+1 rows).  The Saltelli block is
         # only evaluated — via lax.cond, so immediately-guaranteed requests
         # skip its cost entirely — when the loop is actually entered.
         # (Under vmap the cond becomes a select and both branches run.)
-        value0, sigma0 = masked_estimates(
-            vals, z0, n, agg_ids, use_kernel=use_kernel
-        )
+        value0, sigma0, reps0 = afc(z0, jnp.zeros((), jnp.int32))
         y0_all = model_fn(
-            jnp.concatenate([sample_rows(value0, sigma0, u_ami), value0[None, :]], 0),
+            jnp.concatenate(
+                [sample_rows(value0, sigma0, reps0, u_ami), value0[None, :]], 0
+            ),
             exact,
         ).astype(f32)
         y_hat0 = y0_all[m]
@@ -224,12 +341,15 @@ def build_fused_executor(
         idx0 = jax.lax.cond(
             act & (prob0 < tau) & jnp.any(z0 < n) & (max_iters > 0),
             lambda: sobol_from_outputs(
-                model_fn(sobol_rows(value0, sigma0), exact).astype(f32), y_hat0
+                model_fn(sobol_rows(value0, sigma0, reps0), exact).astype(f32),
+                y_hat0,
             ),
             lambda: jnp.zeros((k,), f32),
         )
-        z, iters, y_hat, prob, _ = jax.lax.while_loop(
-            cond, body, (z0, jnp.zeros((), jnp.int32), y_hat0, prob0, idx0)
+        z, iters, y_hat, prob, _, _ = jax.lax.while_loop(
+            cond,
+            body,
+            (z0, jnp.zeros((), jnp.int32), y_hat0, prob0, idx0, reps0),
         )
         return FusedResult(
             y_hat=y_hat,

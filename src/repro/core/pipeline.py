@@ -26,7 +26,13 @@ import numpy as np
 
 from repro.data.store import ColumnStore
 
-__all__ = ["AggFeature", "ExactFeature", "Pipeline", "make_model_fn"]
+__all__ = [
+    "AggFeature",
+    "ExactFeature",
+    "Pipeline",
+    "make_model_fn",
+    "make_fused_model_fn",
+]
 
 
 @dataclass(frozen=True)
@@ -132,5 +138,29 @@ def make_model_fn(
         if mean.shape[0] == full.shape[1]:
             full = (full - mean[None, :]) / scale[None, :]
         return pipeline.model.predict(full)
+
+    return model_fn
+
+
+def make_fused_model_fn(pipeline: Pipeline):
+    """Request-agnostic model closure for the fused executors.
+
+    ``(agg_rows (m, k), exact (e,)) -> (m,) preds`` — the exact features are
+    data (per request/lane), not a closure constant, so ONE compiled
+    executor serves every request of the pipeline.  Shared by
+    ``BiathlonServer`` (fused mode) and ``BatchedFusedServer``.
+    """
+    mean = jnp.asarray(pipeline.scaler_mean, jnp.float32)
+    scale = jnp.asarray(pipeline.scaler_scale, jnp.float32)
+    model = pipeline.model
+
+    def model_fn(agg_rows: jnp.ndarray, exact: jnp.ndarray) -> jnp.ndarray:
+        m = agg_rows.shape[0]
+        full = jnp.concatenate(
+            [agg_rows, jnp.broadcast_to(exact[None, :], (m, exact.shape[0]))], 1
+        )
+        if mean.shape[0] == full.shape[1]:
+            full = (full - mean[None, :]) / scale[None, :]
+        return model.predict(full)
 
     return model_fn

@@ -30,6 +30,8 @@ __all__ = [
     "PARAMETRIC_AGGS",
     "HOLISTIC_AGGS",
     "AGG_IDS",
+    "AGG_IDS_FULL",
+    "HOLISTIC_ID_MIN",
     "masked_estimates_batch",
     "estimates_from_power_sums",
 ]
@@ -67,7 +69,12 @@ def _fpc(z: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
 
 
 def _masked_quantile(vals: jnp.ndarray, z: jnp.ndarray, q: float) -> jnp.ndarray:
-    """Quantile of the valid prefix: sort with +inf padding, nearest-rank."""
+    """Quantile of the valid prefix: sort with +inf padding, nearest-rank.
+
+    An empty prefix (``z == 0``) returns 0.0 — the same empty-prefix
+    convention as the parametric mean — instead of gathering the +inf
+    padding at rank 0.
+    """
     cap = vals.shape[0]
     padded = jnp.where(jnp.arange(cap) < z, vals, jnp.inf)
     s = jnp.sort(padded)
@@ -76,7 +83,7 @@ def _masked_quantile(vals: jnp.ndarray, z: jnp.ndarray, q: float) -> jnp.ndarray
         0,
         jnp.maximum(z - 1, 0),
     )
-    return s[rank]
+    return jnp.where(z > 0, s[rank], 0.0)
 
 
 def _bootstrap_replicates(
@@ -182,6 +189,13 @@ def exact_value(
 # Batched parametric estimation (one fused call for k features)
 # --------------------------------------------------------------------------
 AGG_IDS = {"avg": 0, "sum": 1, "count": 2, "var": 3, "std": 4}
+
+# Full operator id space, including the holistic (empirical-bootstrap)
+# aggregates the fused executor now serves.  Ids >= HOLISTIC_ID_MIN fall
+# through the parametric ``jnp.select`` below (value/sigma 0) and are
+# overwritten by the quantile/bootstrap path (kernels/sampled_agg/ops.py).
+HOLISTIC_ID_MIN = 5
+AGG_IDS_FULL = {**AGG_IDS, "median": 5, "quantile": 6}
 
 
 def _select_value_sigma(mean, m2, m4, zf, z, n, agg_ids):

@@ -38,7 +38,9 @@ from repro.models.tabular import (
 __all__ = [
     "PipelineBundle",
     "make_pipeline",
+    "make_pipeline_median",
     "PIPELINE_NAMES",
+    "EXTRA_PIPELINE_NAMES",
     "poisson_arrivals",
 ]
 
@@ -76,6 +78,9 @@ PIPELINE_NAMES = (
     "student_qa",
 )
 
+# Beyond-Table-1 workloads (holistic-aggregate coverage, appendix D / Fig. 10).
+EXTRA_PIPELINE_NAMES = ("sensor_health",)
+
 
 @dataclass
 class PipelineBundle:
@@ -105,7 +110,8 @@ class _PipeSpec:
     name: str
     table: str
     cols: tuple[_ColSpec, ...]
-    aggs: tuple[tuple[str, str], ...]        # (op, column)
+    # (op, column) or (op, column, q) — q only meaningful for "quantile"
+    aggs: tuple[tuple, ...]
     exact_fields: tuple[str, ...]            # request-provided scalars
     model_kind: str                          # lgbm | xgb | rf | lr | mlp
     task: str                                # regression | classification
@@ -113,8 +119,20 @@ class _PipeSpec:
     label_fn: Callable = None
 
 
+def _norm_agg(entry: tuple) -> tuple[str, str, float]:
+    """Normalize an agg spec entry to (op, column, q)."""
+    if len(entry) == 2:
+        return entry[0], entry[1], 0.5
+    return entry
+
+
 def _agg_latent(
-    op: str, group_mean: np.ndarray, group_std: np.ndarray, n: int, row_noise: float
+    op: str,
+    group_mean: np.ndarray,
+    group_std: np.ndarray,
+    n: int,
+    row_noise: float,
+    q: float = 0.5,
 ):
     """Population value of the aggregate, given group-level generative params.
 
@@ -123,7 +141,11 @@ def _agg_latent(
     population feature to match what exact aggregation over rows computes.
     """
     if op == "avg" or op == "median":
-        return group_mean
+        return group_mean  # rows are symmetric around the group mean
+    if op == "quantile":
+        from statistics import NormalDist
+
+        return group_mean + group_std * row_noise * NormalDist().inv_cdf(q)
     if op == "sum":
         return group_mean * n
     if op == "count":
@@ -184,6 +206,7 @@ def _build_from_spec(
     )
 
     # --- population (exact) aggregate values per group ---------------------
+    norm_aggs = tuple(_norm_agg(a) for a in spec.aggs)
     agg_pop = np.stack(
         [
             _agg_latent(
@@ -192,8 +215,9 @@ def _build_from_spec(
                 group_std[cname],
                 sizes,
                 1.0 if cols[cname].kind == "indicator" else cols[cname].row_noise,
+                q,
             )
-            for (op, cname) in spec.aggs
+            for (op, cname, q) in norm_aggs
         ],
         axis=1,
     )  # (G, k)
@@ -225,13 +249,15 @@ def _build_from_spec(
     # --- exact aggregates of serve groups, for faithful model features -----
     # (the model is trained on features distributed like the *served* ones)
     serve_exact_aggs = np.zeros((n_serve_groups, k), np.float32)
-    for j, (op, cname) in enumerate(spec.aggs):
+    for j, (op, cname, q) in enumerate(norm_aggs):
         for g in range(n_serve_groups):
             vals = table.full_values(cname, g)
             if op in ("avg",):
                 serve_exact_aggs[g, j] = vals.mean()
             elif op == "median":
                 serve_exact_aggs[g, j] = np.median(vals)
+            elif op == "quantile":
+                serve_exact_aggs[g, j] = np.quantile(vals, q)
             elif op == "sum":
                 serve_exact_aggs[g, j] = vals.sum()
             elif op == "count":
@@ -270,9 +296,14 @@ def _build_from_spec(
     # --- pipeline object ----------------------------------------------------
     agg_features = [
         AggFeature(
-            name=f"{op}_{cname}", table=spec.table, column=cname, agg=op, group_field="gid"
+            name=f"{op}{int(q * 100) if op == 'quantile' else ''}_{cname}",
+            table=spec.table,
+            column=cname,
+            agg=op,
+            group_field="gid",
+            quantile=q,
         )
-        for (op, cname) in spec.aggs
+        for (op, cname, q) in norm_aggs
     ]
     exact_features = [
         ExactFeature(name=f, kind="request", request_field=f) for f in spec.exact_fields
@@ -571,6 +602,48 @@ def _spec_student_qa():
     )
 
 
+def _spec_sensor_health():
+    # Holistic-featured workload (beyond Table 1): robust location/tail
+    # statistics over noisy sensor channels — MEDIAN + tail QUANTILE next to
+    # parametric AVG/STD, the operator mix appendix D covers.  LGBM
+    # regression; 5 AGG, 1 non-AGG.
+    def label(agg, ex, rng):
+        med_t, p90_v, avg_p, std_t, med_v = agg.T
+        age = ex[:, 0]
+        health = (
+            50.0
+            - 2.2 * med_t
+            - 1.4 * p90_v
+            + 0.9 * avg_p
+            - 1.1 * std_t * np.abs(med_v)
+            - 1.5 * np.tanh(age)
+        )
+        return health + rng.normal(0, 0.4, len(med_t))
+
+    cols = (
+        _ColSpec("temp", row_noise=1.4),
+        _ColSpec("vib"),
+        _ColSpec("pressure", row_noise=0.6),
+    )
+    aggs = (
+        ("median", "temp"),
+        ("quantile", "vib", 0.9),
+        ("avg", "pressure"),
+        ("std", "temp"),
+        ("median", "vib"),
+    )
+    return _PipeSpec(
+        name="sensor_health",
+        table="telemetry",
+        cols=cols,
+        aggs=aggs,
+        exact_fields=("age",),
+        model_kind="lgbm",
+        task="regression",
+        label_fn=label,
+    )
+
+
 _SPECS = {
     "trip_fare": _spec_trip_fare,
     "tick_price": _spec_tick_price,
@@ -579,6 +652,7 @@ _SPECS = {
     "bearing_imbalance": _spec_bearing,
     "fraud_detection": _spec_fraud,
     "student_qa": _spec_student_qa,
+    "sensor_health": _spec_sensor_health,
 }
 
 
@@ -597,7 +671,10 @@ def make_pipeline(
     paper's >1s baselines), tests use ~500.
     """
     if name not in _SPECS:
-        raise KeyError(f"unknown pipeline {name!r}; choose from {PIPELINE_NAMES}")
+        raise KeyError(
+            f"unknown pipeline {name!r}; choose from "
+            f"{PIPELINE_NAMES + EXTRA_PIPELINE_NAMES}"
+        )
     spec = _SPECS[name]()
     # substitute aggregate operators if requested via name suffix elsewhere
     return _build_from_spec(
@@ -621,9 +698,10 @@ def make_pipeline_median(
     """Appendix D: the pipeline with AVG→MEDIAN substitution (COUNT→MEDIAN
     for fraud_detection), retrained — mirrors the paper's §D methodology."""
     spec = _SPECS[name]()
-    target = "avg" if any(op == "avg" for op, _ in spec.aggs) else "count"
+    aggs = tuple(_norm_agg(a) for a in spec.aggs)
+    target = "avg" if any(op == "avg" for op, _, _ in aggs) else "count"
     new_aggs = tuple(
-        ("median", c) if op == target else (op, c) for (op, c) in spec.aggs
+        ("median", c) if op == target else (op, c, q) for (op, c, q) in aggs
     )
     spec = _PipeSpec(
         name=f"{name}_median",

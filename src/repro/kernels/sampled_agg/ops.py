@@ -1,18 +1,37 @@
-"""Jit'd wrapper: dispatches to the Pallas kernel (TPU) or oracle (CPU)."""
+"""Jit'd wrappers: dispatch to the Pallas kernels (TPU) or oracles (CPU)."""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.data.aggregates import estimates_from_power_sums
-from repro.kernels.sampled_agg.ref import sampled_moments_ref
+from repro.kernels.sampled_agg.quantile_select import masked_select_ranks
+from repro.kernels.sampled_agg.ref import (
+    masked_select_ranks_ref,
+    sampled_moments_ref,
+)
 from repro.kernels.sampled_agg.sampled_agg import sampled_moments
 
-__all__ = ["moments", "estimates_from_moments", "masked_estimates"]
+__all__ = [
+    "moments",
+    "estimates_from_moments",
+    "masked_estimates",
+    "masked_quantile_estimates",
+]
 
 
 def _resolve_backend(use_kernel: bool | None) -> bool:
+    """None = auto: the REPRO_AFC_BACKEND env override (ref | kernel), else
+    Pallas on TPU and the jnp oracle elsewhere.  CI runs the tier-1 suite
+    under both env values so kernel/oracle parity is exercised on CPU."""
     if use_kernel is None:
+        env = os.environ.get("REPRO_AFC_BACKEND", "auto").lower()
+        if env == "kernel":
+            return True
+        if env == "ref":
+            return False
         return jax.default_backend() == "tpu"
     return use_kernel
 
@@ -50,7 +69,9 @@ def masked_estimates(
     (k, cap) prefix-masked buffers (the Pallas ``sampled_moments`` kernel on
     TPU, interpret-mode fallback for kernel testing, ref oracle on CPU), then
     the parametric estimator tail with finite-population correction from
-    ``aggregates.estimates_from_power_sums``.
+    ``aggregates.estimates_from_power_sums``.  Holistic ids fall through the
+    parametric select to (0, 0) and are overwritten by
+    :func:`masked_quantile_estimates`.
 
     Sums are accumulated about each feature's first buffered sample so the
     4th-moment cancellation stays at O(std⁴) even when |mean| >> std (the
@@ -60,6 +81,65 @@ def masked_estimates(
     return estimates_from_power_sums(
         moments(vals, z, shift, use_kernel=use_kernel), z, n, agg_ids, shift
     )
+
+
+def masked_quantile_estimates(
+    vals: jnp.ndarray,        # (h, cap) holistic-feature prefix buffers
+    z: jnp.ndarray,           # (h,) int32 live prefix lengths
+    n: jnp.ndarray,           # (h,) int32 group sizes (exactness check)
+    qs: jnp.ndarray,          # (h,) f32 per-feature quantile (0.5 = median)
+    key: jax.Array,           # counter-based: fold_in(base, iteration)
+    n_boot: int,
+    *,
+    use_kernel: bool | None = None,
+):
+    """Holistic AFC: (value, sorted bootstrap replicates) per feature.
+
+    Point estimate = nearest-rank quantile of the z-prefix.  Each bootstrap
+    replicate is the rank-r quantile of a size-z resample-with-replacement
+    (paper appendix D); instead of materializing B resamples, the replicate
+    is drawn as an order statistic of the ORIGINAL sorted prefix at a random
+    rank: the (r+1)-th smallest of z iid Uniform{0..z-1} index draws is
+    ``floor(z·V)`` with ``V ~ Beta(r+1, z-r)`` — one Beta draw per replicate,
+    distributionally identical to ``aggregates._bootstrap_replicates``'s
+    explicit resample, with every shape static (lax.while_loop safe).
+
+    All ranks are then selected in ONE kernel/oracle pass
+    (``masked_select_ranks``; afc_backend-routed like ``sampled_moments``).
+    Conventions match :func:`aggregates.estimate`: empty prefix (z == 0)
+    yields value 0 with all-zero replicates; exact (z >= n) yields the exact
+    quantile with a degenerate replicate table.  Returns
+    ``(value (h,), replicates (h, n_boot) sorted ascending)``.
+    """
+    f32 = jnp.float32
+    h, cap = vals.shape
+    zf = z.astype(f32)
+    zm1 = jnp.maximum(z - 1, 0)
+    rank = jnp.clip(
+        jnp.floor(qs * (zf - 1.0) + 0.5).astype(jnp.int32), 0, zm1
+    )
+    a = (rank + 1).astype(f32)
+    b = jnp.maximum(z - rank, 1).astype(f32)
+    v = jax.random.beta(key, a[:, None], b[:, None], (h, n_boot))
+    boot = jnp.clip(
+        jnp.floor(zf[:, None] * v).astype(jnp.int32), 0, zm1[:, None]
+    )
+    targets = jnp.concatenate([rank[:, None], boot], axis=1)   # (h, 1+B)
+    if _resolve_backend(use_kernel):
+        sel = masked_select_ranks(
+            vals, z, targets, interpret=jax.default_backend() != "tpu"
+        )
+    else:
+        sel = masked_select_ranks_ref(vals, z, targets)
+    empty = z <= 0
+    value = jnp.where(empty, 0.0, sel[:, 0]).astype(f32)
+    reps = jnp.sort(sel[:, 1:], axis=1)
+    reps = jnp.where(
+        empty[:, None],
+        0.0,
+        jnp.where((z >= n)[:, None], value[:, None], reps),
+    ).astype(f32)
+    return value, reps
 
 
 def estimates_from_moments(m: jnp.ndarray, n: jnp.ndarray):

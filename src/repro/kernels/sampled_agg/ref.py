@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["sampled_moments_ref", "N_MOMENTS"]
+__all__ = ["sampled_moments_ref", "masked_select_ranks_ref", "N_MOMENTS"]
 
 N_MOMENTS = 5  # [count, s1, s2, s3, s4]
 
@@ -50,3 +50,25 @@ def sampled_moments_ref(
     s3 = jnp.sum(v2 * v, axis=1)
     s4 = jnp.sum(v2 * v2, axis=1)
     return jnp.stack([count, s1, s2, s3, s4], axis=1)
+
+
+def masked_select_ranks_ref(
+    vals: jnp.ndarray, z: jnp.ndarray, targets: jnp.ndarray
+) -> jnp.ndarray:
+    """Order statistics of each valid prefix at the requested ranks.
+
+    vals: (k, cap) f32; z: (k,) int32; targets: (k, R) int32 ranks into the
+    ascending-sorted z-prefix -> (k, R) f32 selected values.  Out-of-prefix
+    positions sort as +inf, so a target rank >= z gathers +inf — callers
+    clip targets to [0, z-1] (and handle z == 0 themselves).
+
+    This is the oracle for the Pallas ``masked_select_ranks`` kernel, which
+    computes the same selection by stable rank *counting* instead of a sort
+    (the quantile/bootstrap AFC stage, paper appendix D).
+    """
+    k, cap = vals.shape
+    padded = jnp.where(
+        jnp.arange(cap)[None, :] < z[:, None], vals.astype(jnp.float32), jnp.inf
+    )
+    s = jnp.sort(padded, axis=1)
+    return jnp.take_along_axis(s, jnp.clip(targets, 0, cap - 1), axis=1)

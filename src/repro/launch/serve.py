@@ -10,10 +10,16 @@ Modes:
                  -> max-wait/max-size admission -> fixed-lane batched
                  dispatch (serving/runtime.py)
 
+Holistic (MEDIAN/QUANTILE) pipelines are served by every mode: pick the
+``sensor_health`` pipeline (median + tail-quantile features) or pass
+``--median`` for the appendix-D AVG→MEDIAN substitution of any Table 1
+pipeline.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --pipeline trip_fare
   PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan --mode fused
-  PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan \
+  PYTHONPATH=src python -m repro.launch.serve --pipeline sensor_health --mode fused
+  PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan --median \
       --mode fused-batched --arrival-rate 50 --batch-size 8 --max-wait-ms 20
 """
 from __future__ import annotations
@@ -21,7 +27,13 @@ from __future__ import annotations
 import argparse
 
 from repro.core.executor import BiathlonConfig
-from repro.data.synthetic import PIPELINE_NAMES, make_pipeline, poisson_arrivals
+from repro.data.synthetic import (
+    EXTRA_PIPELINE_NAMES,
+    PIPELINE_NAMES,
+    make_pipeline,
+    make_pipeline_median,
+    poisson_arrivals,
+)
 from repro.serving import BatchedFusedServer, BiathlonServer, ServingRuntime
 
 
@@ -32,9 +44,15 @@ def _print_table(d: dict) -> None:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pipeline", choices=PIPELINE_NAMES, required=True)
+    ap.add_argument(
+        "--pipeline", choices=PIPELINE_NAMES + EXTRA_PIPELINE_NAMES, required=True
+    )
     ap.add_argument(
         "--mode", choices=("host", "fused", "fused-batched"), default="host"
+    )
+    ap.add_argument(
+        "--median", action="store_true",
+        help="appendix-D variant: AVG→MEDIAN substitution, retrained",
     )
     ap.add_argument("--rows-per-group", type=int, default=20000)
     ap.add_argument("--requests", type=int, default=8)
@@ -53,7 +71,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    bundle = make_pipeline(
+    make = make_pipeline_median if args.median else make_pipeline
+    bundle = make(
         args.pipeline, rows_per_group=args.rows_per_group,
         n_serve_groups=6, n_requests=args.requests,
     )

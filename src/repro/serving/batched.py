@@ -36,8 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor_fused import build_fused_executor
-from repro.data.aggregates import AGG_IDS
+from repro.core.executor_fused import (
+    build_fused_executor,
+    pipeline_executor_kwargs,
+)
+from repro.core.pipeline import make_fused_model_fn
 from repro.data.store import bucket_size
 
 __all__ = ["BatchedFusedServer", "BatchResult", "straggler_report"]
@@ -51,6 +54,7 @@ class BatchResult(NamedTuple):
     batch_iters: int        # shared while_loop trip count = max(iters)
     cap: int                # bucketed buffer cap used for this batch
     lanes: int              # padded lane count the executable was compiled for
+    z: np.ndarray | None = None  # (R, k) final per-request plans (active lanes)
 
 
 def straggler_report(res: BatchResult) -> dict:
@@ -112,26 +116,14 @@ class BatchedFusedServer:
         self.config = config
         self.batch_size = batch_size
         p = bundle.pipeline
-        unsupported = [f.agg for f in p.agg_features if f.agg not in AGG_IDS]
-        if unsupported:
-            raise ValueError(f"parametric aggregates only, got {unsupported}")
-        mean = jnp.asarray(p.scaler_mean)
-        scale = jnp.asarray(p.scaler_scale)
-        model = p.model
-
-        def model_fn(agg_rows, exact):
-            m = agg_rows.shape[0]
-            full = jnp.concatenate(
-                [agg_rows, jnp.broadcast_to(exact[None, :], (m, exact.shape[0]))], 1
-            )
-            if mean.shape[0] == full.shape[1]:
-                full = (full - mean[None, :]) / scale[None, :]
-            return model.predict(full)
-
+        feat_kwargs = pipeline_executor_kwargs(p.agg_features)
+        self._agg_ids = feat_kwargs.pop("agg_ids")
         self._run = build_fused_executor(
-            model_fn, k=p.k, task=p.task, n_classes=max(p.n_classes, 2),
+            make_fused_model_fn(p), k=p.k, task=p.task,
+            n_classes=max(p.n_classes, 2),
             m=config.m, m_sobol=config.m_sobol, alpha=config.alpha,
             gamma=config.gamma, tau=config.tau, max_iters=config.max_iters,
+            n_boot=config.n_bootstrap, **feat_kwargs,
         )
 
         # jit caches one executable per distinct (lanes, k, cap) input shape;
@@ -146,7 +138,6 @@ class BatchedFusedServer:
 
         self._batched = jax.jit(jax.vmap(_counted))
         self._caps_seen: set[int] = set()
-        self._agg_ids = jnp.asarray([AGG_IDS[f.agg] for f in p.agg_features], jnp.int32)
         max_n = max(
             bundle.store[f.table].group_size(g)
             for f in p.agg_features
@@ -201,6 +192,7 @@ class BatchedFusedServer:
             return BatchResult(
                 y_hat=empty, prob=empty, iters=np.zeros((0,), np.int32),
                 sample_frac=empty, batch_iters=0, cap=0, lanes=self.batch_size,
+                z=np.zeros((0, p.k), np.int32),
             )
         lanes = self.batch_size
         cap = self.batch_cap(requests)
@@ -237,4 +229,5 @@ class BatchedFusedServer:
             batch_iters=int(iters.max(initial=0)),
             cap=cap,
             lanes=lanes,
+            z=np.asarray(res.z)[:r],
         )

@@ -22,8 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import BiathlonConfig, HostLoopExecutor, run_exact
-from repro.core.executor_fused import build_fused_executor
-from repro.data.aggregates import AGG_IDS
+from repro.core.executor_fused import (
+    build_fused_executor,
+    pipeline_executor_kwargs,
+)
+from repro.core.pipeline import make_fused_model_fn
 from repro.data.store import bucket_size
 from repro.data.synthetic import PipelineBundle
 
@@ -98,27 +101,11 @@ class BiathlonServer:
     # ------------------------------------------------------------------
     def _build_fused(self):
         p = self.pipeline
-        unsupported = [f.agg for f in p.agg_features if f.agg not in AGG_IDS]
-        if unsupported:
-            raise ValueError(
-                f"fused executor supports parametric aggregates only, got {unsupported}"
-            )
-        mean = jnp.asarray(p.scaler_mean)
-        scale = jnp.asarray(p.scaler_scale)
-        model = p.model
-
-        def model_fn(agg_rows, exact):
-            m = agg_rows.shape[0]
-            full = jnp.concatenate(
-                [agg_rows, jnp.broadcast_to(exact[None, :], (m, exact.shape[0]))], 1
-            )
-            if mean.shape[0] == full.shape[1]:
-                full = (full - mean[None, :]) / scale[None, :]
-            return model.predict(full)
-
         cfg = self.config
+        feat_kwargs = pipeline_executor_kwargs(p.agg_features)
+        self._agg_ids = feat_kwargs.pop("agg_ids")
         self._fused = build_fused_executor(
-            model_fn,
+            make_fused_model_fn(p),
             k=p.k,
             task=p.task,
             n_classes=max(p.n_classes, 2),
@@ -128,9 +115,8 @@ class BiathlonServer:
             gamma=cfg.gamma,
             tau=cfg.tau,
             max_iters=cfg.max_iters,
-        )
-        self._agg_ids = jnp.asarray(
-            [AGG_IDS[f.agg] for f in p.agg_features], jnp.int32
+            n_boot=cfg.n_bootstrap,
+            **feat_kwargs,
         )
         max_n = max(
             self.store[f.table].group_size(g)
@@ -157,6 +143,8 @@ class BiathlonServer:
                 "iters": r.iters,
                 "sample_frac": r.sample_fraction,
                 "prob": r.prob,
+                "z": np.asarray(r.z),
+                "n": np.asarray(r.n),
             }
         t0 = time.perf_counter()
         specs = p.agg_specs(request)
@@ -177,6 +165,8 @@ class BiathlonServer:
             "iters": int(res.iters),
             "sample_frac": float(res.samples_used) / max(int(n_true.sum()), 1),
             "prob": float(res.prob),
+            "z": np.asarray(res.z),
+            "n": np.asarray(jnp.minimum(n_true, cap)),
         }
 
     # ------------------------------------------------------------------

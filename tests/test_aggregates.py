@@ -71,6 +71,31 @@ def test_avg_ci_is_calibrated(mu, sd, z):
     assert err <= 4.5 * float(res.sigma) + 1e-4
 
 
+@pytest.mark.parametrize("agg", ["median", "quantile"])
+def test_empty_prefix_quantile_returns_zero(agg):
+    """z == 0 regression: the +inf-padded sort must not leak into the value
+    (rank-0 gather) or the bootstrap replicates (vals[0] garbage) — an empty
+    prefix returns 0.0, the same convention as the parametric mean."""
+    vals = _buf(np.full(7, 123.0, np.float32), 16)  # garbage the bug would leak
+    res = estimate(
+        agg, vals, jnp.asarray(0), jnp.asarray(512), KEY, n_boot=32, quantile=0.9
+    )
+    assert float(res.value) == 0.0
+    assert float(res.sigma) == 0.0
+    reps = np.asarray(res.replicates)
+    assert np.isfinite(reps).all()
+    assert (reps == 0.0).all()
+
+
+def test_empty_prefix_parametric_matches_convention():
+    """Parametric estimators on z == 0 keep the mean-0 convention too."""
+    vals = _buf(np.full(7, 9.0, np.float32), 16)
+    for agg in ("avg", "sum", "var", "std"):
+        res = estimate(agg, vals, jnp.asarray(0), jnp.asarray(64), KEY)
+        assert float(res.value) == 0.0, agg
+        assert np.isfinite(float(res.sigma)), agg
+
+
 def test_sigma_decreases_with_samples():
     rng = np.random.default_rng(3)
     vals = rng.normal(0, 1, 4096).astype(np.float32)

@@ -1,0 +1,191 @@
+"""Holistic (MEDIAN/QUANTILE) aggregates in the fused serving paths.
+
+Covers the PR-3 tentpole: host-vs-fused parity on median/quantile pipelines
+(regression + classification), the z == 0 edge inside the fused program, the
+Fig. 10 ``approximate=False`` exactness knob across all three serving modes,
+and the arrival-driven runtime over a holistic pipeline.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor import BiathlonConfig, run_exact
+from repro.core.executor_fused import (
+    build_fused_executor,
+    pipeline_executor_kwargs,
+)
+from repro.core.pipeline import AggFeature, Pipeline
+from repro.data.store import ColumnStore, build_table
+from repro.data.synthetic import (
+    PipelineBundle,
+    make_pipeline,
+    make_pipeline_median,
+    poisson_arrivals,
+)
+from repro.models.tabular import LinearRegression
+from repro.serving import BatchedFusedServer, BiathlonServer, ServingRuntime
+
+SMALL = dict(rows_per_group=1200, n_train_groups=100, n_serve_groups=5, n_requests=4)
+CFG = BiathlonConfig(m=192, m_sobol=48, n_bootstrap=128)
+
+
+# ------------------------------------------------------- host-vs-fused parity
+@pytest.mark.parametrize(
+    "name,median",
+    [("turbofan", True), ("bearing_imbalance", True), ("sensor_health", False)],
+)
+def test_fused_vs_host_parity_holistic(name, median):
+    """MEDIAN/QUANTILE pipelines run the fused path end to end (no
+    ValueError) and land within tolerance of the host loop and the exact
+    baseline, at the same guarantee."""
+    b = (make_pipeline_median if median else make_pipeline)(name, **SMALL)
+    assert any(
+        f.agg in ("median", "quantile") for f in b.pipeline.agg_features
+    )
+    host = BiathlonServer(b, CFG, mode="host")
+    fused = BiathlonServer(b, CFG, mode="fused")
+    delta = b.pipeline.delta_default
+    tol = 2 * delta + 1e-6 if b.pipeline.task == "regression" else 0.5
+    agree = 0
+    reqs = b.requests[:4]
+    for i, req in enumerate(reqs):
+        rh = host.serve(req, jax.random.PRNGKey(i))
+        rf = fused.serve(req)
+        assert rh["prob"] >= CFG.tau or rh["sample_frac"] >= 0.999
+        assert rf["prob"] >= CFG.tau or rf["sample_frac"] >= 0.999
+        y_ex, _ = run_exact(b.store, b.pipeline, req)
+        if b.pipeline.task == "regression":
+            if (
+                abs(rf["y_hat"] - rh["y_hat"]) <= tol
+                and abs(rf["y_hat"] - y_ex) <= delta + 1e-6
+            ):
+                agree += 1
+        else:
+            if rf["y_hat"] == rh["y_hat"] == y_ex:
+                agree += 1
+    # tau=0.95 per request; allow one miss across paths on a small log
+    assert agree >= len(reqs) - 1
+
+
+def test_batched_fused_serves_holistic():
+    """BatchedFusedServer admits a MEDIAN pipeline and matches the
+    single-request fused path on the same buffers."""
+    b = make_pipeline_median("turbofan", **SMALL)
+    srv = BatchedFusedServer(b, CFG, batch_size=4)
+    fused = BiathlonServer(b, CFG, mode="fused")
+    res = srv.serve_batch(b.requests[:3])
+    assert np.isfinite(res.y_hat).all()
+    assert ((res.prob >= CFG.tau) | (res.sample_frac >= 0.999)).all()
+    for lane, req in enumerate(b.requests[:3]):
+        rf = fused.serve(req)
+        # same compiled algorithm over the same gathered buffers
+        assert res.y_hat[lane] == pytest.approx(rf["y_hat"], rel=1e-5, abs=1e-5)
+
+
+def test_runtime_serves_holistic_arrivals():
+    """The arrival-driven runtime drains a Poisson trace over a holistic
+    pipeline — the fastest path now covers appendix-D operators."""
+    b = make_pipeline_median("tick_price", **SMALL)
+    srv = BatchedFusedServer(b, CFG, batch_size=4)
+    runtime = ServingRuntime(srv, max_wait_s=0.005)
+    stats = runtime.run(poisson_arrivals(b.requests, 200.0, n=6, seed=1))
+    s = stats.summary()
+    assert s["n"] == 6
+    assert s["guarantee_rate"] == 1.0
+
+
+# -------------------------------------------------------------- z == 0 edge
+def test_fused_holistic_empty_group():
+    """A holistic feature over an empty group must keep the fused program
+    finite (value 0 by the empty-prefix convention, degenerate replicates)."""
+    w = jnp.asarray([1.5, 1.0])
+
+    def model_fn(rows, exact):
+        return rows @ w
+
+    fused = build_fused_executor(
+        model_fn, k=2, task="regression", m=64, m_sobol=16,
+        holistic=(1,), quantiles=(0.5,), n_boot=32, max_iters=4,
+    )
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(3.0, 1.0, (2, 128)).astype(np.float32))
+    n = jnp.asarray([128, 0], jnp.int32)
+    res = fused(
+        vals, n, jnp.asarray([0, 5], jnp.int32),
+        jnp.asarray(0.5, jnp.float32), jnp.zeros((0,), jnp.float32),
+    )
+    assert np.isfinite(float(res.y_hat))
+    assert np.isfinite(float(res.prob))
+    # the empty feature is exhausted immediately (z = n = 0)
+    assert int(res.z[1]) == 0
+
+
+# --------------------------------------------------- Fig. 10 exactness knob
+@pytest.fixture(scope="module")
+def exactness_bundle():
+    """2-feature linear pipeline; feature 1 is declared exact-only."""
+    rng = np.random.default_rng(3)
+    sizes = [400] * 6
+    gid = np.concatenate([np.full(s, g) for g, s in enumerate(sizes)])
+    mu = rng.normal(0, 4, len(sizes))
+    v = mu[gid] + rng.normal(0, 2.0, len(gid))
+    a = 0.5 * mu[gid] + rng.normal(0, 1.5, len(gid))
+    store = ColumnStore().add("t", build_table({"v": v, "a": a}, gid, seed=2))
+    X = np.stack([mu, 0.5 * mu], axis=1)
+    y = 2 * X[:, 0] + 3 * X[:, 1]
+    pipe = Pipeline(
+        name="exactness",
+        agg_features=[
+            AggFeature("avg_v", "t", "v", "avg", "g"),
+            AggFeature("med_a", "t", "a", "median", "g", approximate=False),
+        ],
+        exact_features=[],
+        model=LinearRegression().fit(X, y),
+        task="regression",
+        scaler_mean=np.zeros(2, np.float32),
+        scaler_scale=np.ones(2, np.float32),
+        delta_default=1.0,
+    )
+    return PipelineBundle(
+        pipeline=pipe, store=store, requests=[{"g": g} for g in range(6)],
+        labels=y, table_rows=len(gid), name="exactness",
+    )
+
+
+def test_pipeline_executor_kwargs(exactness_bundle):
+    kw = pipeline_executor_kwargs(exactness_bundle.pipeline.agg_features)
+    assert kw["holistic"] == (1,)
+    assert kw["quantiles"] == (0.5,)
+    assert kw["approximate"] == (True, False)
+    assert list(np.asarray(kw["agg_ids"])) == [0, 5]
+
+    class _Fake:
+        agg = "p99"
+        approximate = True
+        quantile = 0.5
+
+    with pytest.raises(ValueError, match="unsupported"):
+        pipeline_executor_kwargs([_Fake()])
+
+
+def test_approximate_false_stays_exact_all_modes(exactness_bundle):
+    """The Fig. 10 knob: a feature declared approximate=False must consume
+    its full group (z == n) in host, fused, and batched serving — previously
+    both fused paths silently approximated it."""
+    b = exactness_bundle
+    cfg = BiathlonConfig(m=96, m_sobol=32, n_bootstrap=64)
+    req = b.requests[0]
+    n = b.pipeline.group_sizes(b.store, req)
+
+    host = BiathlonServer(b, cfg, mode="host").serve(req)
+    assert host["z"][1] == n[1]
+
+    fused = BiathlonServer(b, cfg, mode="fused").serve(req)
+    assert fused["z"][1] == fused["n"][1]
+
+    batched = BatchedFusedServer(b, cfg, batch_size=2)
+    res = batched.serve_batch([req, b.requests[1]])
+    assert (res.z[:, 1] == np.minimum(n[1], res.cap)).all()
+    # the approximable feature is NOT forced exact by the knob
+    assert res.z[0, 0] <= n[0]

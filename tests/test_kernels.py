@@ -5,10 +5,18 @@ import numpy as np
 import pytest
 
 from repro.core.qmc import sobol_uint32
-from repro.data.aggregates import masked_estimates_batch
+from repro.data.aggregates import estimate, masked_estimates_batch
 from repro.kernels.flash_attention.flash_attention import flash_attention
-from repro.kernels.sampled_agg.ops import masked_estimates
-from repro.kernels.sampled_agg.ref import N_MOMENTS, sampled_moments_ref
+from repro.kernels.sampled_agg.ops import (
+    masked_estimates,
+    masked_quantile_estimates,
+)
+from repro.kernels.sampled_agg.quantile_select import masked_select_ranks
+from repro.kernels.sampled_agg.ref import (
+    N_MOMENTS,
+    masked_select_ranks_ref,
+    sampled_moments_ref,
+)
 from repro.kernels.sampled_agg.sampled_agg import sampled_moments
 from repro.kernels.sobol.sobol import sobol_points
 from repro.kernels.tree_qmc.tree_qmc import ensemble_sum
@@ -94,6 +102,90 @@ def test_power_sum_estimates_keep_sigma_when_mean_dominates():
     # shifted accumulation keeps cancellation at O(std^4), so the sigmas
     # agree tightly even though mean^4 ~ 1.6e9 in float32
     np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), rtol=2e-2)
+
+
+# -------------------------------------------------------- quantile select
+@pytest.mark.parametrize("k,cap,R,block_k,block_ci,block_cj", [
+    (4, 512, 33, 4, 128, 128),
+    (7, 300, 17, 2, 64, 128),
+    (1, 64, 5, 4, 64, 64),
+    (16, 1024, 65, 8, 256, 128),
+])
+def test_masked_select_ranks_matches_ref(k, cap, R, block_k, block_ci, block_cj):
+    """Stable-rank-count selection == sort+gather oracle, bit exact, over
+    ragged z including the z=0 and z=cap edges and tied values."""
+    rng = np.random.default_rng(k * cap + R)
+    # round half the rows to force ties (stable tie-break must match sort)
+    vals = rng.normal(0, 3, (k, cap)).astype(np.float32)
+    vals[::2] = np.round(vals[::2])
+    z = rng.integers(0, cap + 1, k).astype(np.int32)
+    z[0] = 0
+    z[-1] = cap
+    targets = np.stack(
+        [rng.integers(0, max(zz, 1), R) for zz in z]
+    ).astype(np.int32)
+    got = masked_select_ranks(
+        jnp.asarray(vals), jnp.asarray(z), jnp.asarray(targets),
+        block_k=block_k, block_ci=block_ci, block_cj=block_cj, interpret=True,
+    )
+    want = masked_select_ranks_ref(
+        jnp.asarray(vals), jnp.asarray(z), jnp.asarray(targets)
+    )
+    # z=0 rows gather the +inf padding on both paths (callers override)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_masked_select_ranks_non_dividing_blocks():
+    """Regression: block_ci != block_cj where the smaller block does not
+    divide the padded cap must still visit every candidate column (the
+    padding now rounds to lcm(block_ci, block_cj))."""
+    vals = np.zeros((4, 200), np.float32)
+    vals[:, 199] = 50.0                       # the max lives in the last column
+    z = jnp.full((4,), 200, jnp.int32)
+    targets = jnp.asarray(np.tile([0, 199], (4, 1)), jnp.int32)
+    got = masked_select_ranks(
+        jnp.asarray(vals), z, targets,
+        block_k=4, block_ci=96, block_cj=128, interpret=True,
+    )
+    want = masked_select_ranks_ref(jnp.asarray(vals), z, targets)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got)[0, 1] == 50.0
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_masked_quantile_estimates_conventions(use_kernel):
+    """Empty prefix -> (0, zeros); exact (z >= n) -> degenerate replicates at
+    the exact quantile; sampled rows -> sorted replicates bracketing truth."""
+    rng = np.random.default_rng(11)
+    cap = 256
+    vals = jnp.asarray(rng.normal(5.0, 2.0, (4, cap)).astype(np.float32))
+    z = jnp.asarray([0, cap, 64, 200], jnp.int32)
+    n = jnp.asarray([1024, cap, 4096, 4096], jnp.int32)
+    qs = jnp.asarray([0.5, 0.5, 0.9, 0.5], jnp.float32)
+    value, reps = masked_quantile_estimates(
+        vals, z, n, qs, jax.random.PRNGKey(3), 64, use_kernel=use_kernel
+    )
+    value, reps = np.asarray(value), np.asarray(reps)
+    assert np.isfinite(value).all() and np.isfinite(reps).all()
+    assert value[0] == 0.0 and (reps[0] == 0.0).all()          # empty prefix
+    v = np.asarray(vals)
+    # nearest-rank median of the full (exact) row, not np.median's midpoint
+    np.testing.assert_allclose(
+        value[1], np.sort(v[1])[int(np.floor(0.5 * (cap - 1) + 0.5))], atol=1e-6
+    )
+    assert (reps[1] == value[1]).all()                          # exact row
+    assert (np.diff(reps, axis=1) >= 0).all()                   # sorted
+    # sampled rows: replicate spread brackets the buffer's true quantile
+    assert reps[2].min() <= np.quantile(v[2], 0.9) + 0.5
+    assert reps[2].max() >= np.quantile(v[2], 0.9) - 0.5
+    # point estimates match the per-feature estimate() oracle
+    for j, (zz, nn, qq) in enumerate([(0, 1024, 0.5), (cap, cap, 0.5),
+                                      (64, 4096, 0.9), (200, 4096, 0.5)]):
+        res = estimate(
+            "quantile", vals[j], jnp.asarray(zz), jnp.asarray(nn),
+            jax.random.PRNGKey(0), n_boot=8, quantile=qq,
+        )
+        np.testing.assert_allclose(value[j], float(res.value), atol=1e-6)
 
 
 # ------------------------------------------------------------------ sobol
