@@ -42,6 +42,10 @@ def main() -> None:
         "perf_fused_vs_host": fused_vs_host.run,
         "perf_fused_vs_host_holistic": fused_vs_host.run_holistic,
         "perf_serving_load": serving_load.run,
+        # device-scaling sweep; fork-safe (re-execs itself with fresh
+        # XLA_FLAGS), so the tracked sharded_scaling section can never go
+        # stale relative to the serving_load section written above
+        "perf_serving_sharded": serving_load.run_sharded_subprocess,
         "roofline": roofline.run,
     }
     only = os.environ.get("ONLY")

@@ -16,11 +16,27 @@ as much as a full one), so effective capacity at low arrival rates — where
 admission fills are small — is WELL below the full-batch number: expect
 high utilization even at the lowest load factor.  The saturation signal to
 read is queueing delay and throughput plateau, not utilization.
+
+The ``--sharded-worker`` half sweeps SERVING-MESH device counts at fixed
+batch size (the PR-4 lane-sharding backend): each admission batch's lanes
+are partitioned over a 1-D mesh, so a device only runs its own lane block's
+while-loop — stragglers stall 1/D of the batch instead of all of it, and
+the per-device programs execute concurrently.  The sweep needs
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE jax
+initializes, so the parent entrypoint re-execs itself into a worker
+subprocess pinned to CPU with that flag set — the sweep is always a
+host-device SIMULATION (a real TPU deployment hands
+``make_serving_mesh`` over its actual chips to ``BatchedFusedServer``
+instead of re-execing).  A tighter-than-default delta makes iteration
+counts heterogeneous across lanes — the regime where straggler
+localization pays.
 Writes ``BENCH_serving.json`` at the repo root.
 """
 from __future__ import annotations
 
 import pathlib
+import subprocess
+import sys
 import time
 
 from benchmarks.common import DEFAULT_CFG, bundle, csv_row, write_bench_json
@@ -38,16 +54,34 @@ MAX_WAIT_MS = 20.0
 LOAD_FACTORS = (0.3, 1.0, 3.0)
 N_REQUESTS = 48
 
+# ---- sharded lane-parallel sweep (run in the forced-device subprocess) ----
+DEVICE_COUNTS = (1, 2, 4, 8)
+# fraction of the pipeline's default delta: tight enough that requests
+# iterate a heterogeneous number of times (the straggler regime)
+SHARDED_DELTA_FRAC = 0.35
+SHARDED_RATE_FACTOR = 3.0  # offered load vs 1-device capacity (saturating)
 
-def _measure_capacity(srv: BatchedFusedServer, requests: list[dict]) -> float:
-    """Steady-state full-batch service rate (req/s), post-warmup."""
+
+def _measure_capacity(
+    srv: BatchedFusedServer, requests: list[dict], reps: int = 3,
+    best_of: bool = False,
+) -> float:
+    """Steady-state full-batch service rate (req/s), post-warmup.
+
+    ``best_of=False`` keeps the mean-of-reps methodology the tracked
+    ``serving_load`` section of BENCH_serving.json was measured with (so
+    re-runs stay comparable across PRs); the sharded sweep uses best-of to
+    suppress 2-core scheduling noise and records that choice in its
+    payload.
+    """
     batch = [requests[i % len(requests)] for i in range(srv.batch_size)]
     srv.serve_batch(batch)  # warm every shape this batch hits
-    reps = 3
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         srv.serve_batch(batch)
-    dt = (time.perf_counter() - t0) / reps
+        times.append(time.perf_counter() - t0)
+    dt = min(times) if best_of else sum(times) / len(times)
     return srv.batch_size / max(dt, 1e-9)
 
 
@@ -96,7 +130,115 @@ def run(pipeline: str = PIPE) -> list[str]:
     return out
 
 
+# ------------------------------------------------------------------------
+# Device-scaling sweep: sharded lanes over a 1-D serving mesh
+# ------------------------------------------------------------------------
+def run_sharded(pipeline: str = PIPE) -> list[str]:
+    """Sweep serving-mesh sizes at fixed batch size (worker half).
+
+    Must run in a process with >= max(DEVICE_COUNTS) visible devices — the
+    parent entrypoint (``run_sharded_subprocess``) forces them on CPU.  The
+    same saturating Poisson trace (rate pinned to 3x the 1-device capacity)
+    is replayed at every device count, so ``throughput_rps`` isolates the
+    sharding effect: lane blocks run concurrently and each device's
+    while-loop exits at ITS stragglers, not the batch's.
+    """
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+
+    n_visible = len(jax.devices())
+    if n_visible < max(DEVICE_COUNTS):
+        raise RuntimeError(
+            f"need {max(DEVICE_COUNTS)} devices, have {n_visible}; run via "
+            "run_sharded_subprocess() or set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(DEVICE_COUNTS)}"
+        )
+    b = bundle(pipeline)
+    cfg = BiathlonConfig(
+        **DEFAULT_CFG, delta=b.pipeline.delta_default * SHARDED_DELTA_FRAC
+    )
+    out = []
+    payload = {
+        "pipeline": pipeline,
+        "batch_size": BATCH_SIZE,
+        "max_wait_ms": MAX_WAIT_MS,
+        "n_requests": N_REQUESTS,
+        "delta_frac": SHARDED_DELTA_FRAC,
+        "rate_factor": SHARDED_RATE_FACTOR,
+        "capacity_method": "best_of_5",
+        "config": {"m": cfg.m, "m_sobol": cfg.m_sobol, "tau": cfg.tau},
+        "devices": [],
+    }
+    rate = None
+    for d in DEVICE_COUNTS:
+        srv = BatchedFusedServer(
+            b, cfg, batch_size=BATCH_SIZE, mesh=make_serving_mesh(d)
+        )
+        runtime = ServingRuntime(srv, max_wait_s=MAX_WAIT_MS / 1e3)
+        runtime.warmup(b.requests)
+        capacity_rps = _measure_capacity(srv, b.requests, reps=5, best_of=True)
+        if rate is None:  # pin the trace to the 1-device saturation point
+            rate = SHARDED_RATE_FACTOR * capacity_rps
+        arrivals = poisson_arrivals(b.requests, rate, n=N_REQUESTS, seed=777)
+        stats = runtime.run(arrivals, warmup=False)
+        s = stats.summary()
+        entry = {
+            "n_devices": d,
+            "capacity_rps": capacity_rps,
+            "rate_rps": rate,
+            **s,
+        }
+        payload["devices"].append(entry)
+        out.append(
+            csv_row(
+                f"serving_sharded/{pipeline}/dev{d}",
+                1e3 * s["p50_latency_ms"],
+                f"cap={capacity_rps:.1f}rps;thru={s['throughput_rps']:.1f}rps;"
+                f"p99_ms={s['p99_latency_ms']:.1f};"
+                f"imb={s.get('mean_lane_imbalance', 0.0):.2f};"
+                f"compiles={s['compile_count']}",
+            )
+        )
+    d1 = payload["devices"][0]["throughput_rps"]
+    payload["speedup_vs_1dev"] = [
+        e["throughput_rps"] / max(d1, 1e-9) for e in payload["devices"]
+    ]
+    write_bench_json("sharded_scaling", payload, path=str(BENCH_SERVING_JSON))
+    return out
+
+
+def run_sharded_subprocess(pipeline: str = PIPE) -> list[str]:
+    """Re-exec this module as a worker with forced host devices.
+
+    jax fixes its device list at first initialization, so the sweep cannot
+    run in a process that already touched jax with the default flags.
+    """
+    from repro.launch.mesh import forced_host_devices_env
+
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    env = forced_host_devices_env(max(DEVICE_COUNTS))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_load",
+         "--sharded-worker", pipeline],
+        env=env, cwd=str(repo), text=True, capture_output=True,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded worker failed:\n{proc.stdout}\n{proc.stderr}"
+        )
+    return [l for l in proc.stdout.splitlines() if l.startswith("serving_sharded/")]
+
+
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    for row in run():
-        print(row)
+    if "--sharded-worker" in sys.argv:
+        pipe = sys.argv[sys.argv.index("--sharded-worker") + 1]
+        for row in run_sharded(pipe):
+            print(row)
+    else:
+        print("name,us_per_call,derived")
+        for row in run():
+            print(row)
+        for row in run_sharded_subprocess():
+            print(row)

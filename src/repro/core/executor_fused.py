@@ -84,6 +84,7 @@ __all__ = [
     "build_fused_executor",
     "fused_rows_per_iteration",
     "pipeline_executor_kwargs",
+    "shard_lanes_executor",
 ]
 
 
@@ -98,6 +99,46 @@ class FusedResult(NamedTuple):
 def fused_rows_per_iteration(k: int, m: int, m_sobol: int) -> int:
     """Model rows evaluated per planner iteration (the single megabatch)."""
     return m + 1 + (k + 2) * m_sobol
+
+
+def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes"):
+    """Data-parallel lane sharding of a per-lane fused executor.
+
+    ``lane_fn`` is a single-lane ``run(vals, n, agg_ids, delta, exact,
+    active)`` (the :func:`build_fused_executor` signature, ``active``
+    mandatory so the arity is static); the result maps it over a leading
+    ``lanes`` dimension — ``jax.vmap`` within each device, ``shard_map``
+    across the ``mesh``'s 1-D ``axis`` — and jits the whole thing.
+
+    Because every lane is an independent while-loop over its own buffers,
+    ALL six inputs and every :class:`FusedResult` leaf partition along the
+    leading dimension and the compiled program contains **zero cross-device
+    collectives**: model params and the QMC/bootstrap constants are
+    closure-captured and replicated, per-lane reductions stay local to the
+    device that owns the lane.  A device whose lane block finishes (or is
+    all pad lanes) exits its while-loop independently — stragglers only
+    stall the lanes that share their device, which is the scaling win over
+    the single-device megabatch.
+
+    The leading dimension of every argument must be divisible by the mesh
+    size (callers pad to a fixed lane count anyway).  ``check_rep=False``
+    because the executor closes over large replicated constants and runs a
+    ``while_loop`` — the conservative replication checker rejects that
+    combination without adding safety for a collective-free program.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    spec = PartitionSpec(axis)
+    return jax.jit(
+        shard_map(
+            jax.vmap(lane_fn),
+            mesh=mesh,
+            in_specs=(spec,) * 6,
+            out_specs=spec,
+            check_rep=False,
+        )
+    )
 
 
 def pipeline_executor_kwargs(agg_features) -> dict:

@@ -9,6 +9,10 @@ Modes:
   fused-batched  arrival-driven runtime: Poisson arrivals -> request queue
                  -> max-wait/max-size admission -> fixed-lane batched
                  dispatch (serving/runtime.py)
+  fused-sharded  fused-batched with the fixed lanes sharded data-parallel
+                 over a 1-D device mesh (--devices N; launch/mesh.py
+                 make_serving_mesh).  On CPU, simulate devices with
+                 XLA_FLAGS=--xla_force_host_platform_device_count=N.
 
 Holistic (MEDIAN/QUANTILE) pipelines are served by every mode: pick the
 ``sensor_health`` pipeline (median + tail-quantile features) or pass
@@ -21,6 +25,9 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --pipeline sensor_health --mode fused
   PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan --median \
       --mode fused-batched --arrival-rate 50 --batch-size 8 --max-wait-ms 20
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --pipeline turbofan --mode fused-sharded \
+      --devices 4 --batch-size 8
 """
 from __future__ import annotations
 
@@ -48,7 +55,14 @@ def main():
         "--pipeline", choices=PIPELINE_NAMES + EXTRA_PIPELINE_NAMES, required=True
     )
     ap.add_argument(
-        "--mode", choices=("host", "fused", "fused-batched"), default="host"
+        "--mode",
+        choices=("host", "fused", "fused-batched", "fused-sharded"),
+        default="host",
+    )
+    ap.add_argument(
+        "--devices", type=int, default=None,
+        help="serving-mesh size for fused-sharded (default: every visible "
+        "device); batch-size must be divisible by it",
     )
     ap.add_argument(
         "--median", action="store_true",
@@ -82,15 +96,23 @@ def main():
     )
     delta = cfg.delta if cfg.delta is not None else bundle.pipeline.delta_default
 
-    if args.mode == "fused-batched":
-        srv = BatchedFusedServer(bundle, cfg, batch_size=args.batch_size)
+    if args.mode in ("fused-batched", "fused-sharded"):
+        mesh = None
+        if args.mode == "fused-sharded":
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(args.devices)
+        srv = BatchedFusedServer(
+            bundle, cfg, batch_size=args.batch_size, mesh=mesh
+        )
         runtime = ServingRuntime(srv, max_wait_s=args.max_wait_ms / 1e3)
         arrivals = poisson_arrivals(
             bundle.requests, args.arrival_rate, n=args.requests, seed=args.seed
         )
         stats = runtime.run(arrivals)
-        print(f"[serve] {args.pipeline} mode=fused-batched "
+        print(f"[serve] {args.pipeline} mode={args.mode} "
               f"rate={args.arrival_rate:.1f}rps lanes={args.batch_size} "
+              f"devices={srv.n_devices} "
               f"max_wait={args.max_wait_ms:.0f}ms delta={delta:.4f}")
         _print_table(stats.summary())
         return

@@ -1,5 +1,10 @@
 from repro.serving.server import BiathlonServer, ServerStats
-from repro.serving.batched import BatchedFusedServer, BatchResult, straggler_report
+from repro.serving.batched import (
+    BatchedFusedServer,
+    BatchResult,
+    device_fill,
+    straggler_report,
+)
 from repro.serving.runtime import (
     AdmissionBatcher,
     Arrival,
@@ -13,6 +18,7 @@ __all__ = [
     "ServerStats",
     "BatchedFusedServer",
     "BatchResult",
+    "device_fill",
     "straggler_report",
     "AdmissionBatcher",
     "Arrival",

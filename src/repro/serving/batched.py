@@ -39,11 +39,17 @@ import numpy as np
 from repro.core.executor_fused import (
     build_fused_executor,
     pipeline_executor_kwargs,
+    shard_lanes_executor,
 )
 from repro.core.pipeline import make_fused_model_fn
 from repro.data.store import bucket_size
 
-__all__ = ["BatchedFusedServer", "BatchResult", "straggler_report"]
+__all__ = [
+    "BatchedFusedServer",
+    "BatchResult",
+    "device_fill",
+    "straggler_report",
+]
 
 
 class BatchResult(NamedTuple):
@@ -55,6 +61,23 @@ class BatchResult(NamedTuple):
     cap: int                # bucketed buffer cap used for this batch
     lanes: int              # padded lane count the executable was compiled for
     z: np.ndarray | None = None  # (R, k) final per-request plans (active lanes)
+    n_devices: int = 1      # mesh size the lanes were sharded over
+
+
+def device_fill(fill: int, lanes: int, n_devices: int) -> np.ndarray:
+    """Active lanes per device for a front-packed fill of a sharded batch.
+
+    Lanes partition contiguously over the 1-D serving mesh (lane block
+    ``d*lanes/D .. (d+1)*lanes/D - 1`` lives on device ``d``) and admission
+    fills lanes front-to-back, so a batch with ``fill`` active lanes puts
+    ``clip(fill - d·L/D, 0, L/D)`` of them on device ``d``.  Returns the
+    (n_devices,) int array of active-lane counts.
+    """
+    if lanes % max(n_devices, 1) != 0:
+        raise ValueError(f"lanes {lanes} not divisible by n_devices {n_devices}")
+    per_dev = lanes // max(n_devices, 1)
+    d = np.arange(max(n_devices, 1))
+    return np.clip(fill - d * per_dev, 0, per_dev).astype(np.int64)
 
 
 def straggler_report(res: BatchResult) -> dict:
@@ -67,9 +90,23 @@ def straggler_report(res: BatchResult) -> dict:
     iterate (their predicate is forced false), so they are excluded from the
     waste accounting; ``fill`` reports how full the fixed-lane batch was.
 
+    On a sharded batch (``res.n_devices > 1``) a lane only waits for the
+    stragglers sharing its OWN device — each device's while-loop exits
+    independently — so the waste accounting is per-device (lane i waits for
+    its device-block max, not the global max) instead of silently charging
+    every lane the global straggler.  ``per_device_fill`` gives each
+    device's active-lane fraction (lanes partition contiguously, fills are
+    front-packed) and ``lane_imbalance`` the max−min spread of those
+    fractions — 0 means perfectly balanced, 1 means some device is full
+    while another is all padding.
+
     An empty batch (zero active lanes) yields zeros and ``straggler == -1``.
     """
     iters = np.asarray(res.iters)
+    n_dev = max(int(getattr(res, "n_devices", 1)), 1)
+    lanes = max(int(res.lanes), 1)
+    dev_active = device_fill(iters.size, lanes, n_dev)
+    per_dev_fill = dev_active / (lanes // n_dev)
     if iters.size == 0:
         return {
             "batch_iters": 0,
@@ -80,9 +117,17 @@ def straggler_report(res: BatchResult) -> dict:
             "cap": int(res.cap),
             "lanes": int(res.lanes),
             "fill": 0.0,
+            "n_devices": n_dev,
+            "per_device_fill": per_dev_fill,
+            "lane_imbalance": 0.0,
         }
-    wasted = res.batch_iters - iters
-    total = max(int(res.batch_iters) * len(iters), 1)
+    # lane i's device is i // (lanes/D): waste is measured against the max of
+    # its own device block (== batch_iters when n_devices == 1)
+    dev_of = np.arange(iters.size) // (lanes // n_dev)
+    dev_max = np.zeros(n_dev, iters.dtype)
+    np.maximum.at(dev_max, dev_of, iters)
+    wasted = dev_max[dev_of] - iters
+    total = max(int(dev_max[dev_of].sum()), 1)
     return {
         "batch_iters": int(res.batch_iters),
         "per_request_iters": iters,
@@ -91,7 +136,10 @@ def straggler_report(res: BatchResult) -> dict:
         "straggler": int(np.argmax(iters)),
         "cap": int(res.cap),
         "lanes": int(res.lanes),
-        "fill": float(len(iters)) / max(int(res.lanes), 1),
+        "fill": float(len(iters)) / lanes,
+        "n_devices": n_dev,
+        "per_device_fill": per_dev_fill,
+        "lane_imbalance": float(per_dev_fill.max() - per_dev_fill.min()),
     }
 
 
@@ -108,13 +156,46 @@ class BatchedFusedServer:
     device memory); groups larger than the cap degrade gracefully — the
     executor exhausts at ``cap`` rows and ``sample_frac`` stays honest
     because its denominator is the TRUE group size.
+
+    ``mesh`` (a 1-D ``("lanes",)`` mesh from ``launch.mesh.make_serving_mesh``)
+    shards the fixed lanes data-parallel across its devices via
+    ``shard_map``: lane ``i`` lives on device ``i // (batch_size/D)``, model
+    params stay replicated, and the hot path runs no collectives.  The
+    fixed-lane contract is mesh-invariant — still ONE executable per
+    power-of-two cap bucket, for every fill and any device count — and
+    per-lane results are identical to the unsharded server (bitwise for the
+    integer plans; fp-tolerance for predictions, since XLA recompiles at a
+    different per-device lane count).  ``batch_size`` must divide evenly
+    over the mesh.
     """
 
     def __init__(self, bundle, config, batch_size: int = 8,
-                 max_cap: int | None = None):
+                 max_cap: int | None = None, mesh=None):
         self.bundle = bundle
         self.config = config
         self.batch_size = batch_size
+        self.mesh = mesh
+        self.n_devices = int(mesh.devices.size) if mesh is not None else 1
+        if mesh is not None:
+            if mesh.devices.ndim != 1:
+                raise ValueError(
+                    f"serving mesh must be 1-D over 'lanes', got shape "
+                    f"{mesh.devices.shape}"
+                )
+            # shard_lanes_executor partitions on the literal "lanes" axis; a
+            # differently-named mesh would only fail deep inside shard_map
+            # tracing at the first serve_batch — reject it here instead
+            names = tuple(getattr(mesh, "axis_names", ()))
+            if names and names != ("lanes",):
+                raise ValueError(
+                    f"serving mesh axis must be named 'lanes', got {names}; "
+                    "build it with launch.mesh.make_serving_mesh"
+                )
+            if batch_size % self.n_devices != 0:
+                raise ValueError(
+                    f"batch_size {batch_size} must be divisible by the mesh's "
+                    f"{self.n_devices} devices"
+                )
         p = bundle.pipeline
         feat_kwargs = pipeline_executor_kwargs(p.agg_features)
         self._agg_ids = feat_kwargs.pop("agg_ids")
@@ -136,7 +217,12 @@ class BatchedFusedServer:
             self._compile_count += 1
             return self._run(vals, ns, agg_ids, delta, exacts, active)
 
-        self._batched = jax.jit(jax.vmap(_counted))
+        # the trace hook sits INSIDE the vmap/shard_map wrappers, so it still
+        # fires exactly once per jit cache miss on the sharded path
+        if mesh is not None:
+            self._batched = shard_lanes_executor(_counted, mesh)
+        else:
+            self._batched = jax.jit(jax.vmap(_counted))
         self._caps_seen: set[int] = set()
         max_n = max(
             bundle.store[f.table].group_size(g)
@@ -192,7 +278,7 @@ class BatchedFusedServer:
             return BatchResult(
                 y_hat=empty, prob=empty, iters=np.zeros((0,), np.int32),
                 sample_frac=empty, batch_iters=0, cap=0, lanes=self.batch_size,
-                z=np.zeros((0, p.k), np.int32),
+                z=np.zeros((0, p.k), np.int32), n_devices=self.n_devices,
             )
         lanes = self.batch_size
         cap = self.batch_cap(requests)
@@ -230,4 +316,5 @@ class BatchedFusedServer:
             cap=cap,
             lanes=lanes,
             z=np.asarray(res.z)[:r],
+            n_devices=self.n_devices,
         )

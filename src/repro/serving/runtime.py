@@ -33,7 +33,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.serving.batched import BatchedFusedServer
+from repro.serving.batched import BatchedFusedServer, device_fill
 
 __all__ = [
     "Arrival",
@@ -110,9 +110,47 @@ class RuntimeStats:
     compile_count: int = 0      # executables built DURING the run (post-warmup)
     compiled_buckets: list[int] = field(default_factory=list)
     tau: float = 0.95           # the server's confidence target (for summary)
+    n_devices: int = 1          # serving-mesh size the lanes were sharded over
+    lanes: int = 0              # fixed lane count (0 = unknown/legacy)
+
+    def _device_fill_stats(self) -> dict:
+        """Per-device fill + lane imbalance, averaged over admission batches.
+
+        Lanes partition contiguously over the 1-D serving mesh and fills are
+        front-packed, so a batch's fill determines each device's active-lane
+        count (``batched.device_fill``).  Reported only when the mesh has
+        more than one device — a single-device run has nothing to split —
+        and well-defined (zeros) on an empty record set OR when the lane
+        count is unknown (``lanes == 0``: a hand-built stats object) — a
+        guessed partition would fabricate balance numbers.
+        """
+        fills = {r.batch_id: r.batch_fill for r in self.records}
+        if not fills or not self.lanes:
+            return {
+                "per_device_fill": [0.0] * self.n_devices,
+                "mean_lane_imbalance": 0.0,
+            }
+        lanes = self.lanes
+        per_dev = np.stack(
+            [
+                device_fill(f, lanes, self.n_devices) / (lanes // self.n_devices)
+                for f in fills.values()
+            ]
+        )  # (batches, n_devices) fill fractions
+        return {
+            "per_device_fill": [float(x) for x in per_dev.mean(0)],
+            "mean_lane_imbalance": float(
+                (per_dev.max(1) - per_dev.min(1)).mean()
+            ),
+        }
 
     def summary(self) -> dict:
         n = len(self.records)
+        device = (
+            {"n_devices": self.n_devices, **self._device_fill_stats()}
+            if self.n_devices > 1
+            else {"n_devices": self.n_devices}
+        )
         if n == 0:
             return {
                 "n": 0,
@@ -130,6 +168,7 @@ class RuntimeStats:
                 "guarantee_rate": 0.0,
                 "compile_count": int(self.compile_count),
                 "compiled_buckets": list(self.compiled_buckets),
+                **device,
             }
         lat = np.array([r.latency_s for r in self.records]) * 1e3
         qd = np.array([r.queue_delay_s for r in self.records]) * 1e3
@@ -159,6 +198,7 @@ class RuntimeStats:
             ),
             "compile_count": int(self.compile_count),
             "compiled_buckets": list(self.compiled_buckets),
+            **device,
         }
 
 
@@ -217,7 +257,11 @@ class ServingRuntime:
             self.warmup([a.request for a in arr])
         compiles_before = self.server.compile_count
 
-        stats = RuntimeStats(tau=self.server.config.tau)
+        stats = RuntimeStats(
+            tau=self.server.config.tau,
+            n_devices=self.server.n_devices,
+            lanes=self.server.batch_size,
+        )
         if not arr:
             stats.compiled_buckets = self.server.compiled_buckets
             return stats

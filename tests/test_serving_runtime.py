@@ -137,6 +137,10 @@ def test_straggler_report_empty_and_padded(server8):
     assert rep["straggler"] == -1
     assert rep["wasted_frac"] == 0.0
     assert rep["fill"] == 0.0
+    # unsharded results still carry the per-device fields (trivially)
+    assert rep["n_devices"] == 1
+    assert rep["per_device_fill"] == pytest.approx([0.0])
+    assert rep["lane_imbalance"] == 0.0
 
     res = server8.serve_batch([{"g": 5}, {"g": 6}, {"g": 8}])
     rep = straggler_report(res)
@@ -214,6 +218,9 @@ def test_runtime_serves_all_and_accounts_delay(small_bundle, server8):
     assert s["n_batches"] == len({r.batch_id for r in stats.records})
     assert s["p99_latency_ms"] >= s["p50_latency_ms"] > 0
     assert 0 < s["mean_batch_fill"] <= server8.batch_size
+    # single-device run: n_devices reported, per-device split omitted
+    assert s["n_devices"] == 1
+    assert "per_device_fill" not in s
 
     # empty trace: well-defined zeros, no crash
     empty = ServingRuntime(server8).run([])

@@ -1,0 +1,307 @@
+"""Sharded fused serving: mesh-parallel lanes vs the single-device server.
+
+Covers the PR-4 tentpole contract:
+
+* per-lane results are IDENTICAL across serving-mesh sizes — bitwise for
+  the integer z-plans and iteration counts, fp-tolerance for predictions —
+  for a parametric (turbofan) and a holistic (sensor_health) pipeline.
+  Device counts {1, 2, 8} are exercised in a forked subprocess under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (jax fixes its
+  device list at first init, so the parent process can't host the sweep);
+* the fixed-lane compile contract is mesh-invariant: one executable per
+  power-of-two cap bucket across fills 1/3/batch_size AND device counts;
+* ``make_serving_mesh`` / ``BatchedFusedServer(mesh=...)`` validation;
+* per-device fill + lane-imbalance reporting (``straggler_report``,
+  ``RuntimeStats.summary``) including empty-input guards.
+
+The in-process tests run on whatever devices are visible (a 1-device mesh
+still exercises the full shard_map path); CI additionally runs this file
+with 8 forced host devices so the subprocess sweep is cheap there.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.executor import BiathlonConfig
+from repro.core.pipeline import AggFeature, Pipeline
+from repro.data.store import ColumnStore, build_table
+from repro.data.synthetic import PipelineBundle
+from repro.launch.mesh import LANES_AXIS, make_serving_mesh
+from repro.models.tabular import LinearRegression
+from repro.serving import (
+    BatchedFusedServer,
+    BatchResult,
+    RequestRecord,
+    RuntimeStats,
+    device_fill,
+    straggler_report,
+)
+
+_MARK = "SHARDED_PARITY_JSON:"
+DEVICE_COUNTS = (1, 2, 8)
+
+CFG = BiathlonConfig(m=64, m_sobol=16, n_bootstrap=32)
+SMALL = dict(rows_per_group=300, n_train_groups=30, n_serve_groups=4, n_requests=8)
+
+
+# --------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def small_bundle():
+    """Two-feature linear pipeline, group sizes spanning two cap buckets."""
+    rng = np.random.default_rng(0)
+    sizes = [120] * 8 + [900] * 2
+    gid = np.concatenate([np.full(s, g) for g, s in enumerate(sizes)])
+    mu = rng.normal(0, 5, len(sizes))
+    vals = mu[gid] + rng.normal(0, 2.0, len(gid))
+    aux = 0.5 * mu[gid] + rng.normal(0, 1.0, len(gid))
+    store = ColumnStore().add("t", build_table({"v": vals, "a": aux}, gid, seed=1))
+    X = np.stack([mu, 0.5 * mu], axis=1)
+    y = 3 * X[:, 0] + X[:, 1] + rng.normal(0, 0.01, len(sizes))
+    pipe = Pipeline(
+        name="small",
+        agg_features=[
+            AggFeature("avg_v", "t", "v", "avg", "g"),
+            AggFeature("avg_a", "t", "a", "avg", "g"),
+        ],
+        exact_features=[],
+        model=LinearRegression().fit(X, y),
+        task="regression",
+        scaler_mean=np.zeros(2, np.float32),
+        scaler_scale=np.ones(2, np.float32),
+        delta_default=0.5,
+    )
+    return PipelineBundle(
+        pipeline=pipe, store=store,
+        requests=[{"g": g} for g in range(len(sizes))],
+        labels=y, table_rows=len(gid), name="small",
+    )
+
+
+# ----------------------------------------------------------- mesh builder
+def test_make_serving_mesh_validation():
+    mesh = make_serving_mesh(1)
+    assert mesh.axis_names == (LANES_AXIS,)
+    assert mesh.devices.size == 1
+    # default = every visible device
+    assert make_serving_mesh().devices.size == len(__import__("jax").devices())
+    with pytest.raises(ValueError, match=">= 1"):
+        make_serving_mesh(0)
+    # the over-subscription error must teach the CPU simulation knob
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_serving_mesh(10_000)
+
+
+def test_server_rejects_indivisible_batch_size(small_bundle):
+    class _FakeMesh:
+        devices = np.empty(3, dtype=object)
+        axis_names = (LANES_AXIS,)
+
+    with pytest.raises(ValueError, match="divisible"):
+        BatchedFusedServer(small_bundle, CFG, batch_size=4, mesh=_FakeMesh())
+
+    class _FakeMesh2D:
+        devices = np.empty((2, 2), dtype=object)
+        axis_names = ("data", "model")
+
+    with pytest.raises(ValueError, match="1-D"):
+        BatchedFusedServer(small_bundle, CFG, batch_size=4, mesh=_FakeMesh2D())
+
+    class _FakeMeshWrongAxis:
+        devices = np.empty(2, dtype=object)
+        axis_names = ("data",)
+
+    # shard_lanes_executor partitions on the literal "lanes" axis — a
+    # mis-named mesh must fail loudly at construction, not inside tracing
+    with pytest.raises(ValueError, match="named 'lanes'"):
+        BatchedFusedServer(
+            small_bundle, CFG, batch_size=4, mesh=_FakeMeshWrongAxis()
+        )
+
+
+# -------------------------------------------- in-process sharded parity
+def test_sharded_matches_unsharded(small_bundle):
+    """A shard_map-wrapped server returns the same per-lane results as the
+    plain vmapped one: identical z-plans/iters, fp-close predictions."""
+    base = BatchedFusedServer(small_bundle, CFG, batch_size=4)
+    shard = BatchedFusedServer(
+        small_bundle, CFG, batch_size=4, mesh=make_serving_mesh(1)
+    )
+    assert shard.n_devices == 1
+    reqs = small_bundle.requests[:3]
+    rb, rs = base.serve_batch(reqs), shard.serve_batch(reqs)
+    np.testing.assert_array_equal(rb.z, rs.z)
+    np.testing.assert_array_equal(rb.iters, rs.iters)
+    np.testing.assert_allclose(rb.y_hat, rs.y_hat, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rb.prob, rs.prob, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rb.sample_frac, rs.sample_frac, rtol=1e-7)
+    assert rs.n_devices == 1 and rb.n_devices == 1
+
+
+def test_sharded_compile_count_per_bucket_across_fills(small_bundle):
+    """The fixed-lane no-recompile contract survives shard_map: fills
+    1/3/batch_size share ONE executable per cap bucket."""
+    srv = BatchedFusedServer(
+        small_bundle, CFG, batch_size=4, mesh=make_serving_mesh(1)
+    )
+    assert srv.compile_count == 0
+    srv.serve_batch([{"g": 0}])
+    srv.serve_batch([{"g": 1}, {"g": 2}, {"g": 3}])
+    srv.serve_batch([{"g": c} for c in range(4)])
+    assert srv.compile_count == 1, "fill variation must not recompile"
+    assert srv.compiled_buckets == [128]
+    srv.serve_batch([{"g": 8}])  # a new cap bucket is the ONLY compile trigger
+    assert srv.compile_count == 2
+    assert srv.compiled_buckets == [128, 1024]
+
+
+# ------------------------------------------------- per-device accounting
+def test_device_fill_partition():
+    np.testing.assert_array_equal(device_fill(5, 8, 4), [2, 2, 1, 0])
+    np.testing.assert_array_equal(device_fill(0, 8, 2), [0, 0])
+    np.testing.assert_array_equal(device_fill(8, 8, 1), [8])
+    with pytest.raises(ValueError, match="divisible"):
+        device_fill(3, 8, 3)
+
+
+def _result(iters, lanes, n_devices):
+    r = len(iters)
+    z = np.zeros((r, 2), np.int32)
+    f = np.zeros((r,), np.float32)
+    return BatchResult(
+        y_hat=f, prob=f, iters=np.asarray(iters, np.int32), sample_frac=f,
+        batch_iters=int(max(iters, default=0)), cap=128, lanes=lanes, z=z,
+        n_devices=n_devices,
+    )
+
+
+def test_straggler_report_per_device_fields():
+    """Sharded waste is measured against the lane's OWN device-block max —
+    each device's while-loop exits independently."""
+    rep = straggler_report(_result([1, 5, 2, 0, 7], lanes=8, n_devices=4))
+    assert rep["n_devices"] == 4
+    np.testing.assert_allclose(rep["per_device_fill"], [1.0, 1.0, 0.5, 0.0])
+    assert rep["lane_imbalance"] == pytest.approx(1.0)
+    # device blocks of 2 lanes: maxes are [5, 2, 7] -> waits are local
+    np.testing.assert_array_equal(rep["wasted_iters"], [4, 0, 0, 2, 0])
+    assert rep["wasted_frac"] == pytest.approx(6 / (5 + 5 + 2 + 2 + 7))
+    # single device: identical to the legacy global-straggler accounting
+    rep1 = straggler_report(_result([1, 5, 2, 0, 7], lanes=8, n_devices=1))
+    np.testing.assert_array_equal(rep1["wasted_iters"], [6, 2, 5, 7, 0])
+    assert rep1["per_device_fill"] == pytest.approx([5 / 8])
+    assert rep1["lane_imbalance"] == 0.0
+
+
+def test_straggler_report_empty_sharded():
+    rep = straggler_report(_result([], lanes=8, n_devices=4))
+    assert rep["straggler"] == -1
+    assert rep["n_devices"] == 4
+    np.testing.assert_allclose(rep["per_device_fill"], [0.0] * 4)
+    assert rep["lane_imbalance"] == 0.0
+    assert rep["wasted_frac"] == 0.0
+
+
+def test_runtime_stats_device_fields_and_empty_guard():
+    # multi-device, no records: zeros, never a crash
+    s = RuntimeStats(n_devices=4, lanes=8).summary()
+    assert s["n_devices"] == 4
+    assert s["per_device_fill"] == [0.0] * 4
+    assert s["mean_lane_imbalance"] == 0.0
+    # unknown lane count (hand-built stats WITH records): zeros, never a
+    # partition guessed from n_devices alone
+    rec = RequestRecord(
+        req_id=0, arrival_t=0.0, admit_t=0.0, done_t=0.01, queue_delay_s=0.0,
+        exec_s=0.01, latency_s=0.01, batch_id=0, batch_fill=6, y_hat=0.0,
+        prob=1.0, iters=1, sample_frac=0.1,
+    )
+    s0 = RuntimeStats(records=[rec], n_devices=4, lanes=0).summary()
+    assert s0["per_device_fill"] == [0.0] * 4
+    assert s0["mean_lane_imbalance"] == 0.0
+    # single device: the per-device keys are omitted, not silently [1.0]
+    s1 = RuntimeStats(n_devices=1, lanes=8).summary()
+    assert s1["n_devices"] == 1
+    assert "per_device_fill" not in s1
+
+
+# ------------------------------------- cross-device parity (subprocess)
+def _run_worker(pipeline: str) -> dict:
+    from repro.launch.mesh import forced_host_devices_env
+
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker", pipeline],
+        env=forced_host_devices_env(max(DEVICE_COUNTS)),
+        capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, f"worker failed:\n{proc.stdout}\n{proc.stderr}"
+    payload = [l for l in proc.stdout.splitlines() if l.startswith(_MARK)]
+    assert payload, f"no payload in worker output:\n{proc.stdout}"
+    return json.loads(payload[-1][len(_MARK):])
+
+
+@pytest.mark.parametrize("pipeline", ["turbofan", "sensor_health"])
+def test_cross_device_parity(pipeline):
+    """Identical requests through the unsharded server and mesh sizes
+    {1, 2, 8} produce bitwise-identical z-plans/iters and fp-close
+    predictions, and every server compiles once per cap bucket."""
+    out = _run_worker(pipeline)
+    assert out["n_visible_devices"] >= max(DEVICE_COUNTS)
+    base = out["baseline"]
+    for d in map(str, DEVICE_COUNTS):
+        run = out["devices"][d]
+        assert run["z"] == base["z"], f"z-plan drift at {d} devices"
+        assert run["iters"] == base["iters"]
+        np.testing.assert_allclose(
+            run["y_hat"], base["y_hat"], rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            run["prob"], base["prob"], rtol=1e-5, atol=1e-6
+        )
+        # mesh-invariant fixed-lane contract: fills 1/3/8 never recompile
+        assert run["compile_count"] == len(run["compiled_buckets"])
+        assert run["compiled_buckets"] == base["compiled_buckets"]
+
+
+# ----------------------------------------------------------- worker main
+def _serve_sweep(server, requests) -> dict:
+    full = server.serve_batch(requests)
+    server.serve_batch(requests[:1])   # fill variation: must not recompile
+    server.serve_batch(requests[:3])
+    return {
+        "z": np.asarray(full.z).tolist(),
+        "iters": np.asarray(full.iters).tolist(),
+        "y_hat": np.asarray(full.y_hat, np.float64).tolist(),
+        "prob": np.asarray(full.prob, np.float64).tolist(),
+        "compile_count": server.compile_count,
+        "compiled_buckets": server.compiled_buckets,
+    }
+
+
+def _worker_main(pipeline: str) -> None:
+    import jax
+
+    from repro.data.synthetic import make_pipeline
+
+    bundle = make_pipeline(pipeline, **SMALL)
+    reqs = bundle.requests[: max(DEVICE_COUNTS)]
+    out = {
+        "pipeline": pipeline,
+        "n_visible_devices": len(jax.devices()),
+        "baseline": _serve_sweep(
+            BatchedFusedServer(bundle, CFG, batch_size=len(reqs)), reqs
+        ),
+        "devices": {},
+    }
+    for d in DEVICE_COUNTS:
+        srv = BatchedFusedServer(
+            bundle, CFG, batch_size=len(reqs), mesh=make_serving_mesh(d)
+        )
+        out["devices"][str(d)] = _serve_sweep(srv, reqs)
+    print(_MARK + json.dumps(out))
+
+
+if __name__ == "__main__":
+    assert sys.argv[1] == "--worker"
+    _worker_main(sys.argv[2])
