@@ -41,6 +41,8 @@ def main() -> None:
         "kernel_micro": kernel_micro.run,
         "perf_fused_vs_host": fused_vs_host.run,
         "perf_fused_vs_host_holistic": fused_vs_host.run_holistic,
+        # incremental-AFC cap sweep (PR 5): rescan vs prefix-stats loop body
+        "perf_incremental_afc": fused_vs_host.run_large_n,
         "perf_serving_load": serving_load.run,
         # device-scaling sweep; fork-safe (re-execs itself with fresh
         # XLA_FLAGS), so the tracked sharded_scaling section can never go

@@ -11,16 +11,23 @@ The fused variant expresses the iterate-until-guaranteed loop as a
 
 * sample growth is a *monotone prefix mask* over pre-gathered, pre-permuted
   (k, cap) buffers — the plan z is data, not shape;
-* AFC covers the FULL operator set.  Parametric aggregates
-  (SUM/COUNT/AVG/VAR/STD) are one-pass power-sum moments (the Pallas
-  ``sampled_agg`` kernel on TPU, its jnp oracle elsewhere) turned into
-  (value, sigma) with finite-population correction.  Holistic aggregates
-  (MEDIAN/QUANTILE, paper appendix D) get a fixed-shape ``(h, B)`` sorted
-  bootstrap-replicate table recomputed on device each iteration: replicate
+* AFC covers the FULL operator set and is **incremental** (PR 5, DESIGN.md
+  § Incremental AFC): a once-per-request precompute before the while_loop
+  builds running prefix power-sum tables (``prefix_stats`` Pallas kernel /
+  jnp oracle, compensated f32 accumulation) for the parametric aggregates
+  (SUM/COUNT/AVG/VAR/STD) and an argsort-with-original-index rank
+  structure for the holistic columns; the loop body then reads
+  (value, sigma) for ANY plan z with O(1) gathers through the unchanged
+  ``estimates_from_power_sums`` finite-population tail, and answers
+  holistic order statistics by prefix-membership rank queries — the body's
+  cost is independent of the group size.  Holistic aggregates
+  (MEDIAN/QUANTILE, paper appendix D) keep their fixed-shape ``(h, B)``
+  sorted bootstrap-replicate table recomputed each iteration: replicate
   ranks come from counter-based RNG (``jax.random.fold_in`` on the
-  iteration index, so shapes and keys are static inside the while_loop)
-  and are selected from the prefix in one ``masked_select_ranks`` pass
-  (kernel or oracle, ``afc_backend``-routed);
+  iteration index, so shapes and keys are static inside the while_loop).
+  ``afc_backend="ref"`` retains the pre-refactor full-pass rescan
+  (``masked_estimates`` / ``masked_select_ranks`` per iteration) as the
+  parity oracle;
 * the megabatch row sampler ports ``uncertainty.sample_features``:
   parametric features draw ``value + sigma·Φ⁻¹(u)``, holistic features draw
   the empirical inverse CDF of their replicate table at the same QMC
@@ -50,16 +57,18 @@ The fused variant expresses the iterate-until-guaranteed loop as a
 * the loop condition is the Eq. 1 guarantee check.
 
 Cost model (EXPERIMENTS.md §Perf): one model dispatch of
-``m + 1 + (k+2)·m_sobol`` rows and one AFC pass per iteration, zero host
-round trips.  A pipeline with ``h`` holistic features adds one
-``masked_select_ranks`` pass per iteration — ``h·(1+B)`` order-statistic
-selections over the (h, cap) buffers (B = ``n_boot`` replicates, default
-256) plus ``h·B`` Beta draws for the replicate ranks; pipelines with
-``h = 0`` compile to exactly the parametric-only program.  The remaining
-restriction vs the host loop is the ``cap``-row buffer bound (the
-guarantee's worst case degrades to exact-over-cap).  Batched serving vmaps
-this executor over concurrent requests with power-of-two bucketed caps
-(serving/batched.py).
+``m + 1 + (k+2)·m_sobol`` rows per iteration, zero host round trips, and a
+loop body whose AFC work is cap-independent — one (k, 5) prefix-table
+gather for the parametric features plus, per holistic feature, ``(1+B)``
+rank queries of O(log(cap/S)) gathers + one S-element block scan each
+(B = ``n_boot`` replicates, default 256; ``h·B`` Beta draws for the
+replicate ranks).  All O(cap) work happens once per request in the
+precompute (prefix tables + argsort); pipelines with ``h = 0`` compile to
+exactly the parametric-only program.  The remaining restriction vs the
+host loop is the ``cap``-row buffer bound (the guarantee's worst case
+degrades to exact-over-cap).  Batched serving vmaps this executor over
+concurrent requests with power-of-two bucketed caps, donating the values
+buffer to the compiled program (serving/batched.py).
 """
 from __future__ import annotations
 
@@ -70,11 +79,20 @@ import jax.numpy as jnp
 
 from repro.core.planner import direction, gamma_abs, initial_plan, next_plan
 from repro.core.propagation import qmc_uniforms
-from repro.core.qmc import uniform_to_normal
-from repro.data.aggregates import AGG_IDS_FULL, HOLISTIC_AGGS
+from repro.core.uncertainty import sample_features_fused
+from repro.data.aggregates import AGG_IDS_FULL, HOLISTIC_AGGS, estimates_from_power_sums
 from repro.kernels.sampled_agg.ops import (
+    bootstrap_rank_targets,
+    finish_quantile_estimates,
     masked_estimates,
     masked_quantile_estimates,
+    prefix_power_sums,
+    resolve_afc_plan,
+)
+from repro.kernels.sampled_agg.prefix_stats import (
+    build_rank_index,
+    prefix_moments_at,
+    select_ranks_indexed,
 )
 
 f32 = jnp.float32
@@ -94,6 +112,13 @@ class FusedResult(NamedTuple):
     iters: jnp.ndarray
     z: jnp.ndarray          # (k,) final plan
     samples_used: jnp.ndarray
+    # Batched serving threads the donated (lanes, k, cap) values buffer back
+    # out as lane state: the identity passthrough gives XLA an input-output
+    # alias for the donated argument, so per-batch serving provably does NOT
+    # copy the big buffer (asserted via memory_analysis in tests).  None on
+    # the single-request path (returning an undonated input would force the
+    # copy this field exists to avoid).
+    lane_vals: jnp.ndarray | None = None
 
 
 def fused_rows_per_iteration(k: int, m: int, m_sobol: int) -> int:
@@ -101,7 +126,7 @@ def fused_rows_per_iteration(k: int, m: int, m_sobol: int) -> int:
     return m + 1 + (k + 2) * m_sobol
 
 
-def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes"):
+def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes", donate_vals: bool = False):
     """Data-parallel lane sharding of a per-lane fused executor.
 
     ``lane_fn`` is a single-lane ``run(vals, n, agg_ids, delta, exact,
@@ -125,6 +150,12 @@ def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes"):
     because the executor closes over large replicated constants and runs a
     ``while_loop`` — the conservative replication checker rejects that
     combination without adding safety for a collective-free program.
+
+    ``donate_vals=True`` donates argument 0 (the (lanes, k, cap) values
+    buffer, by far the largest per-batch transfer): when ``lane_fn``
+    threads it back out (``FusedResult.lane_vals``) XLA aliases the donated
+    input to that output and per-batch serving stops copying the buffer —
+    the donation contract asserted via ``memory_analysis`` in tests.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec
@@ -137,7 +168,8 @@ def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes"):
             in_specs=(spec,) * 6,
             out_specs=spec,
             check_rep=False,
-        )
+        ),
+        donate_argnums=(0,) if donate_vals else (),
     )
 
 
@@ -208,11 +240,21 @@ def build_fused_executor(
     ``model_fn`` is invoked exactly ONCE per planner iteration, on a
     ``(m + 1 + (k+2)*m_sobol, k)`` megabatch (see module docstring).
 
-    ``afc_backend``: "auto" routes the AFC passes (``sampled_moments`` and
-    the holistic ``masked_select_ranks``) through the Pallas kernels on TPU
-    and the jnp oracles elsewhere; "kernel" forces the kernels
-    (interpret-mode fallback off-TPU — correctness testing, not speed);
-    "ref" forces the oracles.
+    ``afc_backend`` selects the AFC strategy (``ops.resolve_afc_plan``):
+    "auto" and "kernel" run the **incremental** path — a once-per-request
+    precompute (``prefix_power_sums`` tables for the parametric features, a
+    ``build_rank_index`` argsort structure for the holistic columns) hoists
+    every data-proportional pass out of the while_loop, whose body then
+    reads (value, sigma) by O(1) gathers into the prefix tables and answers
+    holistic order statistics by prefix-membership rank queries — loop-body
+    cost independent of the group size.  "auto" uses the Pallas table
+    kernel on TPU and the jnp oracle elsewhere (honoring the
+    REPRO_AFC_BACKEND env at trace time); "kernel" forces the Pallas kernel
+    (interpret off-TPU); "incremental" forces the jnp table oracle
+    regardless of env (explicit strategy pinning for parity tests and CPU
+    benchmarks).  "ref" keeps the pre-refactor **rescan** oracle — a full
+    ``masked_estimates`` / ``masked_select_ranks_ref`` pass per iteration —
+    as the parity baseline (CI pins it via the env).
 
     Holistic support (static, per-pipeline): ``holistic`` lists the feature
     indices whose ``agg_ids`` are MEDIAN/QUANTILE, ``quantiles`` their q's
@@ -222,7 +264,7 @@ def build_fused_executor(
     the QMC uniforms).  ``approximate`` flags per feature whether Biathlon
     may sample it (False = Fig. 10 exact-only: pinned to z = n).
     """
-    use_kernel = {"auto": None, "kernel": True, "ref": False}[afc_backend]
+    resolve_afc_plan(afc_backend)  # validate the string at build time
 
     hol = tuple(int(j) for j in holistic)
     n_hol = len(hol)
@@ -242,21 +284,12 @@ def build_fused_executor(
     u_sob = qmc_uniforms(m_sobol, 2 * k, None)       # (m_sobol, 2k)
 
     def sample_rows(value, sigma, reps, u):
-        """uncertainty.sample_features, fused-state edition.
+        """uncertainty.sample_features, fused-state edition (shared impl).
 
         Parametric: x̂ + σ·Φ⁻¹(u).  Holistic: empirical inverse CDF of the
         sorted (h, B) replicate table at the feature's own uniform column.
         """
-        rows = value[None, :] + sigma[None, :] * uniform_to_normal(u)
-        if n_hol:
-            idx = jnp.clip(
-                (u[:, hol_idx] * n_boot).astype(jnp.int32), 0, n_boot - 1
-            )
-            emp = jax.vmap(
-                lambda col, i: col[i], in_axes=(0, 1), out_axes=1
-            )(reps, idx)                              # (m', h)
-            rows = rows.at[:, hol_idx].set(emp)
-        return rows
+        return sample_features_fused(value, sigma, reps, hol_idx, u)
 
     def guarantee_prob(y_hat, mean, sd, delta):
         if task == "classification":
@@ -282,6 +315,8 @@ def build_fused_executor(
 
     @jax.jit
     def run(vals, n, agg_ids, delta, exact, active=None) -> FusedResult:
+        # strategy resolved at trace time (mirrors the ops-level env hook)
+        incremental, use_kernel = resolve_afc_plan(afc_backend)
         act = jnp.asarray(True) if active is None else active
         cap = vals.shape[1]
         n = jnp.minimum(n.astype(jnp.int32), cap)
@@ -289,6 +324,26 @@ def build_fused_executor(
         # from z⁰ on — the planner then never selects them (exhausted).
         z0 = jnp.where(approx, initial_plan(n, alpha), n)
         step = gamma_abs(n, gamma)
+
+        # -- incremental-AFC precompute: every data-proportional pass runs
+        # HERE, once per request, before the while_loop (DESIGN.md
+        # § Incremental AFC).  The plan ladder min(z⁰ + i·γ, n) enumerates
+        # every z the planner can reach (γ and max_iters are loop
+        # constants), which is what lets the holistic membership counts be
+        # precomputed per candidate plan.
+        ptab = shift = rindex = None
+        if incremental:
+            shift = vals[:, 0]
+            ptab = prefix_power_sums(vals, shift, use_kernel=use_kernel)
+            if n_hol:
+                zcand = jnp.minimum(
+                    z0[:, None]
+                    + jnp.arange(max_iters + 1, dtype=jnp.int32)[None, :] * step,
+                    n[:, None],
+                )
+                rindex = build_rank_index(
+                    vals[hol_idx], n[hol_idx], zcand[hol_idx]
+                )
 
         def ami_prob(y, y_hat):
             """Eq. 1 guarantee probability from the AMI output slice."""
@@ -302,25 +357,44 @@ def build_fused_executor(
             return probs[y_hat.astype(jnp.int32)]
 
         def afc(z, it):
-            """(value, sigma, replicates) at plan z — kernel/oracle routed.
+            """(value, sigma, replicates) at plan z — strategy-routed.
 
-            Replicate ranks use counter-based RNG on the iteration index so
-            the while_loop body stays shape- and key-static.
+            Incremental: one (k, 5) gather into the prefix tables feeds the
+            unchanged estimator tail, and holistic order statistics come
+            from rank queries against the presorted column — nothing in
+            here scales with cap.  Rescan ("ref"): the pre-refactor full
+            pass per iteration.  Replicate ranks use counter-based RNG on
+            the iteration index (identical draws on both strategies) so the
+            while_loop body stays shape- and key-static and the two
+            strategies stay z-plan-parity comparable.
             """
-            value, sigma = masked_estimates(
-                vals, z, n, agg_ids, use_kernel=use_kernel
-            )
+            if incremental:
+                value, sigma = estimates_from_power_sums(
+                    prefix_moments_at(ptab, z), z, n, agg_ids, shift
+                )
+            else:
+                value, sigma = masked_estimates(
+                    vals, z, n, agg_ids, use_kernel=use_kernel
+                )
             if not n_hol:
                 return value, sigma, jnp.zeros((0, n_boot), f32)
-            q_val, reps = masked_quantile_estimates(
-                vals[hol_idx],
-                z[hol_idx],
-                n[hol_idx],
-                qs,
-                jax.random.fold_in(base_key, it),
-                n_boot,
-                use_kernel=use_kernel,
-            )
+            key = jax.random.fold_in(base_key, it)
+            if incremental:
+                targets = bootstrap_rank_targets(z[hol_idx], qs, key, n_boot)
+                sel = select_ranks_indexed(rindex, z[hol_idx], targets)
+                q_val, reps = finish_quantile_estimates(
+                    sel, z[hol_idx], n[hol_idx]
+                )
+            else:
+                q_val, reps = masked_quantile_estimates(
+                    vals[hol_idx],
+                    z[hol_idx],
+                    n[hol_idx],
+                    qs,
+                    key,
+                    n_boot,
+                    use_kernel=use_kernel,
+                )
             value = value.at[hol_idx].set(q_val)
             sigma = sigma.at[hol_idx].set(0.0)
             return value, sigma, reps

@@ -23,7 +23,12 @@ import jax.numpy as jnp
 
 from repro.core.qmc import uniform_to_normal
 
-__all__ = ["FeatureUncertainty", "sample_features", "exact_uncertainty"]
+__all__ = [
+    "FeatureUncertainty",
+    "sample_features",
+    "sample_features_fused",
+    "exact_uncertainty",
+]
 
 
 class FeatureUncertainty(NamedTuple):
@@ -87,3 +92,32 @@ def sample_features(unc: FeatureUncertainty, u: jnp.ndarray) -> jnp.ndarray:
         lambda col, i: col[i], in_axes=(0, 1), out_axes=1
     )(unc.replicates, idx)  # gather per-feature replicate columns -> (m, k)
     return jnp.where(unc.is_empirical[None, :], empirical, parametric)
+
+
+def sample_features_fused(
+    value: jnp.ndarray,        # (k,) point estimates
+    sigma: jnp.ndarray,        # (k,) Normal error stddevs (0 for holistic)
+    replicates: jnp.ndarray,   # (h, B) sorted replicate table, holistic rows
+    hol_idx: jnp.ndarray | None,  # (h,) static holistic feature indices
+    u: jnp.ndarray,            # (m, k) low-discrepancy uniforms
+) -> jnp.ndarray:
+    """:func:`sample_features`, fused-loop-state edition.
+
+    The fused executor carries (value, sigma) for all k features plus a
+    compact (h, B) replicate table for just the holistic ones (``hol_idx``
+    names them, statically), instead of a full ``FeatureUncertainty``
+    pytree with value-padded (k, B) replicates.  Sampling semantics are
+    identical: parametric features draw ``x̂ + σ·Φ⁻¹(u)``, holistic
+    features the empirical inverse CDF of their replicate row at the SAME
+    uniform column.  Shared by the megabatch sampler in
+    ``core/executor_fused.py`` (AMI rows and Saltelli A/B blocks alike).
+    """
+    rows = value[None, :] + sigma[None, :] * uniform_to_normal(u)
+    if hol_idx is not None and replicates.shape[0]:
+        b = replicates.shape[1]
+        idx = jnp.clip((u[:, hol_idx] * b).astype(jnp.int32), 0, b - 1)
+        emp = jax.vmap(
+            lambda col, i: col[i], in_axes=(0, 1), out_axes=1
+        )(replicates, idx)                            # (m, h)
+        rows = rows.at[:, hol_idx].set(emp)
+    return rows

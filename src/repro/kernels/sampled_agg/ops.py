@@ -7,6 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.data.aggregates import estimates_from_power_sums
+from repro.kernels.sampled_agg.prefix_stats import (
+    prefix_power_sums as prefix_power_sums_kernel,
+    prefix_power_sums_ref,
+)
 from repro.kernels.sampled_agg.quantile_select import masked_select_ranks
 from repro.kernels.sampled_agg.ref import (
     masked_select_ranks_ref,
@@ -19,6 +23,10 @@ __all__ = [
     "estimates_from_moments",
     "masked_estimates",
     "masked_quantile_estimates",
+    "prefix_power_sums",
+    "resolve_afc_plan",
+    "bootstrap_rank_targets",
+    "finish_quantile_estimates",
 ]
 
 
@@ -34,6 +42,60 @@ def _resolve_backend(use_kernel: bool | None) -> bool:
             return False
         return jax.default_backend() == "tpu"
     return use_kernel
+
+
+def resolve_afc_plan(afc_backend: str) -> tuple[bool, bool | None]:
+    """Executor AFC strategy from the ``afc_backend`` build argument.
+
+    Returns ``(incremental, use_kernel)``.  ``"ref"`` selects the
+    pre-refactor **rescan** path (full masked_estimates / rank-count pass
+    per planner iteration, jnp oracles) — the parity oracle CI pins via
+    ``REPRO_AFC_BACKEND=ref``.  ``"kernel"`` forces the incremental
+    prefix-stats path with the Pallas table kernel (interpret off-TPU);
+    ``"incremental"`` the same path with the jnp table oracle regardless of
+    env (explicit strategy pinning for parity tests and the CPU
+    benchmarks; also accepted as a REPRO_AFC_BACKEND value — unknown env
+    values fall through to auto, matching ``_resolve_backend``).
+    ``"auto"`` consults the env at trace time like
+    ``_resolve_backend``, then defaults to incremental with kernel-on-TPU —
+    incremental is the serving default; rescan exists as the oracle.
+    """
+    if afc_backend == "auto":
+        env = os.environ.get("REPRO_AFC_BACKEND", "auto").lower()
+        if env == "ref":
+            return False, False
+        if env == "kernel":
+            return True, True
+        if env == "incremental":
+            return True, False
+        return True, None
+    if afc_backend == "ref":
+        return False, False
+    if afc_backend == "kernel":
+        return True, True
+    if afc_backend == "incremental":
+        return True, False
+    raise ValueError(f"unknown afc_backend {afc_backend!r}")
+
+
+def prefix_power_sums(
+    vals: jnp.ndarray,
+    shift: jnp.ndarray | None = None,
+    *,
+    use_kernel: bool | None = None,
+):
+    """(k, cap) -> (k, cap, 4) running prefix power sums of ``vals - shift``.
+
+    The incremental-AFC precompute (one call per request, before the
+    while_loop); backend-routed exactly like :func:`moments`.  The table row
+    at ``z - 1`` is the ``[s1..s4]`` tail :func:`moments` would return at
+    plan z (``prefix_stats.prefix_moments_at`` does the gather).
+    """
+    if _resolve_backend(use_kernel):
+        return prefix_power_sums_kernel(
+            vals, shift, interpret=jax.default_backend() != "tpu"
+        )
+    return prefix_power_sums_ref(vals, shift)
 
 
 def moments(
@@ -111,8 +173,76 @@ def masked_quantile_estimates(
     quantile with a degenerate replicate table.  Returns
     ``(value (h,), replicates (h, n_boot) sorted ascending)``.
     """
+    targets = bootstrap_rank_targets(z, qs, key, n_boot)
+    if _resolve_backend(use_kernel):
+        sel = masked_select_ranks(
+            vals, z, targets, interpret=jax.default_backend() != "tpu"
+        )
+    else:
+        sel = masked_select_ranks_ref(vals, z, targets)
+    return finish_quantile_estimates(sel, z, n)
+
+
+def _gamma_mt(key: jax.Array, d: jnp.ndarray, rounds: int) -> jnp.ndarray:
+    """Marsaglia-Tsang (2000) Gamma(a ≥ 1) with ``d = a - 1/3``, sampled in
+    a FIXED number of unrolled proposal rounds (no data-dependent loop).
+
+    ``jax.random.gamma``'s exact rejection ``while_loop`` costs tens of ms
+    per (h, B) draw on CPU and sits in the serving loop body; the squeeze
+    accepts ≥ 96% per round for a ≥ 1, so after ``rounds`` independent
+    proposals the miss probability is < (0.04)^rounds (≈ 2.6e-6 at 4) and
+    the fallback — the distribution mean ``d + 1/3 ≈ a`` — is statistically
+    invisible next to the B-replicate bootstrap's own MC error.
+    """
+    c = 1.0 / jnp.sqrt(9.0 * d)
+    out = d + 1.0 / 3.0
+    done = jnp.zeros(d.shape, bool)
+    for kk in jax.random.split(key, rounds):
+        kn, ku = jax.random.split(kk)
+        x = jax.random.normal(kn, d.shape)
+        v = (1.0 + c * x) ** 3
+        u = jax.random.uniform(ku, d.shape, minval=1e-38)
+        safe_v = jnp.where(v > 0.0, v, 1.0)
+        ok = (v > 0.0) & (
+            jnp.log(u) < 0.5 * x * x + d - d * safe_v + d * jnp.log(safe_v)
+        )
+        take = ok & ~done
+        out = jnp.where(take, d * safe_v, out)
+        done = done | ok
+    return out
+
+
+def beta_order_stat(
+    key: jax.Array, a: jnp.ndarray, b: jnp.ndarray, shape, rounds: int = 4
+) -> jnp.ndarray:
+    """Beta(a, b) draws for a, b ≥ 1 via two fixed-round MT gammas.
+
+    Drop-in for ``jax.random.beta`` on the bootstrap hot path (the Beta
+    order-statistic trick, appendix D): same distribution up to the
+    < 3e-6 proposal-truncation described in :func:`_gamma_mt`, ~500×
+    cheaper on CPU because nothing in it is a rejection ``while_loop``.
+    """
+    ka, kb = jax.random.split(key)
     f32 = jnp.float32
-    h, cap = vals.shape
+    da = jnp.broadcast_to(a.astype(f32), shape) - 1.0 / 3.0
+    db = jnp.broadcast_to(b.astype(f32), shape) - 1.0 / 3.0
+    ga = _gamma_mt(ka, da, rounds)
+    gb = _gamma_mt(kb, db, rounds)
+    return ga / (ga + gb)
+
+
+def bootstrap_rank_targets(
+    z: jnp.ndarray, qs: jnp.ndarray, key: jax.Array, n_boot: int
+) -> jnp.ndarray:
+    """(h, 1+B) rank targets: [point-estimate rank | bootstrap ranks].
+
+    Shared by the rescan path above and the incremental
+    ``select_ranks_indexed`` path so both draw BITWISE-identical Beta
+    replicate ranks from the same counter-based key — the z-plan parity
+    contract between the two executors rests on this.
+    """
+    f32 = jnp.float32
+    h = z.shape[0]
     zf = z.astype(f32)
     zm1 = jnp.maximum(z - 1, 0)
     rank = jnp.clip(
@@ -120,17 +250,22 @@ def masked_quantile_estimates(
     )
     a = (rank + 1).astype(f32)
     b = jnp.maximum(z - rank, 1).astype(f32)
-    v = jax.random.beta(key, a[:, None], b[:, None], (h, n_boot))
+    v = beta_order_stat(key, a[:, None], b[:, None], (h, n_boot))
     boot = jnp.clip(
         jnp.floor(zf[:, None] * v).astype(jnp.int32), 0, zm1[:, None]
     )
-    targets = jnp.concatenate([rank[:, None], boot], axis=1)   # (h, 1+B)
-    if _resolve_backend(use_kernel):
-        sel = masked_select_ranks(
-            vals, z, targets, interpret=jax.default_backend() != "tpu"
-        )
-    else:
-        sel = masked_select_ranks_ref(vals, z, targets)
+    return jnp.concatenate([rank[:, None], boot], axis=1)
+
+
+def finish_quantile_estimates(
+    sel: jnp.ndarray, z: jnp.ndarray, n: jnp.ndarray
+):
+    """Apply the estimate() conventions to selected (h, 1+B) order stats.
+
+    Empty prefix -> (0, zeros); exact (z >= n) -> degenerate replicates at
+    the exact quantile; otherwise (point value, sorted replicates).
+    """
+    f32 = jnp.float32
     empty = z <= 0
     value = jnp.where(empty, 0.0, sel[:, 0]).astype(f32)
     reps = jnp.sort(sel[:, 1:], axis=1)

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.sampled_agg.compensated import comp_sum
+
 __all__ = ["sampled_moments_ref", "masked_select_ranks_ref", "N_MOMENTS"]
 
 N_MOMENTS = 5  # [count, s1, s2, s3, s4]
@@ -36,6 +38,10 @@ def sampled_moments_ref(
     near the data (e.g. the first buffered sample) avoids the float32
     cancellation that raw 4th powers suffer when |mean| >> std.  None means
     no shift (sums of the raw values).
+
+    Accumulation is compensated (``compensated.comp_sum``): Σv⁴ on 60k-row
+    heavy-tailed columns drifts measurably under plain f32 reduction order,
+    and a drifted s4 is a wrong VAR/STD sigma — i.e. a wrong guarantee.
     """
     k, cap = vals.shape
     mask = (jnp.arange(cap)[None, :] < z[:, None]).astype(jnp.float32)
@@ -45,10 +51,10 @@ def sampled_moments_ref(
     v = v * mask
     count = jnp.sum(mask, axis=1)
     v2 = v * v
-    s1 = jnp.sum(v, axis=1)
-    s2 = jnp.sum(v2, axis=1)
-    s3 = jnp.sum(v2 * v, axis=1)
-    s4 = jnp.sum(v2 * v2, axis=1)
+    s1 = comp_sum(v, axis=1)
+    s2 = comp_sum(v2, axis=1)
+    s3 = comp_sum(v2 * v, axis=1)
+    s4 = comp_sum(v2 * v2, axis=1)
     return jnp.stack([count, s1, s2, s3, s4], axis=1)
 
 

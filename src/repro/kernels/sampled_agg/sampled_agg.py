@@ -23,11 +23,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sampled_agg.compensated import kahan_step
 
 __all__ = ["sampled_moments"]
 
 
-def _kernel(z_ref, shift_ref, vals_ref, out_ref, *, block_c: int):
+def _kernel(z_ref, shift_ref, vals_ref, out_ref, comp_ref, *, block_c: int, n_c: int):
     ci = pl.program_id(1)
     # (block_k, block_c) tile of sample values
     v = vals_ref[...].astype(jnp.float32)
@@ -52,8 +55,19 @@ def _kernel(z_ref, shift_ref, vals_ref, out_ref, *, block_c: int):
     @pl.when(ci == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        comp_ref[...] = jnp.zeros_like(comp_ref)
 
-    out_ref[...] += tile
+    # Kahan-compensated cross-tile carry: a plain `out += tile` loses the
+    # small tiles' contribution once the running Σv⁴ dominates them (60k-row
+    # heavy-tailed columns); the VMEM (hi, lo) pair keeps the accumulated
+    # rounding and folds it back once on the last column tile.
+    hi, lo = kahan_step(out_ref[...], comp_ref[...], tile)
+    out_ref[...] = hi
+    comp_ref[...] = lo
+
+    @pl.when(ci == n_c - 1)
+    def _collapse():
+        out_ref[...] += comp_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "block_c", "interpret"))
@@ -86,7 +100,7 @@ def sampled_moments(
         shift = jnp.pad(shift, (0, kp - k))
     grid = (kp // block_k, capp // block_c)
     out = pl.pallas_call(
-        functools.partial(_kernel, block_c=block_c),
+        functools.partial(_kernel, block_c=block_c, n_c=capp // block_c),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_k,), lambda i, j: (i,)),
@@ -95,6 +109,7 @@ def sampled_moments(
         ],
         out_specs=pl.BlockSpec((block_k, 5), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((kp, 5), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_k, 5), jnp.float32)],
         interpret=interpret,
     )(z, shift.astype(jnp.float32), vals)
     return out[:k]

@@ -27,7 +27,7 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["HloCost", "analyze_hlo"]
+__all__ = ["HloCost", "analyze_hlo", "while_costs"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
@@ -267,8 +267,11 @@ def _fusion_param_kinds(callee: _Comp):
             srcs = _OPERANDS.findall(ins.line.split(ins.op + "(", 1)[1])
             if srcs:
                 via[ins.name] = srcs[0]
-        elif ins.op == "dynamic-slice":
-            srcs = _OPERANDS.findall(ins.line.split("dynamic-slice(", 1)[1])
+        elif ins.op in ("dynamic-slice", "gather"):
+            # Both address only the selected rows of their big operand:
+            # charge the result bytes, not the whole table (a prefix-table
+            # gather reads k rows, not the (k, cap, 4) table it indexes).
+            srcs = _OPERANDS.findall(ins.line.split(ins.op + "(", 1)[1])
             if srcs:
                 src = srcs[0]
                 for _ in range(4):
@@ -396,6 +399,24 @@ def _eval_comp(
             ob, biggest = _operand_bytes(ins, comp)
             total.bytes += 2.0 * max(ob - biggest, 0.0)
             continue
+        if op == "gather":
+            # addressed traffic only: read the gathered rows + the index
+            # operand, write the result — NOT the whole indexed table
+            # (billing it would claim a (k, cap, 4) prefix-table read per
+            # O(1) AFC lookup).  The table is specifically operand 0 of
+            # gather(operand, indices) — not "the biggest operand", which
+            # would mischarge whenever the index tensor outgrows the table.
+            call_part = ins.line.split(op + "(", 1)
+            table_bytes = 0.0
+            if len(call_part) == 2:
+                srcs = _OPERANDS.findall(call_part[1].split(")")[0])
+                if srcs:
+                    t = comp.types.get(srcs[0])
+                    table_bytes = _type_bytes(t) if t else 0.0
+            ob, _ = _operand_bytes(ins, comp)
+            rb = _type_bytes(ins.type_str)
+            total.bytes += max(ob - table_bytes, 0.0) + 2.0 * rb
+            continue
         # generic top-level op: producer+consumer traffic
         ob, _ = _operand_bytes(ins, comp)
         total.bytes += ob + _type_bytes(ins.type_str)
@@ -410,3 +431,45 @@ def analyze_hlo(text: str, n_devices: int) -> HloCost:
         return HloCost()
     memo: dict = {}
     return _eval_comp(entry, comps, n_devices, memo)
+
+
+def while_costs(text: str, n_devices: int = 1) -> list[dict]:
+    """Per-while-loop body costs of a compiled module.
+
+    Returns one entry per ``while`` instruction found anywhere in the
+    module: ``{"body": name, "trips": estimated trip count, "cost": HloCost
+    of ONE body execution}`` (nested whiles inside the body are multiplied
+    through as usual).  This is the per-iteration cost probe the
+    incremental-AFC regression test uses: the fused executor's planner loop
+    body must cost the same regardless of the (k, cap) buffer size, while
+    the whole-program cost may scale with cap (the once-per-request
+    precompute is allowed to).  Callers pick their loop of interest — the
+    planner while is the one with the largest body cost (the inner Beta
+    rejection loops are tiny).
+    """
+    comps = _parse_computations(text)
+    out = []
+    seen: set[str] = set()
+    memo: dict = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__" or comp.name in seen:
+            continue
+        seen.add(comp.name)
+        for ins in comp.instrs:
+            if ins.op != "while":
+                continue
+            mcb = _COND_BODY.search(ins.line)
+            if not mcb:
+                continue
+            cond = comps.get(mcb.group(1))
+            body = comps.get(mcb.group(2))
+            if body is None:
+                continue
+            out.append(
+                {
+                    "body": body.name,
+                    "trips": _trip_count(cond) if cond else 1,
+                    "cost": _eval_comp(body, comps, n_devices, memo),
+                }
+            )
+    return out

@@ -167,10 +167,17 @@ class BatchedFusedServer:
     integer plans; fp-tolerance for predictions, since XLA recompiles at a
     different per-device lane count).  ``batch_size`` must divide evenly
     over the mesh.
+
+    The (lanes, k, cap) values buffer is **donated** on both paths and
+    threaded back out as ``FusedResult.lane_vals``, so XLA aliases it in
+    place instead of copying it per batch; ``afc_backend`` is forwarded to
+    :func:`build_fused_executor` ("auto" = incremental prefix-stats AFC,
+    "ref" = the pre-refactor rescan oracle).
     """
 
     def __init__(self, bundle, config, batch_size: int = 8,
-                 max_cap: int | None = None, mesh=None):
+                 max_cap: int | None = None, mesh=None,
+                 afc_backend: str = "auto"):
         self.bundle = bundle
         self.config = config
         self.batch_size = batch_size
@@ -204,7 +211,7 @@ class BatchedFusedServer:
             n_classes=max(p.n_classes, 2),
             m=config.m, m_sobol=config.m_sobol, alpha=config.alpha,
             gamma=config.gamma, tau=config.tau, max_iters=config.max_iters,
-            n_boot=config.n_bootstrap, **feat_kwargs,
+            n_boot=config.n_bootstrap, afc_backend=afc_backend, **feat_kwargs,
         )
 
         # jit caches one executable per distinct (lanes, k, cap) input shape;
@@ -215,14 +222,19 @@ class BatchedFusedServer:
 
         def _counted(vals, ns, agg_ids, delta, exacts, active):
             self._compile_count += 1
-            return self._run(vals, ns, agg_ids, delta, exacts, active)
+            res = self._run(vals, ns, agg_ids, delta, exacts, active)
+            # thread the donated values buffer back out as lane state: the
+            # identity passthrough becomes an XLA input-output alias, so the
+            # (lanes, k, cap) buffer is neither copied per batch nor kept
+            # alive twice (no-copy contract; see shard_lanes_executor).
+            return res._replace(lane_vals=vals)
 
         # the trace hook sits INSIDE the vmap/shard_map wrappers, so it still
         # fires exactly once per jit cache miss on the sharded path
         if mesh is not None:
-            self._batched = shard_lanes_executor(_counted, mesh)
+            self._batched = shard_lanes_executor(_counted, mesh, donate_vals=True)
         else:
-            self._batched = jax.jit(jax.vmap(_counted))
+            self._batched = jax.jit(jax.vmap(_counted), donate_argnums=(0,))
         self._caps_seen: set[int] = set()
         max_n = max(
             bundle.store[f.table].group_size(g)

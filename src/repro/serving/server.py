@@ -86,6 +86,7 @@ class BiathlonServer:
         config: BiathlonConfig | None = None,
         mode: str = "host",
         max_cap: int | None = None,
+        afc_backend: str = "auto",
     ):
         self.bundle = bundle
         self.config = config or BiathlonConfig()
@@ -95,6 +96,10 @@ class BiathlonServer:
         self._host = HostLoopExecutor(self.store, self.config)
         self._fused = None
         self._max_cap_override = max_cap
+        # "auto"/"kernel" = incremental prefix-stats AFC (the serving
+        # default); "ref" = the pre-refactor rescan oracle (parity/bench
+        # baseline) — see executor_fused.build_fused_executor.
+        self._afc_backend = afc_backend
         if mode == "fused":
             self._build_fused()
 
@@ -116,6 +121,7 @@ class BiathlonServer:
             tau=cfg.tau,
             max_iters=cfg.max_iters,
             n_boot=cfg.n_bootstrap,
+            afc_backend=self._afc_backend,
             **feat_kwargs,
         )
         max_n = max(
