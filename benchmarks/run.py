@@ -44,6 +44,10 @@ def main() -> None:
         # incremental-AFC cap sweep (PR 5): rescan vs prefix-stats loop body
         "perf_incremental_afc": fused_vs_host.run_large_n,
         "perf_serving_load": serving_load.run,
+        # SLO-aware degradation: latency/guarantee Pareto sweep + bounded
+        # 3x-overload run (BENCH_serving.json["adaptive_slo"]) — wired here
+        # so the tracked section can't go stale
+        "perf_adaptive_slo": serving_load.run_adaptive_slo,
         # device-scaling sweep; fork-safe (re-execs itself with fresh
         # XLA_FLAGS), so the tracked sharded_scaling section can never go
         # stale relative to the serving_load section written above

@@ -130,13 +130,14 @@ def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes", donate_vals: boo
     """Data-parallel lane sharding of a per-lane fused executor.
 
     ``lane_fn`` is a single-lane ``run(vals, n, agg_ids, delta, exact,
-    active)`` (the :func:`build_fused_executor` signature, ``active``
-    mandatory so the arity is static); the result maps it over a leading
-    ``lanes`` dimension — ``jax.vmap`` within each device, ``shard_map``
-    across the ``mesh``'s 1-D ``axis`` — and jits the whole thing.
+    active, tau, iter_cap)`` (the :func:`build_fused_executor` signature
+    with the trailing optionals made mandatory so the arity is static); the
+    result maps it over a leading ``lanes`` dimension — ``jax.vmap`` within
+    each device, ``shard_map`` across the ``mesh``'s 1-D ``axis`` — and
+    jits the whole thing.
 
     Because every lane is an independent while-loop over its own buffers,
-    ALL six inputs and every :class:`FusedResult` leaf partition along the
+    ALL eight inputs and every :class:`FusedResult` leaf partition along the
     leading dimension and the compiled program contains **zero cross-device
     collectives**: model params and the QMC/bootstrap constants are
     closure-captured and replicated, per-lane reductions stay local to the
@@ -165,7 +166,7 @@ def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes", donate_vals: boo
         shard_map(
             jax.vmap(lane_fn),
             mesh=mesh,
-            in_specs=(spec,) * 6,
+            in_specs=(spec,) * 8,
             out_specs=spec,
             check_rep=False,
         ),
@@ -236,6 +237,19 @@ def build_fused_executor(
     forced false), reports ``iters == 0`` and ``samples_used == 0``, and its
     y_hat/prob are the init-dispatch values over its zero-padded buffers —
     callers slice inactive lanes off before interpreting results.
+
+    Two further optional trailing inputs promote degradation knobs from
+    compile-time constants to **traced loop state** (SLO-aware serving,
+    DESIGN.md § Graceful degradation): ``tau`` overrides the build-time
+    confidence target and ``iter_cap`` the planner-iteration ceiling, per
+    call (per lane under vmap).  Both are data, not shape — an admission
+    controller can vary them every batch without ever minting a new
+    executable per cap bucket.  ``iter_cap`` is clamped to the static
+    ``max_iters``, which still bounds the while_loop and sizes the
+    incremental-AFC candidate ladder (a smaller traced cap only uses a
+    prefix of that ladder); ``m_sobol``/``m`` stay static because they set
+    the megabatch SHAPE.  ``None`` (the single-request default) compiles
+    the constants in exactly as before.
 
     ``model_fn`` is invoked exactly ONCE per planner iteration, on a
     ``(m + 1 + (k+2)*m_sobol, k)`` megabatch (see module docstring).
@@ -313,11 +327,21 @@ def build_fused_executor(
             var_y > 1e-12, jnp.clip(v_j / jnp.maximum(var_y, 1e-12), 0, 1), 0.0
         )
 
+    static_tau, static_max_iters = tau, max_iters
+
     @jax.jit
-    def run(vals, n, agg_ids, delta, exact, active=None) -> FusedResult:
+    def run(vals, n, agg_ids, delta, exact, active=None, tau=None,
+            iter_cap=None) -> FusedResult:
         # strategy resolved at trace time (mirrors the ops-level env hook)
         incremental, use_kernel = resolve_afc_plan(afc_backend)
         act = jnp.asarray(True) if active is None else active
+        # degradation knobs: traced when supplied, compile-time otherwise
+        tau = static_tau if tau is None else tau
+        cap_eff = (
+            static_max_iters
+            if iter_cap is None
+            else jnp.minimum(jnp.asarray(iter_cap, jnp.int32), static_max_iters)
+        )
         cap = vals.shape[1]
         n = jnp.minimum(n.astype(jnp.int32), cap)
         # exact-only operators (Fig. 10 ablation) consume their full groups
@@ -431,7 +455,7 @@ def build_fused_executor(
 
         def cond(state):
             z, it, y_hat, prob, idx, reps = state
-            return act & (prob < tau) & (it < max_iters) & jnp.any(z < n)
+            return act & (prob < tau) & (it < cap_eff) & jnp.any(z < n)
 
         def body(state):
             z, it, _, _, idx, _ = state
@@ -454,7 +478,7 @@ def build_fused_executor(
         y_hat0 = y0_all[m]
         prob0 = ami_prob(y0_all[:m], y_hat0)
         idx0 = jax.lax.cond(
-            act & (prob0 < tau) & jnp.any(z0 < n) & (max_iters > 0),
+            act & (prob0 < tau) & jnp.any(z0 < n) & (cap_eff > 0),
             lambda: sobol_from_outputs(
                 model_fn(sobol_rows(value0, sigma0, reps0), exact).astype(f32),
                 y_hat0,

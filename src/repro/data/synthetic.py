@@ -58,10 +58,18 @@ def poisson_arrivals(
     serving runtime replays (serving/runtime.py).  Requests are cycled from
     ``requests`` when ``n`` exceeds the log.  Returns ``[(t_seconds, req)]``
     sorted by time; deterministic in ``seed``.
+
+    Degenerate inputs are pinned explicitly rather than left to numpy:
+    ``rate_rps`` must be a positive finite number (zero, negative, and NaN
+    all raise — NaN would silently satisfy neither branch of a ``<= 0``
+    check), ``n < 0`` raises, and ``n == 0`` is a well-defined EMPTY trace
+    (not whatever an empty ``cumsum`` happens to produce downstream).
     """
-    if rate_rps <= 0:
-        raise ValueError("rate_rps must be > 0")
-    if not requests:
+    if not (rate_rps > 0) or not np.isfinite(rate_rps):
+        raise ValueError(f"rate_rps must be a positive finite number, got {rate_rps}")
+    if n is not None and n < 0:
+        raise ValueError(f"n must be >= 0, got {n}")
+    if not requests or n == 0:
         return []
     n = len(requests) if n is None else n
     rng = np.random.default_rng(seed)

@@ -19,12 +19,23 @@ Holistic (MEDIAN/QUANTILE) pipelines are served by every mode: pick the
 ``--median`` for the appendix-D AVG→MEDIAN substitution of any Table 1
 pipeline.
 
+SLO-aware graceful degradation (fused-batched / fused-sharded only):
+``--slo-ms`` attaches a latency budget to every arrival, ``--degrade``
+installs the knob-tier admission controller (deadline-driven (delta, tau,
+iter_cap) scaling + load shedding; serving/degrade.py), and
+``--fault-profile`` injects a seeded fault schedule (service-time spikes,
+transient executor failures, or an arrival burst; serving/faults.py) to
+exercise degradation and recovery.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --pipeline trip_fare
   PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan --mode fused
   PYTHONPATH=src python -m repro.launch.serve --pipeline sensor_health --mode fused
   PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan --median \
       --mode fused-batched --arrival-rate 50 --batch-size 8 --max-wait-ms 20
+  PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan \
+      --mode fused-batched --arrival-rate 80 --slo-ms 250 --degrade \
+      --fault-profile spikes
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --pipeline turbofan --mode fused-sharded \
       --devices 4 --batch-size 8
@@ -82,6 +93,22 @@ def main():
                     help="fixed lane count per admission batch (fused-batched)")
     ap.add_argument("--max-wait-ms", type=float, default=20.0,
                     help="admission max-wait in milliseconds (fused-batched)")
+    # SLO-aware graceful degradation + fault injection (fused-batched)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency budget in ms; arrivals get a "
+                    "deadline of t + slo (fused-batched)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="install the knob-tier admission controller: "
+                    "deadline-driven (delta, tau, iter_cap) scaling + load "
+                    "shedding (requires --slo-ms for deadline pressure)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="shed when the queue exceeds this bound (--degrade)")
+    ap.add_argument("--fault-profile",
+                    choices=("none", "spikes", "failures", "burst"),
+                    default="none",
+                    help="seeded fault schedule wrapped around serve_batch "
+                    "(serving/faults.py)")
+    ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -97,6 +124,16 @@ def main():
     delta = cfg.delta if cfg.delta is not None else bundle.pipeline.delta_default
 
     if args.mode in ("fused-batched", "fused-sharded"):
+        import time as _time
+
+        from repro.serving import (
+            DegradationController,
+            FaultProfile,
+            FaultyServer,
+            default_tiers,
+            inject_burst,
+        )
+
         mesh = None
         if args.mode == "fused-sharded":
             from repro.launch.mesh import make_serving_mesh
@@ -105,15 +142,56 @@ def main():
         srv = BatchedFusedServer(
             bundle, cfg, batch_size=args.batch_size, mesh=mesh
         )
-        runtime = ServingRuntime(srv, max_wait_s=args.max_wait_ms / 1e3)
+        controller = None
+        if args.degrade:
+            # seed the controller's service estimate with one measured
+            # full-lane batch (post-warmup, so it times the steady state)
+            batch = [bundle.requests[i % len(bundle.requests)]
+                     for i in range(args.batch_size)]
+            srv.serve_batch(batch)
+            t0 = _time.perf_counter()
+            srv.serve_batch(batch)
+            controller = DegradationController(
+                default_tiers(cfg.tau, cfg.max_iters),
+                service_est_s=_time.perf_counter() - t0,
+                lanes=args.batch_size,
+                max_queue=args.max_queue,
+            )
         arrivals = poisson_arrivals(
             bundle.requests, args.arrival_rate, n=args.requests, seed=args.seed
+        )
+        if args.fault_profile == "burst":
+            mid = arrivals[len(arrivals) // 2][0]
+            arrivals = inject_burst(
+                arrivals, at_t=mid, n=max(args.requests, 8),
+                width_s=0.05, seed=args.fault_seed,
+            )
+        # pre-warm every cap bucket on the INNER server: injected faults
+        # must hit measured traffic (with call indices starting at 0),
+        # never the compilation warmup
+        ServingRuntime(srv).warmup([a[1] for a in arrivals])
+        server = srv
+        if args.fault_profile == "spikes":
+            server = FaultyServer(
+                srv, FaultProfile(seed=args.fault_seed, spike_prob=0.2,
+                                  spike_s=0.25),
+            )
+        elif args.fault_profile == "failures":
+            server = FaultyServer(
+                srv, FaultProfile(seed=args.fault_seed, fail_prob=0.15),
+            )
+        runtime = ServingRuntime(
+            server, max_wait_s=args.max_wait_ms / 1e3,
+            slo_s=None if args.slo_ms is None else args.slo_ms / 1e3,
+            controller=controller,
         )
         stats = runtime.run(arrivals)
         print(f"[serve] {args.pipeline} mode={args.mode} "
               f"rate={args.arrival_rate:.1f}rps lanes={args.batch_size} "
               f"devices={srv.n_devices} "
-              f"max_wait={args.max_wait_ms:.0f}ms delta={delta:.4f}")
+              f"max_wait={args.max_wait_ms:.0f}ms delta={delta:.4f} "
+              f"slo={args.slo_ms}ms degrade={args.degrade} "
+              f"faults={args.fault_profile}")
         _print_table(stats.summary())
         return
 

@@ -5,6 +5,19 @@ from repro.serving.batched import (
     device_fill,
     straggler_report,
 )
+from repro.serving.degrade import (
+    DegradationController,
+    KnobTier,
+    LaneKnobs,
+    default_tiers,
+    validate_tiers,
+)
+from repro.serving.faults import (
+    FaultProfile,
+    FaultyServer,
+    TransientExecutorError,
+    inject_burst,
+)
 from repro.serving.runtime import (
     AdmissionBatcher,
     Arrival,
@@ -20,6 +33,15 @@ __all__ = [
     "BatchResult",
     "device_fill",
     "straggler_report",
+    "DegradationController",
+    "KnobTier",
+    "LaneKnobs",
+    "default_tiers",
+    "validate_tiers",
+    "FaultProfile",
+    "FaultyServer",
+    "TransientExecutorError",
+    "inject_burst",
     "AdmissionBatcher",
     "Arrival",
     "RequestRecord",

@@ -220,9 +220,10 @@ class BatchedFusedServer:
         # making the compile count observable without backend internals.
         self._compile_count = 0
 
-        def _counted(vals, ns, agg_ids, delta, exacts, active):
+        def _counted(vals, ns, agg_ids, delta, exacts, active, tau, iter_cap):
             self._compile_count += 1
-            res = self._run(vals, ns, agg_ids, delta, exacts, active)
+            res = self._run(vals, ns, agg_ids, delta, exacts, active, tau,
+                            iter_cap)
             # thread the donated values buffer back out as lane state: the
             # identity passthrough becomes an XLA input-output alias, so the
             # (lanes, k, cap) buffer is neither copied per batch nor kept
@@ -265,7 +266,7 @@ class BatchedFusedServer:
         return min(bucket_size(max_n), self._max_cap)
 
     # ------------------------------------------------------------------
-    def serve_batch(self, requests: list[dict]) -> BatchResult:
+    def serve_batch(self, requests: list[dict], knobs=None) -> BatchResult:
         """Serve an admission batch of 0..batch_size requests.
 
         The batch is padded to exactly ``batch_size`` lanes; results are
@@ -273,6 +274,14 @@ class BatchedFusedServer:
         are rejected — admitting them would compile one executable per
         distinct oversize fill, breaking the fixed-lane no-recompile
         contract (callers chunk at admission time; serving/runtime.py does).
+
+        ``knobs`` (optional, aligned with ``requests``) carries per-lane
+        degradation settings — :class:`~repro.serving.degrade.LaneKnobs`
+        entries (or ``None`` for the config defaults).  delta, tau, and the
+        planner iteration cap are all *traced* ``(lanes,)`` inputs of the
+        fused executor, so an SLO controller can vary them every batch
+        without minting a new executable per cap bucket (the fixed-lane
+        compile contract is knob-invariant; pad lanes carry the defaults).
         """
         p = self.bundle.pipeline
         store = self.bundle.store
@@ -284,6 +293,10 @@ class BatchedFusedServer:
             raise ValueError(
                 f"admission batch of {r} exceeds the fixed lane count "
                 f"{self.batch_size}; chunk before dispatch"
+            )
+        if knobs is not None and len(knobs) != r:
+            raise ValueError(
+                f"knobs ({len(knobs)}) must align with requests ({r})"
             )
         if r == 0:
             empty = np.zeros((0,), np.float32)
@@ -305,14 +318,28 @@ class BatchedFusedServer:
             ns[i] = np.minimum(true_ns[i], cap)
             exacts[i] = p.exact_feature_values(store, req)
         active = np.arange(lanes) < r
+        # per-lane degradation knobs: traced data, never part of the cache
+        # key (pad lanes + unknobbed requests get the config defaults)
+        deltas = np.full((lanes,), delta, np.float32)
+        taus = np.full((lanes,), self.config.tau, np.float32)
+        caps = np.full((lanes,), self.config.max_iters, np.int32)
+        if knobs is not None:
+            for i, kn in enumerate(knobs):
+                if kn is None:
+                    continue
+                deltas[i] = kn.delta
+                taus[i] = kn.tau
+                caps[i] = min(int(kn.iter_cap), self.config.max_iters)
         self._caps_seen.add(cap)
         res = self._batched(
             jnp.asarray(vals),
             jnp.asarray(ns),
             jnp.broadcast_to(self._agg_ids, (lanes, p.k)),
-            jnp.full((lanes,), delta, jnp.float32),
+            jnp.asarray(deltas),
             jnp.asarray(exacts),
             jnp.asarray(active),
+            jnp.asarray(taus),
+            jnp.asarray(caps),
         )
         iters = np.asarray(res.iters)[:r]
         return BatchResult(

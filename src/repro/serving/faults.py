@@ -1,0 +1,147 @@
+"""Fault-injection harness for the serving runtime: spikes, failures, bursts.
+
+Degradation and recovery behavior must be *testable*, not assumed, so this
+module wraps ``serve_batch`` in a deterministic, seeded fault layer
+(DESIGN.md § Graceful degradation & fault injection):
+
+* **service-time spikes** — a seeded subset of ``serve_batch`` calls sleeps
+  an extra ``spike_s`` before dispatching; the runtime measures wall-clock,
+  so a spike propagates exactly like a real slow batch (queue builds on the
+  virtual clock, the controller's EWMA estimate rises, tiers loosen);
+* **transient executor exceptions** — a seeded subset of calls raises
+  :class:`TransientExecutorError` *instead of* serving; the runtime retries
+  with bounded exponential backoff (serving/runtime.py) and marks the batch
+  ``failed`` only when retries are exhausted;
+* **arrival bursts** — :func:`inject_burst` splices a compressed clump of
+  extra arrivals into a trace, the overload pattern shedding exists for.
+
+The schedule is a pure function of ``(FaultProfile, call index)`` —
+counter-based RNG per call, no global state — so two runs over the same
+trace inject identical faults and every test is reproducible.  The wrapper
+delegates everything else (``batch_size``, ``config``, ``compile_count``,
+``batch_cap``...) to the inner server, so :class:`FaultyServer` drops into
+``ServingRuntime`` anywhere a ``BatchedFusedServer`` does.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "TransientExecutorError",
+    "FaultProfile",
+    "FaultyServer",
+    "inject_burst",
+]
+
+
+class TransientExecutorError(RuntimeError):
+    """A retryable executor failure (the kind a real backend throws on a
+    preempted device, a dropped RPC, or an OOM-evicted program)."""
+
+
+@dataclass(frozen=True)
+class FaultProfile:
+    """Deterministic, seeded fault schedule over ``serve_batch`` call indices.
+
+    ``spike_calls`` / ``fail_calls`` pin faults to explicit 0-based call
+    indices (exact, for unit tests); ``spike_prob`` / ``fail_prob`` add
+    seeded Bernoulli faults on top (counter-based RNG on the call index, so
+    the schedule is reproducible and independent of call timing).  A call
+    scheduled to fail raises *before* any service work; a call scheduled to
+    spike sleeps ``spike_s`` of real wall-clock before delegating.
+    """
+
+    seed: int = 0
+    spike_s: float = 0.0
+    spike_calls: tuple[int, ...] = ()
+    spike_prob: float = 0.0
+    fail_calls: tuple[int, ...] = ()
+    fail_prob: float = 0.0
+
+    def spikes_at(self, call: int) -> bool:
+        if call in self.spike_calls:
+            return True
+        if self.spike_prob <= 0.0:
+            return False
+        rng = np.random.default_rng((self.seed, 0, call))
+        return bool(rng.random() < self.spike_prob)
+
+    def fails_at(self, call: int) -> bool:
+        if call in self.fail_calls:
+            return True
+        if self.fail_prob <= 0.0:
+            return False
+        rng = np.random.default_rng((self.seed, 1, call))
+        return bool(rng.random() < self.fail_prob)
+
+
+class FaultyServer:
+    """``serve_batch`` interceptor injecting the profile's faults.
+
+    ``calls`` counts every attempt (including ones that raise), which is the
+    index the schedule keys on; ``events`` logs ``(call, kind)`` for test
+    assertions.  All other attributes proxy to the wrapped server.
+    """
+
+    def __init__(self, server, profile: FaultProfile, *, sleep=time.sleep):
+        self._server = server
+        self.profile = profile
+        self.calls = 0
+        self.events: list[tuple[int, str]] = []
+        self._sleep = sleep  # injectable for fast tests
+
+    def __getattr__(self, name):
+        return getattr(self._server, name)
+
+    def serve_batch(self, requests, knobs=None):
+        call = self.calls
+        self.calls += 1
+        if self.profile.fails_at(call):
+            self.events.append((call, "fail"))
+            raise TransientExecutorError(
+                f"injected transient failure at serve_batch call {call}"
+            )
+        if self.profile.spikes_at(call):
+            self.events.append((call, "spike"))
+            self._sleep(self.profile.spike_s)
+        return self._server.serve_batch(requests, knobs=knobs)
+
+
+def inject_burst(
+    arrivals,
+    *,
+    at_t: float,
+    n: int,
+    width_s: float,
+    seed: int = 0,
+    slo_s: float | None = None,
+):
+    """Splice ``n`` extra arrivals uniformly into ``[at_t, at_t + width_s)``.
+
+    Requests for the burst are drawn (seeded) from the base trace's own
+    request population, so the burst stresses admission, not new cap
+    buckets.  Accepts and returns ``(t, request)`` / ``(t, request, slo_s)``
+    tuples sorted by time; ``slo_s`` attaches a deadline budget to the
+    injected arrivals (burst traffic usually carries the same SLO as the
+    rest).  Raises on an empty base trace or non-positive width.
+    """
+    base = sorted(arrivals, key=lambda a: a[0])
+    if not base:
+        raise ValueError("cannot inject a burst into an empty trace")
+    if width_s <= 0:
+        raise ValueError("width_s must be > 0")
+    if n < 0:
+        raise ValueError("n must be >= 0")
+    rng = np.random.default_rng(seed)
+    reqs = [a[1] for a in base]
+    ts = np.sort(rng.uniform(at_t, at_t + width_s, n))
+    extra = []
+    for t in ts:
+        req = reqs[int(rng.integers(len(reqs)))]
+        extra.append(
+            (float(t), req) if slo_s is None else (float(t), req, slo_s)
+        )
+    return sorted(base + extra, key=lambda a: a[0])

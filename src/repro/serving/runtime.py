@@ -19,14 +19,29 @@ missing runtime around :class:`~repro.serving.batched.BatchedFusedServer`
 * per-request **queueing delay vs execution latency** records, the numbers a
   provisioning decision actually needs.
 
+SLO-aware graceful degradation (DESIGN.md § Graceful degradation & fault
+injection) threads **deadlines** through the same loop: arrivals may carry a
+per-request SLO budget (``Arrival.slo_s``, or the runtime-wide ``slo_s``
+default), and a :class:`~repro.serving.degrade.DegradationController` maps
+each admitted request's remaining budget + the current queue depth to a
+knob tier — (delta, tau, iter_cap) are *traced* per-lane executor inputs,
+so tier changes never compile.  Requests whose deadline even the loosest
+tier cannot meet are **shed** at admission (an explicit ``shed``
+disposition instead of unbounded queueing), and transient executor
+failures (:class:`~repro.serving.faults.TransientExecutorError`) are
+retried with bounded exponential backoff on the virtual clock before a
+batch is marked ``failed``.
+
 Time model: arrivals and queueing evolve on a *virtual* clock (so a trace
 replays identically regardless of host speed), while each batch's service
 time is the real measured wall-clock of ``serve_batch`` — the runtime is a
 single-server queueing simulation whose service process is the actual
-compiled executor.
+compiled executor.  Backoff delays are virtual (added to the clock, never
+slept), so fault-recovery tests replay deterministically.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -34,6 +49,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.serving.batched import BatchedFusedServer, device_fill
+from repro.serving.degrade import DegradationController
+from repro.serving.faults import TransientExecutorError
 
 __all__ = [
     "Arrival",
@@ -46,15 +63,33 @@ __all__ = [
 
 @dataclass(frozen=True)
 class Arrival:
-    """A timestamped request: ``t`` seconds on the virtual arrival clock."""
+    """A timestamped request: ``t`` seconds on the virtual arrival clock.
+
+    ``slo_s`` is the request's latency budget (its deadline is ``t +
+    slo_s``); ``None`` defers to the runtime-wide default (which may also
+    be ``None`` — no deadline, never shed).
+    """
 
     t: float
     request: dict
+    slo_s: float | None = None
 
 
 @dataclass(frozen=True)
 class RequestRecord:
-    """Per-request accounting emitted by the runtime."""
+    """Per-request accounting emitted by the runtime.
+
+    ``disposition`` is ``"ok"`` (served), ``"shed"`` (rejected at admission
+    because no degradation tier could meet its deadline, or the queue hit
+    its bound), or ``"failed"`` (its batch exhausted transient-failure
+    retries).  Shed/failed records carry ``y_hat = nan`` and ``batch_id =
+    -1`` / the failed batch id; latency for a shed request is the time it
+    spent queued before the runtime gave up on it.  ``tier``/``tau``/
+    ``delta`` echo the degradation knobs the request was served under
+    (baseline values when no controller is installed) so the summary's
+    guarantee rate can be computed against the tau each request was
+    actually promised.
+    """
 
     req_id: int
     arrival_t: float
@@ -69,6 +104,12 @@ class RequestRecord:
     prob: float
     iters: int
     sample_frac: float
+    deadline_t: float = math.inf
+    disposition: str = "ok"
+    tier: int = 0
+    tau: float | None = None     # the confidence target it was served under
+    delta: float | None = None   # the error bound it was served under
+    deadline_met: bool = True
 
 
 class AdmissionBatcher:
@@ -101,17 +142,27 @@ class AdmissionBatcher:
 
 @dataclass
 class RuntimeStats:
-    """Everything one load run produced; ``summary()`` is the §4-style table."""
+    """Everything one load run produced; ``summary()`` is the §4-style table.
 
+    ``tau`` is the server's baseline confidence target and is REQUIRED —
+    a defaulted value here once diverged silently from the server config's,
+    and with per-lane degradation the summary must anyway prefer each
+    record's own tau (the target the request was actually served under);
+    the baseline only backfills legacy records that carry none.
+    """
+
+    tau: float
     records: list[RequestRecord] = field(default_factory=list)
     makespan_s: float = 0.0     # first arrival -> last completion (virtual)
     busy_s: float = 0.0         # total wall time spent inside serve_batch
     n_batches: int = 0
     compile_count: int = 0      # executables built DURING the run (post-warmup)
     compiled_buckets: list[int] = field(default_factory=list)
-    tau: float = 0.95           # the server's confidence target (for summary)
     n_devices: int = 1          # serving-mesh size the lanes were sharded over
     lanes: int = 0              # fixed lane count (0 = unknown/legacy)
+    n_shed: int = 0             # rejected at admission (deadline/queue bound)
+    n_failed: int = 0           # batches' requests that exhausted retries
+    n_retries: int = 0          # transient-failure retries (backoff events)
 
     def _device_fill_stats(self) -> dict:
         """Per-device fill + lane imbalance, averaged over admission batches.
@@ -122,9 +173,12 @@ class RuntimeStats:
         more than one device — a single-device run has nothing to split —
         and well-defined (zeros) on an empty record set OR when the lane
         count is unknown (``lanes == 0``: a hand-built stats object) — a
-        guessed partition would fabricate balance numbers.
+        guessed partition would fabricate balance numbers.  Shed records
+        never reached a batch (``batch_id == -1``) and are excluded.
         """
-        fills = {r.batch_id: r.batch_fill for r in self.records}
+        fills = {
+            r.batch_id: r.batch_fill for r in self.records if r.batch_id >= 0
+        }
         if not fills or not self.lanes:
             return {
                 "per_device_fill": [0.0] * self.n_devices,
@@ -145,11 +199,26 @@ class RuntimeStats:
         }
 
     def summary(self) -> dict:
-        n = len(self.records)
+        served = [r for r in self.records if r.disposition == "ok"]
+        n = len(served)
+        n_offered = len(self.records)
         device = (
             {"n_devices": self.n_devices, **self._device_fill_stats()}
             if self.n_devices > 1
             else {"n_devices": self.n_devices}
+        )
+        degrade = {
+            "n_offered": n_offered,
+            "n_shed": int(self.n_shed),
+            "n_failed": int(self.n_failed),
+            "n_retries": int(self.n_retries),
+            "shed_rate": float(self.n_shed / n_offered) if n_offered else 0.0,
+        }
+        with_deadline = [r for r in self.records if math.isfinite(r.deadline_t)]
+        degrade["deadline_met_rate"] = (
+            float(np.mean([r.deadline_met for r in with_deadline]))
+            if with_deadline
+            else float("nan")
         )
         if n == 0:
             return {
@@ -166,16 +235,25 @@ class RuntimeStats:
                 "utilization": 0.0,
                 "mean_sample_frac": float("nan"),
                 "guarantee_rate": 0.0,
+                "mean_tier": 0.0,
+                "max_tier": 0,
                 "compile_count": int(self.compile_count),
                 "compiled_buckets": list(self.compiled_buckets),
+                **degrade,
                 **device,
             }
-        lat = np.array([r.latency_s for r in self.records]) * 1e3
-        qd = np.array([r.queue_delay_s for r in self.records]) * 1e3
-        ex = np.array([r.exec_s for r in self.records]) * 1e3
-        fill = np.array([r.batch_fill for r in self.records], np.float64)
-        frac = np.array([r.sample_frac for r in self.records])
-        prob = np.array([r.prob for r in self.records])
+        lat = np.array([r.latency_s for r in served]) * 1e3
+        qd = np.array([r.queue_delay_s for r in served]) * 1e3
+        ex = np.array([r.exec_s for r in served]) * 1e3
+        fill = np.array([r.batch_fill for r in served], np.float64)
+        frac = np.array([r.sample_frac for r in served])
+        prob = np.array([r.prob for r in served])
+        # the guarantee each request was SERVED under: its own (possibly
+        # degraded) tau, falling back to the baseline for legacy records
+        taus = np.array(
+            [self.tau if r.tau is None else r.tau for r in served]
+        )
+        tiers = np.array([r.tier for r in served])
         span = max(self.makespan_s, 1e-12)
         return {
             "n": n,
@@ -191,25 +269,42 @@ class RuntimeStats:
             "utilization": float(self.busy_s / span),
             # the paper's §4 quality metrics, so the CLI table is comparable
             # across host / fused / fused-batched modes (a request also counts
-            # as satisfied when it provably exhausted its groups)
+            # as satisfied when it provably exhausted its groups); under
+            # degradation each request is judged against ITS OWN tau
             "mean_sample_frac": float(frac.mean()),
             "guarantee_rate": float(
-                np.mean((prob >= self.tau) | (frac >= 0.999))
+                np.mean((prob >= taus) | (frac >= 0.999))
             ),
+            "mean_tier": float(tiers.mean()),
+            "max_tier": int(tiers.max(initial=0)),
             "compile_count": int(self.compile_count),
             "compiled_buckets": list(self.compiled_buckets),
+            **degrade,
             **device,
         }
 
 
 class ServingRuntime:
-    """Single-server arrival loop over a :class:`BatchedFusedServer`."""
+    """Single-server arrival loop over a :class:`BatchedFusedServer`.
+
+    ``slo_s`` attaches a default latency budget to arrivals that carry none;
+    ``controller`` (a :class:`~repro.serving.degrade.DegradationController`)
+    enables deadline-driven knob scaling and load shedding.  Transient
+    executor failures are retried up to ``max_retries`` times with
+    exponential backoff (``backoff_s · 2^attempt``, virtual-clock) before
+    the batch's requests are recorded as ``failed``.
+    """
 
     def __init__(
         self,
         server: BatchedFusedServer,
         max_wait_s: float = 0.05,
         max_batch: int | None = None,
+        *,
+        slo_s: float | None = None,
+        controller: DegradationController | None = None,
+        max_retries: int = 2,
+        backoff_s: float = 0.02,
     ):
         self.server = server
         max_batch = max_batch if max_batch is not None else server.batch_size
@@ -218,7 +313,15 @@ class ServingRuntime:
                 f"max_batch {max_batch} exceeds the server's fixed lane count "
                 f"{server.batch_size}"
             )
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
         self.batcher = AdmissionBatcher(max_batch, max_wait_s)
+        self.slo_s = slo_s
+        self.controller = controller
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
 
     # ------------------------------------------------------------------
     def warmup(self, requests: list[dict] | None = None) -> list[int]:
@@ -240,15 +343,50 @@ class ServingRuntime:
         return sorted(by_cap)
 
     # ------------------------------------------------------------------
+    def _default_delta(self) -> float:
+        cfg, p = self.server.config, self.server.bundle.pipeline
+        return cfg.delta if cfg.delta is not None else p.delta_default
+
+    def _serve_with_retries(self, requests, knobs, stats, now):
+        """serve_batch under the bounded-retry/backoff policy.
+
+        Returns ``(result_or_None, new_now)``; failed attempts charge their
+        real wall-clock to ``busy_s``/the virtual clock, and each retry adds
+        an exponential virtual backoff delay (never slept — deterministic
+        replay).  ``None`` means retries were exhausted.
+        """
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                if knobs is None:
+                    res = self.server.serve_batch(requests)
+                else:
+                    res = self.server.serve_batch(requests, knobs=knobs)
+            except TransientExecutorError:
+                dt = time.perf_counter() - t0
+                now += dt
+                stats.busy_s += dt
+                if attempt >= self.max_retries:
+                    return None, now
+                now += self.backoff_s * (2.0**attempt)
+                attempt += 1
+                stats.n_retries += 1
+                continue
+            dt = time.perf_counter() - t0
+            return (res, dt), now
+
+    # ------------------------------------------------------------------
     def run(self, arrivals, warmup: bool = True) -> RuntimeStats:
         """Replay a timestamped arrival trace; returns per-request records.
 
-        ``arrivals``: iterable of :class:`Arrival` or ``(t, request)`` pairs
-        (seconds on the virtual clock; sorted internally).
+        ``arrivals``: iterable of :class:`Arrival`, ``(t, request)`` or
+        ``(t, request, slo_s)`` tuples (seconds on the virtual clock; sorted
+        internally).
         """
         arr = sorted(
             (
-                a if isinstance(a, Arrival) else Arrival(float(a[0]), a[1])
+                a if isinstance(a, Arrival) else Arrival(float(a[0]), *a[1:])
                 for a in arrivals
             ),
             key=lambda a: a.t,
@@ -265,6 +403,15 @@ class ServingRuntime:
         if not arr:
             stats.compiled_buckets = self.server.compiled_buckets
             return stats
+
+        deadlines = [
+            a.t + a.slo_s
+            if a.slo_s is not None
+            else (a.t + self.slo_s if self.slo_s is not None else math.inf)
+            for a in arr
+        ]
+        base_delta = self._default_delta()
+        ctl = self.controller
 
         records: list[RequestRecord | None] = [None] * len(arr)
         queue: deque[int] = deque()
@@ -284,17 +431,93 @@ class ServingRuntime:
                 # (both are strictly > now, so the loop always progresses)
                 now = min(arr[queue[0]].t + self.batcher.max_wait_s, arr[i].t)
                 continue
-            idxs = [
+            # ---- admission: shed infeasible requests, then fill the batch
+            idxs: list[int] = []
+            while queue and len(idxs) < self.batcher.max_size:
+                j = queue[0]
+                slack = (
+                    deadlines[j] - now
+                    if math.isfinite(deadlines[j])
+                    else None
+                )
+                if ctl is not None and ctl.should_shed(slack, len(queue)):
+                    queue.popleft()
+                    records[j] = RequestRecord(
+                        req_id=j,
+                        arrival_t=arr[j].t,
+                        admit_t=now,
+                        done_t=now,
+                        queue_delay_s=now - arr[j].t,
+                        exec_s=0.0,
+                        latency_s=now - arr[j].t,
+                        batch_id=-1,
+                        batch_fill=0,
+                        y_hat=float("nan"),
+                        prob=0.0,
+                        iters=0,
+                        sample_frac=0.0,
+                        deadline_t=deadlines[j],
+                        disposition="shed",
+                        tier=len(ctl.tiers) - 1,
+                        deadline_met=False,
+                    )
+                    stats.n_shed += 1
+                    continue
                 queue.popleft()
-                for _ in range(min(self.batcher.max_size, len(queue)))
-            ]
+                idxs.append(j)
+            if not idxs:
+                continue  # everything was shed; rerun the admission decision
+            # ---- knob assignment: remaining budget + congestion -> tier
+            knobs = None
+            if ctl is not None:
+                depth = len(queue)  # still-waiting requests behind this batch
+                knobs = []
+                for j in idxs:
+                    slack = (
+                        deadlines[j] - now
+                        if math.isfinite(deadlines[j])
+                        else None
+                    )
+                    tier = ctl.tier_for(slack, depth)
+                    knobs.append(ctl.knobs_for(tier, base_delta))
             admit_t = now
-            t0 = time.perf_counter()
-            res = self.server.serve_batch([arr[j].request for j in idxs])
-            dt = time.perf_counter() - t0
+            out, now = self._serve_with_retries(
+                [arr[j].request for j in idxs], knobs, stats, now
+            )
+            if out is None:  # retries exhausted: the whole batch failed
+                for lane, j in enumerate(idxs):
+                    kn = knobs[lane] if knobs is not None else None
+                    records[j] = RequestRecord(
+                        req_id=j,
+                        arrival_t=arr[j].t,
+                        admit_t=admit_t,
+                        done_t=now,
+                        queue_delay_s=admit_t - arr[j].t,
+                        exec_s=0.0,
+                        latency_s=now - arr[j].t,
+                        batch_id=batch_id,
+                        batch_fill=len(idxs),
+                        y_hat=float("nan"),
+                        prob=0.0,
+                        iters=0,
+                        sample_frac=0.0,
+                        deadline_t=deadlines[j],
+                        disposition="failed",
+                        tier=kn.tier if kn is not None else 0,
+                        tau=kn.tau if kn is not None else None,
+                        delta=kn.delta if kn is not None else None,
+                        deadline_met=False,
+                    )
+                    stats.n_failed += 1
+                batch_id += 1
+                if ctl is not None:
+                    ctl.observe(ctl.service_est_s, len(queue))
+                continue
+            res, dt = out
             now += dt
             stats.busy_s += dt
             for lane, j in enumerate(idxs):
+                kn = knobs[lane] if knobs is not None else None
                 records[j] = RequestRecord(
                     req_id=j,
                     arrival_t=arr[j].t,
@@ -309,8 +532,18 @@ class ServingRuntime:
                     prob=float(res.prob[lane]),
                     iters=int(res.iters[lane]),
                     sample_frac=float(res.sample_frac[lane]),
+                    deadline_t=deadlines[j],
+                    disposition="ok",
+                    tier=kn.tier if kn is not None else 0,
+                    tau=kn.tau if kn is not None else None,
+                    delta=kn.delta if kn is not None else None,
+                    deadline_met=bool(now <= deadlines[j]),
                 )
             batch_id += 1
+            if ctl is not None:
+                # post-batch feedback: EWMA the measured service time and
+                # step the hysteretic load tier from the residual queue
+                ctl.observe(dt, len(queue))
 
         stats.records = [r for r in records if r is not None]
         stats.makespan_s = now - arr[0].t

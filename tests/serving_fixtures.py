@@ -1,0 +1,49 @@
+"""Shared tiny serving bundle for degradation/fault/runtime tests.
+
+One linear-model pipeline over two AVG features, 8 groups of 120 rows (one
+128-cap bucket) plus 2 groups of 900 rows (a 1024-cap bucket) — small
+enough that a full admission batch serves in milliseconds on CPU, big
+enough that requests iterate a heterogeneous number of planner steps.
+"""
+import numpy as np
+
+from repro.core.executor import BiathlonConfig
+from repro.core.pipeline import AggFeature, Pipeline
+from repro.data.store import ColumnStore, build_table
+from repro.data.synthetic import PipelineBundle
+from repro.models.tabular import LinearRegression
+
+SMALL_CFG = BiathlonConfig(m=64, m_sobol=16)
+
+
+def make_small_bundle(seed: int = 0) -> PipelineBundle:
+    """8 groups of 120 rows + 2 groups of 900 rows, linear model."""
+    rng = np.random.default_rng(seed)
+    sizes = [120] * 8 + [900] * 2
+    gid = np.concatenate([np.full(s, g) for g, s in enumerate(sizes)])
+    mu = rng.normal(0, 5, len(sizes))
+    vals = mu[gid] + rng.normal(0, 2.0, len(gid))
+    aux = 0.5 * mu[gid] + rng.normal(0, 1.0, len(gid))
+    store = ColumnStore().add(
+        "t", build_table({"v": vals, "a": aux}, gid, seed=1)
+    )
+    X = np.stack([mu, 0.5 * mu], axis=1)
+    y = 3 * X[:, 0] + X[:, 1] + rng.normal(0, 0.01, len(sizes))
+    pipe = Pipeline(
+        name="small",
+        agg_features=[
+            AggFeature("avg_v", "t", "v", "avg", "g"),
+            AggFeature("avg_a", "t", "a", "avg", "g"),
+        ],
+        exact_features=[],
+        model=LinearRegression().fit(X, y),
+        task="regression",
+        scaler_mean=np.zeros(2, np.float32),
+        scaler_scale=np.ones(2, np.float32),
+        delta_default=0.5,
+    )
+    return PipelineBundle(
+        pipeline=pipe, store=store,
+        requests=[{"g": g} for g in range(len(sizes))],
+        labels=y, table_rows=len(gid), name="small",
+    )

@@ -1,0 +1,209 @@
+"""Fault-injection harness: seeded schedules, retry/backoff, recovery.
+
+Pins the contract of serving/faults.py plus its integration with the
+runtime's bounded-retry loop and the degradation controller's feedback
+path: faults are a pure function of ``(profile, call index)`` so every
+run replays identically; a transient failure costs one virtual backoff,
+not a lost batch; a service-time spike loosens knobs and the system
+returns to the baseline tier once the backlog clears.
+"""
+import numpy as np
+import pytest
+from serving_fixtures import SMALL_CFG, make_small_bundle
+
+from repro.serving import (
+    BatchedFusedServer,
+    DegradationController,
+    FaultProfile,
+    FaultyServer,
+    ServingRuntime,
+    TransientExecutorError,
+    default_tiers,
+    inject_burst,
+)
+
+CFG = SMALL_CFG
+
+
+@pytest.fixture(scope="module")
+def small_bundle():
+    return make_small_bundle()
+
+
+@pytest.fixture(scope="module")
+def server4(small_bundle):
+    srv = BatchedFusedServer(small_bundle, CFG, batch_size=4)
+    srv.serve_batch([{"g": 0}])  # pre-warm the 128 bucket on the INNER
+    return srv  # server so fault call indices start at 0 for real traffic
+
+
+class _StubServer:
+    """Minimal serve_batch target for unit-testing the wrapper alone."""
+
+    batch_size = 4
+
+    def __init__(self):
+        self.seen = []
+
+    def serve_batch(self, requests, knobs=None):
+        self.seen.append((tuple(r["g"] for r in requests), knobs))
+        return "result"
+
+
+# ------------------------------------------------------------- schedules
+def test_schedule_is_deterministic_and_seeded():
+    a = FaultProfile(seed=3, spike_prob=0.3, fail_prob=0.2)
+    b = FaultProfile(seed=3, spike_prob=0.3, fail_prob=0.2)
+    other = FaultProfile(seed=4, spike_prob=0.3, fail_prob=0.2)
+    spikes = [c for c in range(200) if a.spikes_at(c)]
+    fails = [c for c in range(200) if a.fails_at(c)]
+    assert spikes == [c for c in range(200) if b.spikes_at(c)]
+    assert fails == [c for c in range(200) if b.fails_at(c)]
+    assert 0 < len(spikes) < 200 and 0 < len(fails) < 200
+    assert spikes != [c for c in range(200) if other.spikes_at(c)]
+    # spike and fail streams are independent draws, not the same coin
+    assert spikes != fails
+
+
+def test_pinned_calls_override_probability():
+    p = FaultProfile(spike_calls=(2, 5), fail_calls=(1,))
+    assert [c for c in range(8) if p.spikes_at(c)] == [2, 5]
+    assert [c for c in range(8) if p.fails_at(c)] == [1]
+
+
+# ---------------------------------------------------------- wrapper unit
+def test_faulty_server_spikes_sleep_then_delegate():
+    inner = _StubServer()
+    slept = []
+    fs = FaultyServer(
+        inner,
+        FaultProfile(spike_calls=(0,), spike_s=0.25),
+        sleep=slept.append,
+    )
+    out = fs.serve_batch([{"g": 1}], knobs="KN")
+    assert out == "result"
+    assert slept == [0.25]
+    assert fs.events == [(0, "spike")]
+    assert inner.seen == [((1,), "KN")]  # knobs pass through untouched
+    fs.serve_batch([{"g": 2}])
+    assert slept == [0.25]  # only the scheduled call spiked
+    assert fs.calls == 2
+    assert fs.batch_size == 4  # attribute proxying to the inner server
+
+
+def test_faulty_server_failure_raises_before_serving():
+    inner = _StubServer()
+    fs = FaultyServer(inner, FaultProfile(fail_calls=(0,)), sleep=lambda s: None)
+    with pytest.raises(TransientExecutorError):
+        fs.serve_batch([{"g": 0}])
+    assert inner.seen == []  # the failure pre-empted the dispatch
+    assert fs.events == [(0, "fail")]
+    assert fs.calls == 1
+    fs.serve_batch([{"g": 0}])  # the next call index is clean
+    assert len(inner.seen) == 1
+
+
+def test_faultless_wrapper_is_transparent(small_bundle, server4):
+    fs = FaultyServer(server4, FaultProfile(), sleep=lambda s: None)
+    direct = server4.serve_batch([{"g": 3}])
+    wrapped = fs.serve_batch([{"g": 3}])
+    np.testing.assert_array_equal(direct.z, wrapped.z)
+    np.testing.assert_array_equal(direct.y_hat, wrapped.y_hat)
+
+
+# ------------------------------------------------------ runtime integration
+def test_transient_failure_retried_with_virtual_backoff(server4):
+    fs = FaultyServer(server4, FaultProfile(fail_calls=(0,)))
+    rt = ServingRuntime(fs, max_wait_s=0.001, max_retries=2, backoff_s=0.01)
+    arrivals = [(0.0, {"g": g}) for g in range(4)]
+    stats = rt.run(arrivals, warmup=False)
+    assert stats.n_retries == 1
+    assert stats.n_failed == 0
+    assert [r.disposition for r in stats.records] == ["ok"] * 4
+    # the failed attempt's wall-clock AND the backoff land on the clock
+    assert all(r.latency_s >= 0.01 for r in stats.records)
+    assert stats.summary()["n_retries"] == 1
+    assert fs.events == [(0, "fail")]
+
+
+def test_exhausted_retries_mark_the_batch_failed(server4):
+    fs = FaultyServer(server4, FaultProfile(fail_calls=(0, 1, 2)))
+    rt = ServingRuntime(fs, max_wait_s=0.001, max_retries=2, backoff_s=0.01)
+    stats = rt.run([(0.0, {"g": g}) for g in range(4)], warmup=False)
+    assert fs.calls == 3  # 1 attempt + 2 retries, then give up
+    assert stats.n_retries == 2
+    assert stats.n_failed == 4
+    for r in stats.records:
+        assert r.disposition == "failed"
+        assert np.isnan(r.y_hat)
+    s = stats.summary()
+    assert s["n"] == 0 and s["n_failed"] == 4 and s["n_offered"] == 4
+
+
+def test_fault_runs_replay_identically(server4):
+    """Same seed, same trace -> byte-identical event schedule and
+    disposition sequence (the harness's whole reason to exist)."""
+    prof = FaultProfile(seed=7, fail_prob=0.4)
+    arrivals = [(0.05 * k, {"g": k % 8}) for k in range(12)]
+
+    def go():
+        fs = FaultyServer(server4, prof)
+        rt = ServingRuntime(fs, max_wait_s=0.001, max_retries=1, backoff_s=0.01)
+        st = rt.run(arrivals, warmup=False)
+        return fs.events, [r.disposition for r in st.records], st.n_retries
+
+    ev1, disp1, ret1 = go()
+    ev2, disp2, ret2 = go()
+    assert ev1 == ev2 and disp1 == disp2 and ret1 == ret2
+
+
+def test_spike_degrades_then_recovers_to_baseline(server4):
+    """A service-time spike under deadline pressure loosens knobs (or
+    sheds); once the backlog clears, later requests serve at tier 0."""
+    fs = FaultyServer(server4, FaultProfile(spike_calls=(0,), spike_s=0.2))
+    ctl = DegradationController(
+        default_tiers(CFG.tau, CFG.max_iters), service_est_s=0.01, lanes=4
+    )
+    rt = ServingRuntime(fs, max_wait_s=0.001, controller=ctl)
+    # phase 1: a clump of 12 tight-deadline requests lands on the spike
+    phase1 = [(0.001 * k, {"g": k % 8}, 0.3) for k in range(12)]
+    # phase 2: widely-spaced generous-deadline requests after the storm
+    phase2 = [(10.0 + 0.5 * k, {"g": k % 8}, 10.0) for k in range(8)]
+    stats = rt.run(phase1 + phase2, warmup=False)
+    recs = sorted(stats.records, key=lambda r: r.req_id)
+    p1, p2 = recs[:12], recs[12:]
+    assert any((0, "spike") == e for e in fs.events)
+    # knob tightening: post-spike admissions ran degraded or were shed
+    assert max(r.tier for r in p1) > 0
+    # recovery: the tail of phase 2 is back at the baseline tier, served
+    for r in p2[-4:]:
+        assert r.disposition == "ok" and r.tier == 0 and r.deadline_met
+    assert ctl.load_tier == 0
+    assert stats.compile_count == 0  # degradation stayed pure data
+
+
+# ----------------------------------------------------------------- bursts
+def test_inject_burst_is_seeded_and_sorted():
+    base = [(0.0, {"g": 0}), (1.0, {"g": 1})]
+    a = inject_burst(base, at_t=0.5, n=5, width_s=0.1, seed=3)
+    b = inject_burst(base, at_t=0.5, n=5, width_s=0.1, seed=3)
+    c = inject_burst(base, at_t=0.5, n=5, width_s=0.1, seed=4)
+    assert a == b and a != c
+    assert len(a) == 7
+    assert [t for t, *_ in a] == sorted(t for t, *_ in a)
+    injected = [x for x in a if x not in base]
+    assert all(0.5 <= t < 0.6 for t, *_ in injected)
+    # burst requests are drawn from the base trace's own population
+    assert all(r in ({"g": 0}, {"g": 1}) for _, r in injected)
+
+
+def test_inject_burst_attaches_slo_and_validates():
+    base = [(0.0, {"g": 0})]
+    out = inject_burst(base, at_t=0.0, n=3, width_s=0.1, slo_s=0.25)
+    assert sum(len(x) == 3 and x[2] == 0.25 for x in out) == 3
+    with pytest.raises(ValueError, match="empty"):
+        inject_burst([], at_t=0.0, n=1, width_s=0.1)
+    with pytest.raises(ValueError, match="width"):
+        inject_burst(base, at_t=0.0, n=1, width_s=0.0)
+    with pytest.raises(ValueError, match="n must"):
+        inject_burst(base, at_t=0.0, n=-1, width_s=0.1)

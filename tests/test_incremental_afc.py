@@ -366,6 +366,8 @@ def test_batched_server_donates_values_buffer(tiny_bundle):
         jnp.zeros((lanes,), jnp.float32),
         jnp.zeros((lanes, 0), jnp.float32),
         jnp.zeros((lanes,), bool),
+        jnp.full((lanes,), 0.95, jnp.float32),   # traced tau (PR 6)
+        jnp.full((lanes,), 64, jnp.int32),       # traced iter_cap (PR 6)
     )
     compiled = srv._batched.lower(*args).compile()
     vals_bytes = lanes * k * cap * 4

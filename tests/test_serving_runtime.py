@@ -179,6 +179,35 @@ def test_admission_batcher_policy():
         AdmissionBatcher(4, -1.0)
 
 
+def test_admission_batcher_eps_absorbs_clock_roundoff():
+    """Direct regression for the ``_EPS`` livelock fix: the runtime idles to
+    ``t_oldest + max_wait_s`` and recomputes ``now - t_oldest``, which in
+    binary floating point can land just UNDER max_wait_s.  Without the
+    epsilon that state admits nothing and the virtual clock never advances.
+    """
+    t_oldest, max_wait = 0.7, 0.1
+    now = t_oldest + max_wait          # 0.7999999999999999
+    wait = now - t_oldest              # 0.09999999999999987 < 0.1 (!)
+    assert wait < max_wait, "precondition: roundoff actually bites here"
+    b = AdmissionBatcher(max_size=8, max_wait_s=max_wait)
+    assert b.ready(1, wait, more_coming=True)
+    # and the epsilon is a roundoff tolerance, not an early-admit loophole
+    assert not b.ready(1, max_wait / 2, more_coming=True)
+
+
+def test_poisson_arrivals_guards():
+    """rate <= 0 / non-finite rate / negative n fail LOUDLY; n == 0 and an
+    empty request list are well-defined empty traces."""
+    reqs = [{"g": 0}]
+    for bad_rate in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="rate_rps"):
+            poisson_arrivals(reqs, rate_rps=bad_rate, n=4)
+    with pytest.raises(ValueError, match="n must"):
+        poisson_arrivals(reqs, rate_rps=5.0, n=-1)
+    assert poisson_arrivals(reqs, rate_rps=5.0, n=0) == []
+    assert poisson_arrivals([], rate_rps=5.0, n=10) == []
+
+
 def test_poisson_arrivals_deterministic_and_sorted(small_bundle):
     reqs = small_bundle.requests[:3]
     a1 = poisson_arrivals(reqs, rate_rps=100.0, n=50, seed=7)

@@ -206,7 +206,7 @@ def test_straggler_report_empty_sharded():
 
 def test_runtime_stats_device_fields_and_empty_guard():
     # multi-device, no records: zeros, never a crash
-    s = RuntimeStats(n_devices=4, lanes=8).summary()
+    s = RuntimeStats(tau=0.95, n_devices=4, lanes=8).summary()
     assert s["n_devices"] == 4
     assert s["per_device_fill"] == [0.0] * 4
     assert s["mean_lane_imbalance"] == 0.0
@@ -217,11 +217,11 @@ def test_runtime_stats_device_fields_and_empty_guard():
         exec_s=0.01, latency_s=0.01, batch_id=0, batch_fill=6, y_hat=0.0,
         prob=1.0, iters=1, sample_frac=0.1,
     )
-    s0 = RuntimeStats(records=[rec], n_devices=4, lanes=0).summary()
+    s0 = RuntimeStats(tau=0.95, records=[rec], n_devices=4, lanes=0).summary()
     assert s0["per_device_fill"] == [0.0] * 4
     assert s0["mean_lane_imbalance"] == 0.0
     # single device: the per-device keys are omitted, not silently [1.0]
-    s1 = RuntimeStats(n_devices=1, lanes=8).summary()
+    s1 = RuntimeStats(tau=0.95, n_devices=1, lanes=8).summary()
     assert s1["n_devices"] == 1
     assert "per_device_fill" not in s1
 
