@@ -48,6 +48,9 @@ def main() -> None:
         # 3x-overload run (BENCH_serving.json["adaptive_slo"]) — wired here
         # so the tracked section can't go stale
         "perf_adaptive_slo": serving_load.run_adaptive_slo,
+        # continuous batching vs fixed lanes on one saturating trace
+        # (BENCH_serving.json["continuous_batching"])
+        "perf_continuous": serving_load.run_continuous,
         # device-scaling sweep; fork-safe (re-execs itself with fresh
         # XLA_FLAGS), so the tracked sharded_scaling section can never go
         # stale relative to the serving_load section written above

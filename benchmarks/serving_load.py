@@ -248,6 +248,120 @@ def run_adaptive_slo(pipeline: str = PIPE) -> list[str]:
 
 
 # ------------------------------------------------------------------------
+# Continuous batching: chunked lane recycling vs fixed-lane admission
+# ------------------------------------------------------------------------
+CONTINUOUS_CHUNK_ITERS = 4
+CONTINUOUS_RATE_FACTOR = 3.0  # saturating, like the sharded sweep
+# Tight enough for CAP-BOUND stragglers next to converge-at-init requests
+# (measured turbofan full-batch iters at 0.08: [0, 0, 64, 6, 2, 0, 0, 64]).
+# The sharded sweep's 0.35 is NOT that regime — there every request
+# converges at init (iters <= 5, mean_sample_frac ~ 0.06), so a fixed
+# batch never waits on a straggler and recycling has nothing to reclaim.
+CONTINUOUS_DELTA_FRAC = 0.08
+
+
+def run_continuous(pipeline: str = PIPE) -> list[str]:
+    """Fixed-lane vs continuous batching on the SAME saturating trace.
+
+    One Poisson trace at 3x the fixed-lane full-batch capacity, with a
+    tight delta so per-request iteration counts are heterogeneous, replayed
+    through (a) the PR-3 fixed-lane runtime — every admission batch held
+    open until its slowest lane converges — and (b) the chunked lane-table
+    runtime, which refills a converged lane from the queue at the next
+    chunk boundary.  Same pipeline, same batch_size (= lanes), same
+    requests: ``throughput_gain`` isolates the scheduling policy.
+
+    Tracked invariants (BENCH_serving.json["continuous_batching"]):
+    ``zero_compiles_during_measurement`` (2 executables per cap bucket,
+    all minted during warmup) and ``occupancy_gain`` — chunk-boundary lane
+    occupancy above the fixed path's ``mean_batch_fill / lanes``.
+    """
+    from repro.serving import ContinuousBatchedServer, ContinuousServingRuntime
+
+    b = bundle(pipeline)
+    cfg = BiathlonConfig(
+        **DEFAULT_CFG, delta=b.pipeline.delta_default * CONTINUOUS_DELTA_FRAC
+    )
+    # -- fixed-lane baseline on the shared trace
+    srv_f = BatchedFusedServer(b, cfg, batch_size=BATCH_SIZE)
+    rt_f = ServingRuntime(srv_f, max_wait_s=MAX_WAIT_MS / 1e3)
+    rt_f.warmup(b.requests)
+    capacity_rps = _measure_capacity(srv_f, b.requests, reps=5, best_of=True)
+    rate = CONTINUOUS_RATE_FACTOR * capacity_rps
+    arrivals = poisson_arrivals(b.requests, rate, n=N_REQUESTS, seed=321)
+    fixed_stats = rt_f.run(arrivals, warmup=False)
+    fixed = fixed_stats.summary()
+    # iteration-level lane occupancy of the fixed path: useful iterations /
+    # lane-iterations held open.  This is the number straggler waste eats,
+    # and the like-for-like twin of the continuous path's chunk-slot
+    # ``lane_occupancy`` — admission-time ``mean_batch_fill`` is NOT (at
+    # overload every fixed batch admits full, yet its lanes then idle
+    # behind the straggler; converge-at-init requests hold no loop
+    # residency on either path).
+    by_batch: dict[int, list[int]] = {}
+    for r in fixed_stats.records:
+        by_batch.setdefault(r.batch_id, []).append(r.iters)
+    held = sum(BATCH_SIZE * max(its) for its in by_batch.values())
+    fixed_iter_occ = (
+        sum(sum(its) for its in by_batch.values()) / held if held else 0.0
+    )
+
+    # -- continuous: persistent lane table, chunked dispatch, recycling
+    srv_c = ContinuousBatchedServer(
+        b, cfg, batch_size=BATCH_SIZE, chunk_iters=CONTINUOUS_CHUNK_ITERS
+    )
+    rt_c = ContinuousServingRuntime(srv_c)
+    rt_c.warmup([a[1] for a in arrivals])
+    cont = rt_c.run(arrivals, warmup=False).summary()
+
+    gain = cont["throughput_rps"] / max(fixed["throughput_rps"], 1e-9)
+    payload = {
+        "pipeline": pipeline,
+        "batch_size": BATCH_SIZE,
+        "chunk_iters": CONTINUOUS_CHUNK_ITERS,
+        "n_requests": N_REQUESTS,
+        "delta_frac": CONTINUOUS_DELTA_FRAC,
+        "rate_factor": CONTINUOUS_RATE_FACTOR,
+        "capacity_rps": capacity_rps,
+        "rate_rps": rate,
+        "config": {"m": cfg.m, "m_sobol": cfg.m_sobol, "tau": cfg.tau},
+        "fixed": fixed,
+        "continuous": cont,
+        "throughput_gain": gain,
+        "lane_occupancy": cont["lane_occupancy"],
+        "fixed_mean_fill_frac": fixed["mean_batch_fill"] / BATCH_SIZE,
+        "fixed_iter_occupancy": fixed_iter_occ,
+        "occupancy_above_fixed": bool(
+            cont["lane_occupancy"] > fixed_iter_occ
+        ),
+        "occupancy_gain": cont["lane_occupancy"] / max(fixed_iter_occ, 1e-9),
+        "zero_compiles_during_measurement": bool(
+            fixed["compile_count"] == 0 and cont["compile_count"] == 0
+        ),
+    }
+    write_bench_json("continuous_batching", payload, path=str(BENCH_SERVING_JSON))
+    return [
+        csv_row(
+            f"continuous/{pipeline}/fixed",
+            1e3 * fixed["p50_latency_ms"],
+            f"thru={fixed['throughput_rps']:.1f}rps;"
+            f"p99_ms={fixed['p99_latency_ms']:.1f};"
+            f"fill={fixed['mean_batch_fill']:.1f};"
+            f"compiles={fixed['compile_count']}",
+        ),
+        csv_row(
+            f"continuous/{pipeline}/chunk{CONTINUOUS_CHUNK_ITERS}",
+            1e3 * cont["p50_latency_ms"],
+            f"thru={cont['throughput_rps']:.1f}rps;"
+            f"p99_ms={cont['p99_latency_ms']:.1f};"
+            f"occ={cont['lane_occupancy']:.2f};"
+            f"recycles={cont['n_recycles']};gain={gain:.2f}x;"
+            f"compiles={cont['compile_count']}",
+        ),
+    ]
+
+
+# ------------------------------------------------------------------------
 # Device-scaling sweep: sharded lanes over a 1-D serving mesh
 # ------------------------------------------------------------------------
 def run_sharded(pipeline: str = PIPE) -> list[str]:
@@ -358,6 +472,8 @@ if __name__ == "__main__":
         for row in run():
             print(row)
         for row in run_adaptive_slo():
+            print(row)
+        for row in run_continuous():
             print(row)
         for row in run_sharded_subprocess():
             print(row)

@@ -27,7 +27,9 @@ The fused variant expresses the iterate-until-guaranteed loop as a
   iteration index, so shapes and keys are static inside the while_loop).
   ``afc_backend="ref"`` retains the pre-refactor full-pass rescan
   (``masked_estimates`` / ``masked_select_ranks`` per iteration) as the
-  parity oracle;
+  parity oracle; under plain "auto" (no env override) the strategy is now
+  picked **per cap bucket** — rescan at or below ``ops.AFC_REF_MAX_CAP``
+  where the precompute does not amortize, incremental above it;
 * the megabatch row sampler ports ``uncertainty.sample_features``:
   parametric features draw ``value + sigma·Φ⁻¹(u)``, holistic features draw
   the empirical inverse CDF of their replicate table at the same QMC
@@ -56,6 +58,22 @@ The fused variant expresses the iterate-until-guaranteed loop as a
   batches always pay the init Sobol block;
 * the loop condition is the Eq. 1 guarantee check.
 
+**Chunked execution** (continuous batching, DESIGN.md § Continuous
+batching): :func:`build_chunked_executor` factors the same loop into an
+``init`` (per-request precompute + z⁰ evaluation) and a ``chunk`` that runs
+at most ``chunk_iters`` planner iterations per dispatch, both over a
+first-class :class:`LaneState` pytree that carries the FULL per-lane state
+— request buffers, prefix-table handles, the planner carry (z, iteration
+counter = the counter-based bootstrap-RNG fold-in index, Sobol main-effect
+state, replicates), the traced degradation knobs, and a ``done`` flag.
+Because the state is data, a caller can swap a finished lane's state for a
+fresh request *between* chunks (iteration-level lane recycling) without
+touching the executable: the chunk program's shapes depend only on
+(cap, lanes, chunk_iters).  Both executors share one per-iteration core
+(``_executor_core``), so a chunked run with ``chunk_iters = max_iters`` is
+bitwise-identical to the monolithic while_loop — the monolithic path stays
+as the parity oracle.
+
 Cost model (EXPERIMENTS.md §Perf): one model dispatch of
 ``m + 1 + (k+2)·m_sobol`` rows per iteration, zero host round trips, and a
 loop body whose AFC work is cap-independent — one (k, 5) prefix-table
@@ -68,10 +86,13 @@ exactly the parametric-only program.  The remaining restriction vs the
 host loop is the ``cap``-row buffer bound (the guarantee's worst case
 degrades to exact-over-cap).  Batched serving vmaps this executor over
 concurrent requests with power-of-two bucketed caps, donating the values
-buffer to the compiled program (serving/batched.py).
+buffer to the compiled program (serving/batched.py); continuous serving
+vmaps the chunked executor and donates the whole lane table
+(serving/continuous.py).
 """
 from __future__ import annotations
 
+from types import SimpleNamespace
 from typing import NamedTuple, Sequence
 
 import jax
@@ -90,6 +111,7 @@ from repro.kernels.sampled_agg.ops import (
     resolve_afc_plan,
 )
 from repro.kernels.sampled_agg.prefix_stats import (
+    HolisticRankIndex,
     build_rank_index,
     prefix_moments_at,
     select_ranks_indexed,
@@ -99,10 +121,14 @@ f32 = jnp.float32
 
 __all__ = [
     "FusedResult",
+    "LaneState",
+    "build_chunked_executor",
     "build_fused_executor",
+    "empty_rank_index",
     "fused_rows_per_iteration",
     "pipeline_executor_kwargs",
     "shard_lanes_executor",
+    "shard_lanes_state_executor",
 ]
 
 
@@ -119,6 +145,76 @@ class FusedResult(NamedTuple):
     # the single-request path (returning an undonated input would force the
     # copy this field exists to avoid).
     lane_vals: jnp.ndarray | None = None
+
+
+class LaneState(NamedTuple):
+    """One lane's complete carry between chunked-executor dispatches.
+
+    A first-class pytree (vmapped over a leading ``lanes`` dimension by the
+    continuous server) holding everything a request's planner loop needs to
+    resume — so swapping a lane = overwriting its slice of every leaf, and
+    the chunk executable's shapes depend only on (cap, lanes, chunk_iters):
+
+    request inputs
+      ``vals (k, cap)``  pre-gathered, pre-permuted sample buffers
+      ``n (k,)``         group sizes clamped to cap
+      ``agg_ids (k,)``   operator ids
+      ``delta ()``       error bound (traced knob)
+      ``exact (e,)``     exactly-computed feature values
+      ``active ()``      pad-lane flag (False = never iterates)
+      ``tau ()``         confidence target (traced knob)
+      ``iter_cap ()``    planner-iteration ceiling (traced knob)
+    planner carry
+      ``z (k,)``         current plan
+      ``it ()``          iteration counter — also the counter-based
+                         bootstrap-RNG fold-in index, so replicate draws
+                         are per-request-deterministic wherever the lane
+                         lives (the recycling-parity property)
+      ``y_hat / prob ()`` last evaluation + Eq. 1 guarantee probability
+      ``idx (k,)``       Sobol main-effect indices steering the next step
+      ``reps (h, B)``    holistic bootstrap replicate table
+      ``done ()``        guarantee met / exhausted / capped — the lane is
+                         recyclable
+    incremental-AFC handles (PR 5)
+      ``ptab (k, cap, 4)``  prefix power-sum tables ((k, 0, 4) under rescan)
+      ``shift (k,)``        the tables' numerical shift
+      ``rindex``            :class:`HolisticRankIndex` (zero-size leaves
+                            when rescan or no holistic features)
+
+    The zero-size placeholders keep the pytree structure identical across
+    AFC strategies *for a given cap bucket* (the strategy is resolved from
+    the cap at trace time, so one bucket always yields one structure).
+    """
+
+    vals: jnp.ndarray
+    n: jnp.ndarray
+    agg_ids: jnp.ndarray
+    delta: jnp.ndarray
+    exact: jnp.ndarray
+    active: jnp.ndarray
+    tau: jnp.ndarray
+    iter_cap: jnp.ndarray
+    z: jnp.ndarray
+    it: jnp.ndarray
+    y_hat: jnp.ndarray
+    prob: jnp.ndarray
+    idx: jnp.ndarray
+    reps: jnp.ndarray
+    done: jnp.ndarray
+    ptab: jnp.ndarray
+    shift: jnp.ndarray
+    rindex: HolisticRankIndex
+
+
+def empty_rank_index() -> HolisticRankIndex:
+    """Zero-size :class:`HolisticRankIndex` placeholder (rescan / h == 0)."""
+    zi = jnp.zeros((0, 0), jnp.int32)
+    return HolisticRankIndex(
+        sorted_vals=jnp.zeros((0, 0), f32),
+        sorted_idx=zi,
+        blk_cnt=jnp.zeros((0, 0, 0), jnp.int32),
+        zcand=zi,
+    )
 
 
 def fused_rows_per_iteration(k: int, m: int, m_sobol: int) -> int:
@@ -174,6 +270,35 @@ def shard_lanes_executor(lane_fn, mesh, *, axis: str = "lanes", donate_vals: boo
     )
 
 
+def shard_lanes_state_executor(chunk_fn, mesh, *, axis: str = "lanes",
+                               donate_state: bool = True):
+    """Lane sharding of a chunked per-lane ``chunk(LaneState) -> LaneState``.
+
+    The pytree twin of :func:`shard_lanes_executor`: every
+    :class:`LaneState` leaf carries a leading ``lanes`` dimension, so ONE
+    ``PartitionSpec("lanes")`` applied as a pytree prefix partitions the
+    whole table and the compiled chunk program stays **collective-free** —
+    a per-device lane swap is just the host overwriting that device's
+    slice of the table between dispatches, no cross-device traffic.  The
+    table (argument 0) is donated by default so XLA updates it in place
+    across chunks instead of copying every leaf each dispatch.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    spec = PartitionSpec(axis)
+    return jax.jit(
+        shard_map(
+            jax.vmap(chunk_fn),
+            mesh=mesh,
+            in_specs=(spec,),
+            out_specs=spec,
+            check_rep=False,
+        ),
+        donate_argnums=(0,) if donate_state else (),
+    )
+
+
 def pipeline_executor_kwargs(agg_features) -> dict:
     """Per-feature executor kwargs from a pipeline's ``agg_features``.
 
@@ -201,6 +326,242 @@ def pipeline_executor_kwargs(agg_features) -> dict:
             [AGG_IDS_FULL[f.agg] for f in agg_features], jnp.int32
         ),
     )
+
+
+def _executor_core(
+    model_fn,
+    *,
+    k: int,
+    task: str,
+    n_classes: int,
+    m: int,
+    m_sobol: int,
+    alpha: float,
+    gamma: float,
+    max_iters: int,
+    afc_backend: str,
+    hol_idx,
+    n_hol: int,
+    qs,
+    approx,
+    n_boot: int,
+    base_key,
+):
+    """The per-iteration machinery BOTH executors trace through.
+
+    Everything here is a pure function of explicit arguments (no per-call
+    closures), so the monolithic while_loop and the chunked executor build
+    bitwise-identical iteration bodies — the parity contract the chunked
+    tests assert.  The AFC strategy is resolved per trace from the buffer
+    cap (``resolve_afc_plan(afc_backend, cap)``), so a cap bucket always
+    gets one consistent strategy across init/loop/chunk programs.
+    """
+    u_ami = qmc_uniforms(m, k)                       # (m, k) static
+    u_sob = qmc_uniforms(m_sobol, 2 * k, None)       # (m_sobol, 2k)
+
+    def sample_rows(value, sigma, reps, u):
+        """uncertainty.sample_features, fused-state edition (shared impl).
+
+        Parametric: x̂ + σ·Φ⁻¹(u).  Holistic: empirical inverse CDF of the
+        sorted (h, B) replicate table at the feature's own uniform column.
+        """
+        return sample_features_fused(value, sigma, reps, hol_idx, u)
+
+    def guarantee_prob(y_hat, mean, sd, delta):
+        if task == "classification":
+            return mean
+        bias = mean - y_hat
+        safe = jnp.maximum(sd, 1e-12)
+        phi = jax.scipy.stats.norm.cdf
+        prob = phi((delta - bias) / safe) - phi((-delta - bias) / safe)
+        return jnp.where(sd <= 1e-12, (jnp.abs(bias) <= delta).astype(f32), prob)
+
+    def ami_prob(y, y_hat, delta):
+        """Eq. 1 guarantee probability from the AMI output slice."""
+        if task == "regression":
+            y_bar = jnp.mean(y)
+            sd = jnp.sqrt(jnp.mean((y - y_bar) ** 2))
+            return guarantee_prob(y_hat, y_bar, sd, delta)
+        probs = (
+            jnp.bincount(y.astype(jnp.int32), length=n_classes).astype(f32) / m
+        )
+        return probs[y_hat.astype(jnp.int32)]
+
+    def sobol_from_outputs(f_all, y_hat):
+        """Main-effect indices from the pre-evaluated Saltelli block."""
+        if task == "classification":
+            f_all = (f_all.astype(jnp.int32) == y_hat.astype(jnp.int32)).astype(f32)
+        f_all = f_all - jnp.mean(f_all)  # center (see sobol_indices.py)
+        fa, fb = f_all[:m_sobol], f_all[m_sobol : 2 * m_sobol]
+        fab = f_all[2 * m_sobol :].reshape(k, m_sobol)
+        var_y = jnp.var(f_all)
+        v_j = jnp.mean(fb[None] * (fab - fa[None]), axis=1)
+        return jnp.where(
+            var_y > 1e-12, jnp.clip(v_j / jnp.maximum(var_y, 1e-12), 0, 1), 0.0
+        )
+
+    def sobol_rows(value, sigma, reps):
+        """Saltelli A/B/AB block: ((k+2)*m_sobol, k)."""
+        ua, ub = u_sob[:, :k], u_sob[:, k:]
+        xa = sample_rows(value, sigma, reps, ua)
+        xb = sample_rows(value, sigma, reps, ub)
+        eye = jnp.eye(k, dtype=bool)
+        xab = jnp.where(eye[:, None, :], xb[None], xa[None]).reshape(
+            k * m_sobol, k
+        )
+        return jnp.concatenate([xa, xb, xab], 0)
+
+    def precompute(vals, n, z0, step):
+        """Incremental-AFC precompute: every data-proportional pass runs
+        HERE, once per request, before the loop (DESIGN.md § Incremental
+        AFC).  The plan ladder min(z⁰ + i·γ, n) enumerates every z the
+        planner can reach (γ and max_iters are loop constants), which is
+        what lets the holistic membership counts be precomputed per
+        candidate plan.  Returns ``(None, None, None)`` under rescan.
+        """
+        incremental, use_kernel = resolve_afc_plan(afc_backend, cap=vals.shape[1])
+        if not incremental:
+            return None, None, None
+        shift = vals[:, 0]
+        ptab = prefix_power_sums(vals, shift, use_kernel=use_kernel)
+        rindex = None
+        if n_hol:
+            zcand = jnp.minimum(
+                z0[:, None]
+                + jnp.arange(max_iters + 1, dtype=jnp.int32)[None, :] * step,
+                n[:, None],
+            )
+            rindex = build_rank_index(vals[hol_idx], n[hol_idx], zcand[hol_idx])
+        return ptab, shift, rindex
+
+    def afc(vals, n, agg_ids, ptab, shift, rindex, z, it):
+        """(value, sigma, replicates) at plan z — strategy-routed.
+
+        Incremental: one (k, 5) gather into the prefix tables feeds the
+        unchanged estimator tail, and holistic order statistics come
+        from rank queries against the presorted column — nothing in
+        here scales with cap.  Rescan ("ref"): the pre-refactor full
+        pass per iteration.  Replicate ranks use counter-based RNG on
+        the iteration index (identical draws on both strategies) so the
+        while_loop body stays shape- and key-static and the two
+        strategies stay z-plan-parity comparable.
+        """
+        incremental, use_kernel = resolve_afc_plan(afc_backend, cap=vals.shape[1])
+        if incremental:
+            value, sigma = estimates_from_power_sums(
+                prefix_moments_at(ptab, z), z, n, agg_ids, shift
+            )
+        else:
+            value, sigma = masked_estimates(
+                vals, z, n, agg_ids, use_kernel=use_kernel
+            )
+        if not n_hol:
+            return value, sigma, jnp.zeros((0, n_boot), f32)
+        key = jax.random.fold_in(base_key, it)
+        if incremental:
+            targets = bootstrap_rank_targets(z[hol_idx], qs, key, n_boot)
+            sel = select_ranks_indexed(rindex, z[hol_idx], targets)
+            q_val, reps = finish_quantile_estimates(
+                sel, z[hol_idx], n[hol_idx]
+            )
+        else:
+            q_val, reps = masked_quantile_estimates(
+                vals[hol_idx],
+                z[hol_idx],
+                n[hol_idx],
+                qs,
+                key,
+                n_boot,
+                use_kernel=use_kernel,
+            )
+        value = value.at[hol_idx].set(q_val)
+        sigma = sigma.at[hol_idx].set(0.0)
+        return value, sigma, reps
+
+    def evaluate(vals, n, agg_ids, exact, delta, ptab, shift, rindex, z, it):
+        """AFC + AMI + Sobol via ONE model dispatch at plan z.
+
+        Rows: [AMI (m,k) | point estimate (1,k) | Saltelli A/B/AB
+        ((k+2)*m_sobol, k)] -> slice outputs for the guarantee check and
+        the main-effect indices.
+        """
+        value, sigma, reps = afc(vals, n, agg_ids, ptab, shift, rindex, z, it)
+        x_ami = sample_rows(value, sigma, reps, u_ami)
+        batch = jnp.concatenate(
+            [x_ami, value[None, :], sobol_rows(value, sigma, reps)], 0
+        )
+        y_all = model_fn(batch, exact).astype(f32)
+
+        y_hat = y_all[m]
+        prob = ami_prob(y_all[:m], y_hat, delta)
+        idx = sobol_from_outputs(y_all[m + 1 :], y_hat)
+        return y_hat, prob, idx, reps
+
+    def init_eval(vals, n, agg_ids, exact, delta, act, tau, cap_eff,
+                  z0, ptab, shift, rindex):
+        """z⁰ evaluation: AMI-only dispatch (m+1 rows), cond-gated Sobol.
+
+        The Saltelli block is only evaluated — via ``lax.cond``, so
+        immediately-guaranteed requests skip its cost entirely — when the
+        loop will actually be entered.  (Under vmap the cond becomes a
+        select and both branches run.)  Returns the initial loop carry.
+        """
+        value0, sigma0, reps0 = afc(
+            vals, n, agg_ids, ptab, shift, rindex, z0, jnp.zeros((), jnp.int32)
+        )
+        y0_all = model_fn(
+            jnp.concatenate(
+                [sample_rows(value0, sigma0, reps0, u_ami), value0[None, :]], 0
+            ),
+            exact,
+        ).astype(f32)
+        y_hat0 = y0_all[m]
+        prob0 = ami_prob(y0_all[:m], y_hat0, delta)
+        idx0 = jax.lax.cond(
+            act & (prob0 < tau) & jnp.any(z0 < n) & (cap_eff > 0),
+            lambda: sobol_from_outputs(
+                model_fn(sobol_rows(value0, sigma0, reps0), exact).astype(f32),
+                y_hat0,
+            ),
+            lambda: jnp.zeros((k,), f32),
+        )
+        return (z0, jnp.zeros((), jnp.int32), y_hat0, prob0, idx0, reps0)
+
+    def want_more(carry, act, tau, cap_eff, n):
+        """The Eq. 1 while-condition: another planner iteration needed?"""
+        z, it, _, prob, _, _ = carry
+        return act & (prob < tau) & (it < cap_eff) & jnp.any(z < n)
+
+    def step_plan(carry, vals, n, agg_ids, exact, delta, step,
+                  ptab, shift, rindex):
+        """One planner iteration: step z along the Sobol direction, evaluate."""
+        z, it, _, _, idx, _ = carry
+        d = direction(idx, z, n)
+        z = next_plan(z, d, step, n)
+        y_hat, prob, idx, reps = evaluate(
+            vals, n, agg_ids, exact, delta, ptab, shift, rindex, z, it + 1
+        )
+        return (z, it + 1, y_hat, prob, idx, reps)
+
+    return SimpleNamespace(
+        precompute=precompute,
+        init_eval=init_eval,
+        want_more=want_more,
+        step_plan=step_plan,
+    )
+
+
+def _parse_feature_spec(k, holistic, quantiles, approximate):
+    hol = tuple(int(j) for j in holistic)
+    n_hol = len(hol)
+    hol_idx = jnp.asarray(hol, jnp.int32) if n_hol else None
+    qs = jnp.asarray([0.5] * n_hol if quantiles is None else list(quantiles), f32)
+    if qs.shape[0] != n_hol:
+        raise ValueError("quantiles must align with holistic indices")
+    approx = jnp.asarray(
+        [True] * k if approximate is None else list(approximate), bool
+    )
+    return hol_idx, n_hol, qs, approx
 
 
 def build_fused_executor(
@@ -254,21 +615,23 @@ def build_fused_executor(
     ``model_fn`` is invoked exactly ONCE per planner iteration, on a
     ``(m + 1 + (k+2)*m_sobol, k)`` megabatch (see module docstring).
 
-    ``afc_backend`` selects the AFC strategy (``ops.resolve_afc_plan``):
-    "auto" and "kernel" run the **incremental** path — a once-per-request
-    precompute (``prefix_power_sums`` tables for the parametric features, a
-    ``build_rank_index`` argsort structure for the holistic columns) hoists
-    every data-proportional pass out of the while_loop, whose body then
-    reads (value, sigma) by O(1) gathers into the prefix tables and answers
-    holistic order statistics by prefix-membership rank queries — loop-body
-    cost independent of the group size.  "auto" uses the Pallas table
-    kernel on TPU and the jnp oracle elsewhere (honoring the
-    REPRO_AFC_BACKEND env at trace time); "kernel" forces the Pallas kernel
-    (interpret off-TPU); "incremental" forces the jnp table oracle
-    regardless of env (explicit strategy pinning for parity tests and CPU
-    benchmarks).  "ref" keeps the pre-refactor **rescan** oracle — a full
-    ``masked_estimates`` / ``masked_select_ranks_ref`` pass per iteration —
-    as the parity baseline (CI pins it via the env).
+    ``afc_backend`` selects the AFC strategy (``ops.resolve_afc_plan``,
+    resolved at trace time with the buffer cap): "auto" picks per cap
+    bucket — the **incremental** path (a once-per-request precompute:
+    ``prefix_power_sums`` tables for the parametric features, a
+    ``build_rank_index`` argsort structure for the holistic columns —
+    hoisting every data-proportional pass out of the while_loop, whose
+    body then reads (value, sigma) by O(1) gathers and answers holistic
+    order statistics by prefix-membership rank queries) above
+    ``ops.AFC_REF_MAX_CAP``, the rescan path at or below it, where the
+    precompute does not amortize — honoring the REPRO_AFC_BACKEND env as a
+    force-override.  "kernel" forces incremental with the Pallas table
+    kernel (interpret off-TPU); "incremental" (alias "inc") forces
+    incremental with the jnp table oracle regardless of env (explicit
+    strategy pinning for parity tests and CPU benchmarks).  "ref" keeps
+    the pre-refactor **rescan** oracle — a full ``masked_estimates`` /
+    ``masked_select_ranks_ref`` pass per iteration — as the parity
+    baseline (CI pins it via the env).
 
     Holistic support (static, per-pipeline): ``holistic`` lists the feature
     indices whose ``agg_ids`` are MEDIAN/QUANTILE, ``quantiles`` their q's
@@ -280,60 +643,20 @@ def build_fused_executor(
     """
     resolve_afc_plan(afc_backend)  # validate the string at build time
 
-    hol = tuple(int(j) for j in holistic)
-    n_hol = len(hol)
-    hol_idx = jnp.asarray(hol, jnp.int32) if n_hol else None
-    qs = jnp.asarray(
-        [0.5] * n_hol if quantiles is None else list(quantiles), f32
+    hol_idx, n_hol, qs, approx = _parse_feature_spec(
+        k, holistic, quantiles, approximate
     )
-    if qs.shape[0] != n_hol:
-        raise ValueError("quantiles must align with holistic indices")
-    approx = jnp.asarray(
-        [True] * k if approximate is None else list(approximate), bool
+    core = _executor_core(
+        model_fn, k=k, task=task, n_classes=n_classes, m=m, m_sobol=m_sobol,
+        alpha=alpha, gamma=gamma, max_iters=max_iters, afc_backend=afc_backend,
+        hol_idx=hol_idx, n_hol=n_hol, qs=qs, approx=approx,
+        n_boot=int(n_boot), base_key=jax.random.PRNGKey(boot_seed),
     )
-    n_boot = int(n_boot)
-    base_key = jax.random.PRNGKey(boot_seed)
-
-    u_ami = qmc_uniforms(m, k)                       # (m, k) static
-    u_sob = qmc_uniforms(m_sobol, 2 * k, None)       # (m_sobol, 2k)
-
-    def sample_rows(value, sigma, reps, u):
-        """uncertainty.sample_features, fused-state edition (shared impl).
-
-        Parametric: x̂ + σ·Φ⁻¹(u).  Holistic: empirical inverse CDF of the
-        sorted (h, B) replicate table at the feature's own uniform column.
-        """
-        return sample_features_fused(value, sigma, reps, hol_idx, u)
-
-    def guarantee_prob(y_hat, mean, sd, delta):
-        if task == "classification":
-            return mean
-        bias = mean - y_hat
-        safe = jnp.maximum(sd, 1e-12)
-        phi = jax.scipy.stats.norm.cdf
-        prob = phi((delta - bias) / safe) - phi((-delta - bias) / safe)
-        return jnp.where(sd <= 1e-12, (jnp.abs(bias) <= delta).astype(f32), prob)
-
-    def sobol_from_outputs(f_all, y_hat):
-        """Main-effect indices from the pre-evaluated Saltelli block."""
-        if task == "classification":
-            f_all = (f_all.astype(jnp.int32) == y_hat.astype(jnp.int32)).astype(f32)
-        f_all = f_all - jnp.mean(f_all)  # center (see sobol_indices.py)
-        fa, fb = f_all[:m_sobol], f_all[m_sobol : 2 * m_sobol]
-        fab = f_all[2 * m_sobol :].reshape(k, m_sobol)
-        var_y = jnp.var(f_all)
-        v_j = jnp.mean(fb[None] * (fab - fa[None]), axis=1)
-        return jnp.where(
-            var_y > 1e-12, jnp.clip(v_j / jnp.maximum(var_y, 1e-12), 0, 1), 0.0
-        )
-
     static_tau, static_max_iters = tau, max_iters
 
     @jax.jit
     def run(vals, n, agg_ids, delta, exact, active=None, tau=None,
             iter_cap=None) -> FusedResult:
-        # strategy resolved at trace time (mirrors the ops-level env hook)
-        incremental, use_kernel = resolve_afc_plan(afc_backend)
         act = jnp.asarray(True) if active is None else active
         # degradation knobs: traced when supplied, compile-time otherwise
         tau = static_tau if tau is None else tau
@@ -348,147 +671,17 @@ def build_fused_executor(
         # from z⁰ on — the planner then never selects them (exhausted).
         z0 = jnp.where(approx, initial_plan(n, alpha), n)
         step = gamma_abs(n, gamma)
-
-        # -- incremental-AFC precompute: every data-proportional pass runs
-        # HERE, once per request, before the while_loop (DESIGN.md
-        # § Incremental AFC).  The plan ladder min(z⁰ + i·γ, n) enumerates
-        # every z the planner can reach (γ and max_iters are loop
-        # constants), which is what lets the holistic membership counts be
-        # precomputed per candidate plan.
-        ptab = shift = rindex = None
-        if incremental:
-            shift = vals[:, 0]
-            ptab = prefix_power_sums(vals, shift, use_kernel=use_kernel)
-            if n_hol:
-                zcand = jnp.minimum(
-                    z0[:, None]
-                    + jnp.arange(max_iters + 1, dtype=jnp.int32)[None, :] * step,
-                    n[:, None],
-                )
-                rindex = build_rank_index(
-                    vals[hol_idx], n[hol_idx], zcand[hol_idx]
-                )
-
-        def ami_prob(y, y_hat):
-            """Eq. 1 guarantee probability from the AMI output slice."""
-            if task == "regression":
-                y_bar = jnp.mean(y)
-                sd = jnp.sqrt(jnp.mean((y - y_bar) ** 2))
-                return guarantee_prob(y_hat, y_bar, sd, delta)
-            probs = (
-                jnp.bincount(y.astype(jnp.int32), length=n_classes).astype(f32) / m
-            )
-            return probs[y_hat.astype(jnp.int32)]
-
-        def afc(z, it):
-            """(value, sigma, replicates) at plan z — strategy-routed.
-
-            Incremental: one (k, 5) gather into the prefix tables feeds the
-            unchanged estimator tail, and holistic order statistics come
-            from rank queries against the presorted column — nothing in
-            here scales with cap.  Rescan ("ref"): the pre-refactor full
-            pass per iteration.  Replicate ranks use counter-based RNG on
-            the iteration index (identical draws on both strategies) so the
-            while_loop body stays shape- and key-static and the two
-            strategies stay z-plan-parity comparable.
-            """
-            if incremental:
-                value, sigma = estimates_from_power_sums(
-                    prefix_moments_at(ptab, z), z, n, agg_ids, shift
-                )
-            else:
-                value, sigma = masked_estimates(
-                    vals, z, n, agg_ids, use_kernel=use_kernel
-                )
-            if not n_hol:
-                return value, sigma, jnp.zeros((0, n_boot), f32)
-            key = jax.random.fold_in(base_key, it)
-            if incremental:
-                targets = bootstrap_rank_targets(z[hol_idx], qs, key, n_boot)
-                sel = select_ranks_indexed(rindex, z[hol_idx], targets)
-                q_val, reps = finish_quantile_estimates(
-                    sel, z[hol_idx], n[hol_idx]
-                )
-            else:
-                q_val, reps = masked_quantile_estimates(
-                    vals[hol_idx],
-                    z[hol_idx],
-                    n[hol_idx],
-                    qs,
-                    key,
-                    n_boot,
-                    use_kernel=use_kernel,
-                )
-            value = value.at[hol_idx].set(q_val)
-            sigma = sigma.at[hol_idx].set(0.0)
-            return value, sigma, reps
-
-        def sobol_rows(value, sigma, reps):
-            """Saltelli A/B/AB block: ((k+2)*m_sobol, k)."""
-            ua, ub = u_sob[:, :k], u_sob[:, k:]
-            xa = sample_rows(value, sigma, reps, ua)
-            xb = sample_rows(value, sigma, reps, ub)
-            eye = jnp.eye(k, dtype=bool)
-            xab = jnp.where(eye[:, None, :], xb[None], xa[None]).reshape(
-                k * m_sobol, k
-            )
-            return jnp.concatenate([xa, xb, xab], 0)
-
-        def evaluate(z, it):
-            """AFC + AMI + Sobol via ONE model dispatch at plan z.
-
-            Rows: [AMI (m,k) | point estimate (1,k) | Saltelli A/B/AB
-            ((k+2)*m_sobol, k)] -> slice outputs for the guarantee check and
-            the main-effect indices.
-            """
-            value, sigma, reps = afc(z, it)
-            x_ami = sample_rows(value, sigma, reps, u_ami)
-            batch = jnp.concatenate(
-                [x_ami, value[None, :], sobol_rows(value, sigma, reps)], 0
-            )
-            y_all = model_fn(batch, exact).astype(f32)
-
-            y_hat = y_all[m]
-            prob = ami_prob(y_all[:m], y_hat)
-            idx = sobol_from_outputs(y_all[m + 1 :], y_hat)
-            return y_hat, prob, idx, reps
-
-        def cond(state):
-            z, it, y_hat, prob, idx, reps = state
-            return act & (prob < tau) & (it < cap_eff) & jnp.any(z < n)
-
-        def body(state):
-            z, it, _, _, idx, _ = state
-            d = direction(idx, z, n)
-            z = next_plan(z, d, step, n)
-            y_hat, prob, idx, reps = evaluate(z, it + 1)
-            return (z, it + 1, y_hat, prob, idx, reps)
-
-        # Initial plan: AMI-only dispatch (m+1 rows).  The Saltelli block is
-        # only evaluated — via lax.cond, so immediately-guaranteed requests
-        # skip its cost entirely — when the loop is actually entered.
-        # (Under vmap the cond becomes a select and both branches run.)
-        value0, sigma0, reps0 = afc(z0, jnp.zeros((), jnp.int32))
-        y0_all = model_fn(
-            jnp.concatenate(
-                [sample_rows(value0, sigma0, reps0, u_ami), value0[None, :]], 0
-            ),
-            exact,
-        ).astype(f32)
-        y_hat0 = y0_all[m]
-        prob0 = ami_prob(y0_all[:m], y_hat0)
-        idx0 = jax.lax.cond(
-            act & (prob0 < tau) & jnp.any(z0 < n) & (cap_eff > 0),
-            lambda: sobol_from_outputs(
-                model_fn(sobol_rows(value0, sigma0, reps0), exact).astype(f32),
-                y_hat0,
-            ),
-            lambda: jnp.zeros((k,), f32),
+        ptab, shift, rindex = core.precompute(vals, n, z0, step)
+        carry0 = core.init_eval(
+            vals, n, agg_ids, exact, delta, act, tau, cap_eff,
+            z0, ptab, shift, rindex,
         )
         z, iters, y_hat, prob, _, _ = jax.lax.while_loop(
-            cond,
-            body,
-            (z0, jnp.zeros((), jnp.int32), y_hat0, prob0, idx0, reps0),
+            lambda c: core.want_more(c, act, tau, cap_eff, n),
+            lambda c: core.step_plan(
+                c, vals, n, agg_ids, exact, delta, step, ptab, shift, rindex
+            ),
+            carry0,
         )
         return FusedResult(
             y_hat=y_hat,
@@ -499,3 +692,136 @@ def build_fused_executor(
         )
 
     return run
+
+
+def build_chunked_executor(
+    model_fn,
+    *,
+    chunk_iters: int,
+    k: int,
+    task: str,
+    n_classes: int = 2,
+    m: int = 512,
+    m_sobol: int = 128,
+    alpha: float = 0.05,
+    gamma: float = 0.01,
+    tau: float = 0.95,
+    max_iters: int = 32,
+    afc_backend: str = "auto",
+    holistic: Sequence[int] = (),
+    quantiles: Sequence[float] | None = None,
+    n_boot: int = 256,
+    approximate: Sequence[bool] | None = None,
+    boot_seed: int = 0,
+):
+    """Chunked twin of :func:`build_fused_executor` for continuous batching.
+
+    Returns ``(init, chunk)``, both jit-able per-lane functions over
+    :class:`LaneState` (callers vmap/shard them; serving/continuous.py):
+
+    ``init(vals, n, agg_ids, delta, exact, active, tau, iter_cap)``
+        runs the once-per-request work — buffer clamp, z⁰ seeding, the
+        incremental-AFC precompute, and the z⁰ evaluation with its
+        cond-gated Sobol block — and packs EVERYTHING into a
+        :class:`LaneState`.  All eight arguments are mandatory (they are
+        per-lane data under vmap; ``tau``/``iter_cap``/``delta`` are the
+        PR-6 traced knobs, re-assigned per admission).
+
+    ``chunk(state) -> state``
+        advances the planner at most ``chunk_iters`` iterations — the same
+        ``while_loop`` as the monolithic executor with one extra conjunct
+        ``j < chunk_iters`` on a per-dispatch trip counter.  Because the
+        planner's own predicate is evaluated first each trip, running
+        chunks back-to-back replays EXACTLY the monolithic iteration
+        sequence: with ``chunk_iters >= max_iters`` one chunk IS the
+        monolithic loop (bitwise-identical z/iters — the parity oracle
+        relation), and a done/inactive lane costs zero trips (its
+        predicate is false on entry).  ``done`` is refreshed after the
+        loop so the scheduler reads recyclability without re-deriving the
+        predicate.
+
+    The per-iteration computation is shared with the monolithic executor
+    (``_executor_core``), including the counter-based bootstrap RNG — a
+    request's trajectory depends only on its own buffers and ``it``
+    (folded from 0 per request), never on which lane or chunk boundary it
+    landed on, which is what makes recycling bitwise-reproducible against
+    a serial replay of the same trace.
+    """
+    resolve_afc_plan(afc_backend)  # validate the string at build time
+    chunk_iters = int(chunk_iters)
+    if chunk_iters < 1:
+        raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
+
+    hol_idx, n_hol, qs, approx = _parse_feature_spec(
+        k, holistic, quantiles, approximate
+    )
+    core = _executor_core(
+        model_fn, k=k, task=task, n_classes=n_classes, m=m, m_sobol=m_sobol,
+        alpha=alpha, gamma=gamma, max_iters=max_iters, afc_backend=afc_backend,
+        hol_idx=hol_idx, n_hol=n_hol, qs=qs, approx=approx,
+        n_boot=int(n_boot), base_key=jax.random.PRNGKey(boot_seed),
+    )
+    static_max_iters = max_iters
+
+    def init(vals, n, agg_ids, delta, exact, active, tau, iter_cap) -> LaneState:
+        cap = vals.shape[1]
+        n = jnp.minimum(n.astype(jnp.int32), cap)
+        act = jnp.asarray(active, bool)
+        tau = jnp.asarray(tau, f32)
+        iter_cap = jnp.asarray(iter_cap, jnp.int32)
+        delta = jnp.asarray(delta, f32)
+        cap_eff = jnp.minimum(iter_cap, static_max_iters)
+        z0 = jnp.where(approx, initial_plan(n, alpha), n)
+        step = gamma_abs(n, gamma)
+        ptab, shift, rindex = core.precompute(vals, n, z0, step)
+        carry = core.init_eval(
+            vals, n, agg_ids, exact, delta, act, tau, cap_eff,
+            z0, ptab, shift, rindex,
+        )
+        z, it, y_hat, prob, idx, reps = carry
+        return LaneState(
+            vals=vals, n=n, agg_ids=agg_ids, delta=delta, exact=exact,
+            active=act, tau=tau, iter_cap=iter_cap,
+            z=z, it=it, y_hat=y_hat, prob=prob, idx=idx, reps=reps,
+            done=~core.want_more(carry, act, tau, cap_eff, n),
+            ptab=ptab if ptab is not None else jnp.zeros((k, 0, 4), f32),
+            shift=shift if shift is not None else jnp.zeros((k,), f32),
+            rindex=rindex if rindex is not None else empty_rank_index(),
+        )
+
+    def chunk(state: LaneState) -> LaneState:
+        incremental, _ = resolve_afc_plan(afc_backend, cap=state.vals.shape[1])
+        ptab = state.ptab if incremental else None
+        shift = state.shift if incremental else None
+        rindex = state.rindex if (incremental and n_hol) else None
+        n = state.n
+        cap_eff = jnp.minimum(state.iter_cap, static_max_iters)
+        step = gamma_abs(n, gamma)
+        carry0 = (state.z, state.it, state.y_hat, state.prob,
+                  state.idx, state.reps)
+
+        def cond(carry_j):
+            carry, j = carry_j
+            return (
+                core.want_more(carry, state.active, state.tau, cap_eff, n)
+                & (j < chunk_iters)
+            )
+
+        def body(carry_j):
+            carry, j = carry_j
+            carry = core.step_plan(
+                carry, state.vals, n, state.agg_ids, state.exact,
+                state.delta, step, ptab, shift, rindex,
+            )
+            return carry, j + 1
+
+        carry, _ = jax.lax.while_loop(
+            cond, body, (carry0, jnp.zeros((), jnp.int32))
+        )
+        z, it, y_hat, prob, idx, reps = carry
+        return state._replace(
+            z=z, it=it, y_hat=y_hat, prob=prob, idx=idx, reps=reps,
+            done=~core.want_more(carry, state.active, state.tau, cap_eff, n),
+        )
+
+    return init, chunk

@@ -19,6 +19,7 @@ from repro.kernels.sampled_agg.ref import (
 from repro.kernels.sampled_agg.sampled_agg import sampled_moments
 
 __all__ = [
+    "AFC_REF_MAX_CAP",
     "moments",
     "estimates_from_moments",
     "masked_estimates",
@@ -28,6 +29,14 @@ __all__ = [
     "bootstrap_rank_targets",
     "finish_quantile_estimates",
 ]
+
+# Cap bucket at or below which the incremental prefix-table precompute does
+# not amortize: BENCH_fused.json["incremental_afc"] measures the incremental
+# path at 0.55-0.76x the rescan oracle for cap <= 1k groups (the per-request
+# table build + argsort costs more than the few full-pass rescans it saves),
+# crossing over above it.  ``resolve_afc_plan`` uses this as the "auto"
+# strategy threshold when the caller supplies its cap bucket.
+AFC_REF_MAX_CAP = 1024
 
 
 def _resolve_backend(use_kernel: bool | None) -> bool:
@@ -44,7 +53,9 @@ def _resolve_backend(use_kernel: bool | None) -> bool:
     return use_kernel
 
 
-def resolve_afc_plan(afc_backend: str) -> tuple[bool, bool | None]:
+def resolve_afc_plan(
+    afc_backend: str, cap: int | None = None
+) -> tuple[bool, bool | None]:
     """Executor AFC strategy from the ``afc_backend`` build argument.
 
     Returns ``(incremental, use_kernel)``.  ``"ref"`` selects the
@@ -52,13 +63,20 @@ def resolve_afc_plan(afc_backend: str) -> tuple[bool, bool | None]:
     per planner iteration, jnp oracles) — the parity oracle CI pins via
     ``REPRO_AFC_BACKEND=ref``.  ``"kernel"`` forces the incremental
     prefix-stats path with the Pallas table kernel (interpret off-TPU);
-    ``"incremental"`` the same path with the jnp table oracle regardless of
-    env (explicit strategy pinning for parity tests and the CPU
-    benchmarks; also accepted as a REPRO_AFC_BACKEND value — unknown env
-    values fall through to auto, matching ``_resolve_backend``).
-    ``"auto"`` consults the env at trace time like
-    ``_resolve_backend``, then defaults to incremental with kernel-on-TPU —
-    incremental is the serving default; rescan exists as the oracle.
+    ``"incremental"`` (alias ``"inc"``) the same path with the jnp table
+    oracle regardless of env (explicit strategy pinning for parity tests
+    and the CPU benchmarks; also accepted as a REPRO_AFC_BACKEND value —
+    unknown env values fall through to auto, matching
+    ``_resolve_backend``).  ``"auto"`` consults the env at trace time like
+    ``_resolve_backend``, then picks **per cap bucket**: executors resolve
+    with their (k, cap) buffer width, and buckets at or below
+    :data:`AFC_REF_MAX_CAP` take the rescan path — the prefix-table
+    precompute does not amortize on small groups (0.55–0.76× measured in
+    ``BENCH_fused.json["incremental_afc"]``) — while larger buckets run
+    incremental with kernel-on-TPU.  ``cap=None`` (strategy validation, no
+    shapes yet) keeps the incremental default.  Force-overrides — the env
+    and every non-"auto" build argument — win over the heuristic, so
+    parity legs stay pinned.
     """
     if afc_backend == "auto":
         env = os.environ.get("REPRO_AFC_BACKEND", "auto").lower()
@@ -66,14 +84,16 @@ def resolve_afc_plan(afc_backend: str) -> tuple[bool, bool | None]:
             return False, False
         if env == "kernel":
             return True, True
-        if env == "incremental":
+        if env in ("incremental", "inc"):
             return True, False
+        if cap is not None and cap <= AFC_REF_MAX_CAP:
+            return False, None
         return True, None
     if afc_backend == "ref":
         return False, False
     if afc_backend == "kernel":
         return True, True
-    if afc_backend == "incremental":
+    if afc_backend in ("incremental", "inc"):
         return True, False
     raise ValueError(f"unknown afc_backend {afc_backend!r}")
 

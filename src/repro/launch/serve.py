@@ -13,19 +13,28 @@ Modes:
                  over a 1-D device mesh (--devices N; launch/mesh.py
                  make_serving_mesh).  On CPU, simulate devices with
                  XLA_FLAGS=--xla_force_host_platform_device_count=N.
+  fused-continuous  continuous batching: a persistent lane table advanced
+                 ``--chunk-iters`` planner iterations per dispatch, with
+                 completed lanes recycled to queued requests at chunk
+                 boundaries (serving/continuous.py + the lane-table
+                 scheduler in serving/runtime.py).  Accepts --devices for
+                 a sharded table; --max-wait-ms does not apply (admission
+                 happens at every chunk boundary).
 
 Holistic (MEDIAN/QUANTILE) pipelines are served by every mode: pick the
 ``sensor_health`` pipeline (median + tail-quantile features) or pass
 ``--median`` for the appendix-D AVG→MEDIAN substitution of any Table 1
 pipeline.
 
-SLO-aware graceful degradation (fused-batched / fused-sharded only):
+SLO-aware graceful degradation (fused-batched / fused-sharded /
+fused-continuous):
 ``--slo-ms`` attaches a latency budget to every arrival, ``--degrade``
 installs the knob-tier admission controller (deadline-driven (delta, tau,
 iter_cap) scaling + load shedding; serving/degrade.py), and
 ``--fault-profile`` injects a seeded fault schedule (service-time spikes,
 transient executor failures, or an arrival burst; serving/faults.py) to
-exercise degradation and recovery.
+exercise degradation and recovery.  Fault profiles wrap ``serve_batch``
+and are therefore fixed-lane only — fused-continuous rejects them.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --pipeline trip_fare
@@ -39,6 +48,9 @@ Examples:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --pipeline turbofan --mode fused-sharded \
       --devices 4 --batch-size 8
+  PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan \
+      --mode fused-continuous --arrival-rate 80 --batch-size 8 \
+      --chunk-iters 4
 """
 from __future__ import annotations
 
@@ -67,13 +79,20 @@ def main():
     )
     ap.add_argument(
         "--mode",
-        choices=("host", "fused", "fused-batched", "fused-sharded"),
+        choices=("host", "fused", "fused-batched", "fused-sharded",
+                 "fused-continuous"),
         default="host",
     )
     ap.add_argument(
         "--devices", type=int, default=None,
-        help="serving-mesh size for fused-sharded (default: every visible "
-        "device); batch-size must be divisible by it",
+        help="serving-mesh size for fused-sharded / fused-continuous "
+        "(default: every visible device for fused-sharded, unsharded for "
+        "fused-continuous); batch-size must be divisible by it",
+    )
+    ap.add_argument(
+        "--chunk-iters", type=int, default=4,
+        help="planner iterations per chunk dispatch (fused-continuous); "
+        "lower = finer-grained lane recycling, higher = fewer dispatches",
     )
     ap.add_argument(
         "--median", action="store_true",
@@ -122,6 +141,71 @@ def main():
         m=args.m, m_sobol=max(args.m // 4, 64),
     )
     delta = cfg.delta if cfg.delta is not None else bundle.pipeline.delta_default
+
+    if args.mode == "fused-continuous":
+        import time as _time
+
+        import jax
+
+        from repro.serving import (
+            ContinuousBatchedServer,
+            ContinuousServingRuntime,
+            DegradationController,
+            default_tiers,
+        )
+
+        if args.fault_profile != "none":
+            ap.error("--fault-profile wraps serve_batch and is fixed-lane "
+                     "only; use --mode fused-batched / fused-sharded")
+        mesh = None
+        if args.devices is not None:
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(args.devices)
+        srv = ContinuousBatchedServer(
+            bundle, cfg, batch_size=args.batch_size,
+            chunk_iters=args.chunk_iters, mesh=mesh,
+        )
+        arrivals = poisson_arrivals(
+            bundle.requests, args.arrival_rate, n=args.requests,
+            seed=args.seed,
+        )
+        controller = None
+        if args.degrade:
+            # seed the controller's per-request service estimate from one
+            # measured post-warmup chunk: a request needs at most
+            # ceil(max_iters / chunk_iters) chunks to converge
+            cap = srv.trace_cap([a[1] for a in arrivals])
+            table, _ = srv.admit(
+                srv.new_table(cap), cap,
+                [(l, bundle.requests[l % len(bundle.requests)], None)
+                 for l in range(args.batch_size)],
+            )
+            table = jax.block_until_ready(srv.run_chunk(table))
+            t0 = _time.perf_counter()
+            jax.block_until_ready(srv.run_chunk(table))
+            chunk_s = _time.perf_counter() - t0
+            n_chunks_est = -(-cfg.max_iters // args.chunk_iters)
+            controller = DegradationController(
+                default_tiers(cfg.tau, cfg.max_iters),
+                service_est_s=chunk_s * n_chunks_est,
+                lanes=args.batch_size,
+                max_queue=args.max_queue,
+            )
+        runtime = ContinuousServingRuntime(
+            srv,
+            slo_s=None if args.slo_ms is None else args.slo_ms / 1e3,
+            controller=controller,
+        )
+        runtime.warmup([a[1] for a in arrivals])
+        stats = runtime.run(arrivals, warmup=False)
+        print(f"[serve] {args.pipeline} mode={args.mode} "
+              f"rate={args.arrival_rate:.1f}rps lanes={args.batch_size} "
+              f"devices={srv.n_devices} chunk_iters={args.chunk_iters} "
+              f"delta={delta:.4f} slo={args.slo_ms}ms "
+              f"degrade={args.degrade}")
+        _print_table(stats.summary())
+        return
 
     if args.mode in ("fused-batched", "fused-sharded"):
         import time as _time

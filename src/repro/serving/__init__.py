@@ -2,9 +2,13 @@ from repro.serving.server import BiathlonServer, ServerStats
 from repro.serving.batched import (
     BatchedFusedServer,
     BatchResult,
+    chunked_straggler_report,
     device_fill,
+    lane_request_inputs,
     straggler_report,
+    validate_serving_mesh,
 )
+from repro.serving.continuous import ContinuousBatchedServer
 from repro.serving.degrade import (
     DegradationController,
     KnobTier,
@@ -21,6 +25,7 @@ from repro.serving.faults import (
 from repro.serving.runtime import (
     AdmissionBatcher,
     Arrival,
+    ContinuousServingRuntime,
     RequestRecord,
     RuntimeStats,
     ServingRuntime,
@@ -31,8 +36,13 @@ __all__ = [
     "ServerStats",
     "BatchedFusedServer",
     "BatchResult",
+    "ContinuousBatchedServer",
+    "ContinuousServingRuntime",
+    "chunked_straggler_report",
     "device_fill",
+    "lane_request_inputs",
     "straggler_report",
+    "validate_serving_mesh",
     "DegradationController",
     "KnobTier",
     "LaneKnobs",

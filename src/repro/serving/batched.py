@@ -47,9 +47,62 @@ from repro.data.store import bucket_size
 __all__ = [
     "BatchedFusedServer",
     "BatchResult",
+    "chunked_straggler_report",
     "device_fill",
+    "lane_request_inputs",
     "straggler_report",
+    "validate_serving_mesh",
 ]
+
+
+def validate_serving_mesh(mesh, lanes: int) -> int:
+    """Validate a serving mesh against a fixed lane count; returns its size.
+
+    Shared by the fixed-lane and continuous servers: the mesh must be 1-D,
+    named ``lanes`` (shard_map partitions on the literal axis name — a
+    differently-named mesh would only fail deep inside tracing at the first
+    dispatch), and must divide the lane count evenly.  ``None`` means
+    unsharded (returns 1).
+    """
+    if mesh is None:
+        return 1
+    if mesh.devices.ndim != 1:
+        raise ValueError(
+            f"serving mesh must be 1-D over 'lanes', got shape "
+            f"{mesh.devices.shape}"
+        )
+    names = tuple(getattr(mesh, "axis_names", ()))
+    if names and names != ("lanes",):
+        raise ValueError(
+            f"serving mesh axis must be named 'lanes', got {names}; "
+            "build it with launch.mesh.make_serving_mesh"
+        )
+    n_devices = int(mesh.devices.size)
+    if lanes % n_devices != 0:
+        raise ValueError(
+            f"batch_size {lanes} must be divisible by the mesh's "
+            f"{n_devices} devices"
+        )
+    return n_devices
+
+
+def lane_request_inputs(pipeline, store, req: dict, cap: int):
+    """One request's lane inputs at a cap bucket.
+
+    Returns ``(vals (k, cap) f32, n (k,) i32 clamped, true_n (k,) i64,
+    exact (e,) f32)`` — the per-lane buffer assembly shared by the
+    fixed-lane batch path and the continuous refill path, so both feed the
+    executor identical data (a precondition of the recycling-parity
+    contract).
+    """
+    v, _ = store.request_buffers(pipeline.agg_specs(req), cap)
+    true_n = np.asarray(pipeline.group_sizes(store, req), np.int64)
+    return (
+        np.asarray(v, np.float32),
+        np.minimum(true_n, cap).astype(np.int32),
+        true_n,
+        np.asarray(pipeline.exact_feature_values(store, req), np.float32),
+    )
 
 
 class BatchResult(NamedTuple):
@@ -143,6 +196,75 @@ def straggler_report(res: BatchResult) -> dict:
     }
 
 
+def chunked_straggler_report(
+    chunk_iters, occupied, *, lanes: int, n_devices: int = 1
+) -> dict:
+    """Chunk-granularity waste accounting for recycled lanes.
+
+    With continuous batching a lane serves many requests per batch window
+    and fills are NOT front-packed (a freed lane is refilled in place), so
+    :func:`straggler_report`'s batch-global and :func:`device_fill`'s
+    front-packed assumptions both break.  This report charges waste per
+    **chunk** against each device block's chunk-boundary maximum: inputs
+    are the (n_chunks, lanes) matrices of per-chunk planner-iteration
+    counts and lane occupancy the scheduler records at every chunk
+    boundary.
+
+    ``wasted_iters[l]`` counts the loop trips lane ``l`` sat through beyond
+    its own work while some co-resident lane on its device was still
+    iterating — summed over chunks, so a lane recycled mid-window is only
+    ever charged against the stragglers it ACTUALLY shared a dispatch with
+    (the fixed-lane report would charge the whole batch window).
+    ``per_device_fill`` / ``lane_imbalance`` are occupancy-true: mean
+    occupied-lane fraction per device block over chunks, well-defined for
+    any refill pattern and empty-safe (zero chunks -> zeros).
+    """
+    lanes = int(lanes)
+    n_dev = max(int(n_devices), 1)
+    if lanes % n_dev != 0:
+        raise ValueError(f"lanes {lanes} not divisible by n_devices {n_dev}")
+    per_dev = lanes // n_dev
+    it = np.asarray(chunk_iters, np.int64).reshape(-1, lanes)
+    occ = np.asarray(occupied, bool).reshape(-1, lanes)
+    if it.shape != occ.shape:
+        raise ValueError(
+            f"chunk_iters {it.shape} and occupied {occ.shape} must align"
+        )
+    n_chunks = it.shape[0]
+    if n_chunks == 0:
+        return {
+            "n_chunks": 0,
+            "lanes": lanes,
+            "n_devices": n_dev,
+            "lane_occupancy": 0.0,
+            "per_device_fill": [0.0] * n_dev,
+            "lane_imbalance": 0.0,
+            "wasted_iters": np.zeros(lanes, np.int64),
+            "wasted_frac": 0.0,
+            "total_iters": 0,
+        }
+    it = np.where(occ, it, 0)
+    blk = it.reshape(n_chunks, n_dev, per_dev)
+    occ_blk = occ.reshape(n_chunks, n_dev, per_dev)
+    # each dispatch, a lane waits for its OWN device block's straggler —
+    # the chunk-boundary device-block max, not the batch-window global max
+    blk_max = blk.max(axis=2)                                   # (C, D)
+    wasted = np.where(occ_blk, blk_max[:, :, None] - blk, 0)    # (C, D, L/D)
+    charged = np.where(occ_blk, blk_max[:, :, None], 0)
+    occ_frac = occ_blk.mean(axis=2)                             # (C, D)
+    return {
+        "n_chunks": int(n_chunks),
+        "lanes": lanes,
+        "n_devices": n_dev,
+        "lane_occupancy": float(occ.mean()),
+        "per_device_fill": [float(x) for x in occ_frac.mean(axis=0)],
+        "lane_imbalance": float((occ_frac.max(1) - occ_frac.min(1)).mean()),
+        "wasted_iters": wasted.reshape(n_chunks, lanes).sum(axis=0),
+        "wasted_frac": float(wasted.sum()) / max(int(charged.sum()), 1),
+        "total_iters": int(it.sum()),
+    }
+
+
 class BatchedFusedServer:
     """vmapped FusedExecutor over fixed-lane admission batches of requests.
 
@@ -182,27 +304,7 @@ class BatchedFusedServer:
         self.config = config
         self.batch_size = batch_size
         self.mesh = mesh
-        self.n_devices = int(mesh.devices.size) if mesh is not None else 1
-        if mesh is not None:
-            if mesh.devices.ndim != 1:
-                raise ValueError(
-                    f"serving mesh must be 1-D over 'lanes', got shape "
-                    f"{mesh.devices.shape}"
-                )
-            # shard_lanes_executor partitions on the literal "lanes" axis; a
-            # differently-named mesh would only fail deep inside shard_map
-            # tracing at the first serve_batch — reject it here instead
-            names = tuple(getattr(mesh, "axis_names", ()))
-            if names and names != ("lanes",):
-                raise ValueError(
-                    f"serving mesh axis must be named 'lanes', got {names}; "
-                    "build it with launch.mesh.make_serving_mesh"
-                )
-            if batch_size % self.n_devices != 0:
-                raise ValueError(
-                    f"batch_size {batch_size} must be divisible by the mesh's "
-                    f"{self.n_devices} devices"
-                )
+        self.n_devices = validate_serving_mesh(mesh, batch_size)
         p = bundle.pipeline
         feat_kwargs = pipeline_executor_kwargs(p.agg_features)
         self._agg_ids = feat_kwargs.pop("agg_ids")
@@ -312,11 +414,9 @@ class BatchedFusedServer:
         true_ns = np.zeros((r, p.k), np.int64)
         exacts = np.zeros((lanes, len(p.exact_features)), np.float32)
         for i, req in enumerate(requests):
-            v, _ = store.request_buffers(p.agg_specs(req), cap)
-            vals[i] = np.asarray(v)
-            true_ns[i] = p.group_sizes(store, req)
-            ns[i] = np.minimum(true_ns[i], cap)
-            exacts[i] = p.exact_feature_values(store, req)
+            vals[i], ns[i], true_ns[i], exacts[i] = lane_request_inputs(
+                p, store, req, cap
+            )
         active = np.arange(lanes) < r
         # per-lane degradation knobs: traced data, never part of the cache
         # key (pad lanes + unknobbed requests get the config defaults)

@@ -48,7 +48,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.serving.batched import BatchedFusedServer, device_fill
+from repro.serving.batched import (
+    BatchedFusedServer,
+    chunked_straggler_report,
+    device_fill,
+)
+from repro.serving.continuous import ContinuousBatchedServer
 from repro.serving.degrade import DegradationController
 from repro.serving.faults import TransientExecutorError
 
@@ -58,6 +63,7 @@ __all__ = [
     "AdmissionBatcher",
     "RuntimeStats",
     "ServingRuntime",
+    "ContinuousServingRuntime",
 ]
 
 
@@ -89,6 +95,17 @@ class RequestRecord:
     (baseline values when no controller is installed) so the summary's
     guarantee rate can be computed against the tau each request was
     actually promised.
+
+    Continuous batching (:class:`ContinuousServingRuntime`) reinterprets
+    the batch-granularity fields at chunk granularity: ``admit_t`` is the
+    time the request entered a LANE (queue-delay = time-to-first-lane),
+    ``exec_s`` the lane-resident wall time (the request spans multiple
+    chunk dispatches), ``batch_id`` the admission-event index and
+    ``batch_fill`` the occupied-lane count right after it.  ``lane`` /
+    ``n_chunks`` record where it ran and how many chunk dispatches it
+    spanned (fixed-lane records keep the ``-1`` / ``0`` defaults), and
+    ``z`` the final per-feature plan — the recycling-parity tests compare
+    it bitwise against a serial replay.
     """
 
     req_id: int
@@ -110,6 +127,9 @@ class RequestRecord:
     tau: float | None = None     # the confidence target it was served under
     delta: float | None = None   # the error bound it was served under
     deadline_met: bool = True
+    lane: int = -1               # lane it ran in (continuous; -1 = fixed-lane)
+    n_chunks: int = 0            # chunk dispatches it spanned (continuous)
+    z: tuple | None = None       # final per-feature plan (continuous)
 
 
 class AdmissionBatcher:
@@ -163,6 +183,10 @@ class RuntimeStats:
     n_shed: int = 0             # rejected at admission (deadline/queue bound)
     n_failed: int = 0           # batches' requests that exhausted retries
     n_retries: int = 0          # transient-failure retries (backoff events)
+    n_chunks: int = 0           # chunk dispatches (continuous; 0 = fixed-lane)
+    n_recycles: int = 0         # admissions into a previously-used lane
+    lane_occupancy: float = 0.0  # mean occupied-lane fraction over chunks
+    chunk_stats: dict = field(default_factory=dict)  # chunked_straggler_report
 
     def _device_fill_stats(self) -> dict:
         """Per-device fill + lane imbalance, averaged over admission batches.
@@ -175,7 +199,22 @@ class RuntimeStats:
         count is unknown (``lanes == 0``: a hand-built stats object) — a
         guessed partition would fabricate balance numbers.  Shed records
         never reached a batch (``batch_id == -1``) and are excluded.
+
+        Continuous runs override the front-packed guess entirely: recycled
+        lanes are refilled IN PLACE (any occupancy pattern), so the numbers
+        come from the occupancy matrix (``chunked_straggler_report``) — the
+        well-defined accounting when a lane serves many requests per
+        window.
         """
+        if self.chunk_stats:
+            return {
+                "per_device_fill": [
+                    float(x) for x in self.chunk_stats["per_device_fill"]
+                ],
+                "mean_lane_imbalance": float(
+                    self.chunk_stats["lane_imbalance"]
+                ),
+            }
         fills = {
             r.batch_id: r.batch_fill for r in self.records if r.batch_id >= 0
         }
@@ -220,6 +259,18 @@ class RuntimeStats:
             if with_deadline
             else float("nan")
         )
+        continuous = (
+            {
+                "n_chunks": int(self.n_chunks),
+                "n_recycles": int(self.n_recycles),
+                "lane_occupancy": float(self.lane_occupancy),
+                "chunk_wasted_frac": float(
+                    self.chunk_stats.get("wasted_frac", 0.0)
+                ),
+            }
+            if self.chunk_stats  # set by every continuous run, even 0-chunk
+            else {}
+        )
         if n == 0:
             return {
                 "n": 0,
@@ -240,6 +291,7 @@ class RuntimeStats:
                 "compile_count": int(self.compile_count),
                 "compiled_buckets": list(self.compiled_buckets),
                 **degrade,
+                **continuous,
                 **device,
             }
         lat = np.array([r.latency_s for r in served]) * 1e3
@@ -280,6 +332,7 @@ class RuntimeStats:
             "compile_count": int(self.compile_count),
             "compiled_buckets": list(self.compiled_buckets),
             **degrade,
+            **continuous,
             **device,
         }
 
@@ -548,6 +601,283 @@ class ServingRuntime:
         stats.records = [r for r in records if r is not None]
         stats.makespan_s = now - arr[0].t
         stats.n_batches = batch_id
+        stats.compile_count = self.server.compile_count - compiles_before
+        stats.compiled_buckets = self.server.compiled_buckets
+        return stats
+
+
+class ContinuousServingRuntime:
+    """Chunk-granularity lane-table scheduler (continuous batching).
+
+    Drives a :class:`~repro.serving.continuous.ContinuousBatchedServer`:
+    instead of admitting a batch and holding every lane until the slowest
+    request exits, the runtime dispatches the chunked executor —
+    ``chunk_iters`` planner iterations at a time — and at every chunk
+    boundary refills lanes whose requests converged with the next requests
+    from the queue (iteration-level lane recycling).  There is no max-wait
+    admission batcher: a request waits exactly until a lane frees up
+    (queue-delay = time-to-first-lane).
+
+    Accounting is per chunk, not per batch: each request's
+    :class:`RequestRecord` spans the chunks it was lane-resident for
+    (``exec_s`` = lane-resident wall time, ``n_chunks``/``lane`` recorded),
+    ``RuntimeStats`` gains ``n_chunks`` / ``n_recycles`` /
+    ``lane_occupancy``, and straggler waste is charged per chunk against
+    the chunk-boundary device-block maxima
+    (``batched.chunked_straggler_report`` over the recorded occupancy and
+    per-chunk-iteration matrices).
+
+    SLO-aware degradation (PR 6) composes at the RIGHT time scale:
+    shed/tier decisions are re-evaluated when a request is admitted INTO A
+    LANE — with its remaining deadline slack and the queue depth at that
+    boundary — not when it joined the queue; the knobs ride the refill
+    dispatch as traced per-lane inputs, so tier changes never compile.
+    The controller's ``observe`` feedback runs per chunk (service estimate
+    = EWMA of chunk wall time).
+
+    Time model matches :class:`ServingRuntime`: virtual arrival clock,
+    measured wall-clock for every refill and chunk dispatch.
+    """
+
+    def __init__(
+        self,
+        server: ContinuousBatchedServer,
+        *,
+        slo_s: float | None = None,
+        controller: DegradationController | None = None,
+    ):
+        self.server = server
+        self.slo_s = slo_s
+        self.controller = controller
+
+    # ------------------------------------------------------------------
+    def warmup(self, requests: list[dict] | None = None) -> list[int]:
+        """Compile the refill + chunk executables for the trace's cap.
+
+        A continuous run serves its whole trace from ONE table at the
+        trace-wide max cap bucket, so warming that single bucket (one
+        refill + one chunk on a throwaway table) covers the run.  Returns
+        the warmed bucket.
+        """
+        import jax
+
+        reqs = requests if requests is not None else self.server.bundle.requests
+        cap = self.server.trace_cap(reqs)
+        if cap in self.server.compiled_buckets:
+            return [cap]
+        table = self.server.new_table(cap)
+        table, _ = self.server.admit(table, cap, [(0, reqs[0], None)])
+        jax.block_until_ready(self.server.run_chunk(table))
+        return [cap]
+
+    def _default_delta(self) -> float:
+        cfg, p = self.server.config, self.server.bundle.pipeline
+        return cfg.delta if cfg.delta is not None else p.delta_default
+
+    # ------------------------------------------------------------------
+    def run(self, arrivals, warmup: bool = True) -> RuntimeStats:
+        """Replay a timestamped arrival trace through the lane table."""
+        import jax
+
+        arr = sorted(
+            (
+                a if isinstance(a, Arrival) else Arrival(float(a[0]), *a[1:])
+                for a in arrivals
+            ),
+            key=lambda a: a.t,
+        )
+        stats = RuntimeStats(
+            tau=self.server.config.tau,
+            n_devices=self.server.n_devices,
+            lanes=self.server.batch_size,
+        )
+        if not arr:
+            stats.compiled_buckets = self.server.compiled_buckets
+            return stats
+        if warmup:
+            self.warmup([a.request for a in arr])
+        compiles_before = self.server.compile_count
+
+        deadlines = [
+            a.t + a.slo_s
+            if a.slo_s is not None
+            else (a.t + self.slo_s if self.slo_s is not None else math.inf)
+            for a in arr
+        ]
+        base_delta = self._default_delta()
+        ctl = self.controller
+        lanes = self.server.batch_size
+        cap = self.server.trace_cap([a.request for a in arr])
+        table = self.server.new_table(cap)
+
+        records: list[RequestRecord | None] = [None] * len(arr)
+        queue: deque[int] = deque()
+        # lane bookkeeping is HOST state: the device table never learns
+        # which request a lane holds, only its buffers and carry
+        occupied: list[int | None] = [None] * lanes
+        admit_ts = [0.0] * lanes
+        admit_ids = [0] * lanes      # admission-event index -> batch_id
+        admit_fill = [0] * lanes     # occupied lanes right after admission
+        knobs_by_lane = [None] * lanes
+        chunks_by_lane = [0] * lanes
+        true_rows = [1] * lanes
+        lane_used = [False] * lanes
+        prev_it = np.zeros(lanes, np.int64)
+        occ_rows: list[np.ndarray] = []
+        iter_rows: list[np.ndarray] = []
+        admissions = 0
+        n_chunks = 0
+        now = arr[0].t
+        i = 0
+
+        def finalize(lane: int, out: dict, t_done: float) -> None:
+            j = occupied[lane]
+            kn = knobs_by_lane[lane]
+            z = np.asarray(out["z"][lane])
+            records[j] = RequestRecord(
+                req_id=j,
+                arrival_t=arr[j].t,
+                admit_t=admit_ts[lane],
+                done_t=t_done,
+                queue_delay_s=admit_ts[lane] - arr[j].t,
+                exec_s=t_done - admit_ts[lane],
+                latency_s=t_done - arr[j].t,
+                batch_id=admit_ids[lane],
+                batch_fill=admit_fill[lane],
+                y_hat=float(out["y_hat"][lane]),
+                prob=float(out["prob"][lane]),
+                iters=int(out["it"][lane]),
+                sample_frac=float(
+                    np.minimum(z, np.asarray(out["n"][lane])).sum()
+                )
+                / max(true_rows[lane], 1),
+                deadline_t=deadlines[j],
+                disposition="ok",
+                tier=kn.tier if kn is not None else 0,
+                tau=kn.tau if kn is not None else None,
+                delta=kn.delta if kn is not None else None,
+                deadline_met=bool(t_done <= deadlines[j]),
+                lane=lane,
+                n_chunks=chunks_by_lane[lane],
+                z=tuple(int(x) for x in z),
+            )
+            occupied[lane] = None
+            knobs_by_lane[lane] = None
+
+        while i < len(arr) or queue or any(l is not None for l in occupied):
+            if not queue and all(l is None for l in occupied):
+                if i >= len(arr):
+                    break
+                now = max(now, arr[i].t)  # idle: jump to the next arrival
+            while i < len(arr) and arr[i].t <= now:
+                queue.append(i)
+                i += 1
+            # ---- chunk-boundary admission into free lanes: shed/tier
+            # decisions are made HERE, with the slack and queue depth of
+            # the moment the request actually gets a lane
+            free = [l for l in range(lanes) if occupied[l] is None]
+            assignments = []
+            while queue and free:
+                j = queue.popleft()
+                slack = (
+                    deadlines[j] - now
+                    if math.isfinite(deadlines[j])
+                    else None
+                )
+                if ctl is not None and ctl.should_shed(slack, len(queue) + 1):
+                    records[j] = RequestRecord(
+                        req_id=j,
+                        arrival_t=arr[j].t,
+                        admit_t=now,
+                        done_t=now,
+                        queue_delay_s=now - arr[j].t,
+                        exec_s=0.0,
+                        latency_s=now - arr[j].t,
+                        batch_id=-1,
+                        batch_fill=0,
+                        y_hat=float("nan"),
+                        prob=0.0,
+                        iters=0,
+                        sample_frac=0.0,
+                        deadline_t=deadlines[j],
+                        disposition="shed",
+                        tier=len(ctl.tiers) - 1,
+                        deadline_met=False,
+                    )
+                    stats.n_shed += 1
+                    continue
+                lane = free.pop(0)
+                kn = None
+                if ctl is not None:
+                    kn = ctl.knobs_for(
+                        ctl.tier_for(slack, len(queue)), base_delta
+                    )
+                assignments.append((lane, arr[j].request, kn))
+                occupied[lane] = j
+                admit_ts[lane] = now
+                admit_ids[lane] = admissions
+                chunks_by_lane[lane] = 0
+                knobs_by_lane[lane] = kn
+                prev_it[lane] = 0
+                if lane_used[lane]:
+                    stats.n_recycles += 1
+                lane_used[lane] = True
+            if assignments:
+                admissions += 1
+                t0 = time.perf_counter()
+                table, tr = self.server.admit(table, cap, assignments)
+                jax.block_until_ready(table)
+                dt = time.perf_counter() - t0
+                now += dt
+                stats.busy_s += dt
+                fill = sum(l is not None for l in occupied)
+                for lane, rows in tr.items():
+                    true_rows[lane] = rows
+                    admit_fill[lane] = fill
+                # a fresh lane can be done straight from z⁰ (guarantee met
+                # at the initial plan) — recycle it before paying a chunk
+                out = self.server.readback(table)
+                for lane, _, _ in assignments:
+                    if out["done"][lane]:
+                        finalize(lane, out, now)
+            if all(l is None for l in occupied):
+                continue  # everything shed or instantly done; re-admit
+            # ---- one chunk dispatch
+            t0 = time.perf_counter()
+            table = self.server.run_chunk(table)
+            jax.block_until_ready(table)
+            dt = time.perf_counter() - t0
+            now += dt
+            stats.busy_s += dt
+            n_chunks += 1
+            out = self.server.readback(table)
+            occ = np.array([l is not None for l in occupied])
+            occ_rows.append(occ)
+            iter_rows.append(np.where(occ, out["it"] - prev_it, 0))
+            prev_it = out["it"].copy()
+            for lane in range(lanes):
+                if occupied[lane] is None:
+                    continue
+                chunks_by_lane[lane] += 1
+                if out["done"][lane]:
+                    finalize(lane, out, now)
+            if ctl is not None:
+                ctl.observe(dt, len(queue))
+
+        stats.records = [r for r in records if r is not None]
+        stats.makespan_s = now - arr[0].t
+        stats.n_batches = admissions
+        stats.n_chunks = n_chunks
+        occ_m = (
+            np.stack(occ_rows) if occ_rows else np.zeros((0, lanes), bool)
+        )
+        it_m = (
+            np.stack(iter_rows) if iter_rows else np.zeros((0, lanes), np.int64)
+        )
+        stats.chunk_stats = chunked_straggler_report(
+            it_m, occ_m, lanes=lanes, n_devices=self.server.n_devices
+        )
+        stats.lane_occupancy = stats.chunk_stats["lane_occupancy"]
         stats.compile_count = self.server.compile_count - compiles_before
         stats.compiled_buckets = self.server.compiled_buckets
         return stats

@@ -1,0 +1,352 @@
+"""Continuous batching: chunked executor + lane recycling — the PR-7 contract.
+
+Covers, in order:
+
+* chunked-vs-monolithic executor parity: with ``chunk_iters >= max_iters``
+  one chunk IS the monolithic while_loop (bitwise z-plans and iteration
+  counts), and small chunks dispatched back-to-back replay the same
+  sequence — on a synthetic parametric executor AND on real parametric
+  (turbofan) / holistic (sensor_health) pipelines through the servers;
+* recycling-vs-serial-replay parity: a saturating trace through the
+  lane-table scheduler, with lanes recycled mid-trace, yields per-request
+  z/iters/predictions identical to serving each request alone — the
+  counter-based bootstrap RNG makes trajectories lane-placement-free;
+* the continuous compile contract: exactly TWO executables (refill +
+  chunk) per power-of-two cap bucket, across fills, admission patterns and
+  repeat runs;
+* ``chunked_straggler_report``: empty-safe, device-block waste accounting,
+  occupancy-true per-device fill with recycled (partially occupied) lanes;
+* mesh parity: the shard_map lane table matches the unsharded one.
+
+CI runs this file under both ``REPRO_AFC_BACKEND`` legs with 8 forced host
+devices (the ``continuous`` job), so the multi-device parity test is cheap
+there; locally it skips when only one device is visible.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import BiathlonConfig
+from repro.core.executor_fused import (
+    LaneState,
+    build_chunked_executor,
+    build_fused_executor,
+)
+from repro.data.synthetic import make_pipeline
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import (
+    BatchedFusedServer,
+    ContinuousBatchedServer,
+    ContinuousServingRuntime,
+    ServingRuntime,
+    chunked_straggler_report,
+)
+
+from serving_fixtures import SMALL_CFG, make_small_bundle
+
+CFG = BiathlonConfig(m=64, m_sobol=16, n_bootstrap=32)
+SMALL = dict(rows_per_group=300, n_train_groups=30, n_serve_groups=4, n_requests=6)
+
+
+# ------------------------------------------- executor-level chunk parity
+def _lane_inputs(k, cap, seed):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(2.0, 3.0, (k, cap)).astype(np.float32))
+    n = jnp.asarray(rng.integers(cap // 2, cap + 1, k), jnp.int32)
+    return vals, n
+
+
+def _drain(chunk, state, max_dispatches=64):
+    """Dispatch chunks until the lane reports done; count dispatches."""
+    d = 0
+    while not bool(state.done):
+        state = chunk(state)
+        d += 1
+        assert d <= max_dispatches, "chunked executor failed to converge"
+    return state, d
+
+
+@pytest.mark.parametrize("chunk_iters", [1, 2, 16])
+def test_chunked_matches_monolithic_synthetic(chunk_iters):
+    """Bitwise z/iters parity between the monolithic while_loop and the
+    chunked executor, at chunk_iters below / at the max_iters bound."""
+    k, cap, max_iters = 3, 256, 16
+    w = jnp.asarray([1.0, -2.0, 0.5])
+    kwargs = dict(
+        k=k, task="regression", m=32, m_sobol=8, max_iters=max_iters,
+        gamma=0.02, n_boot=16,
+    )
+    mono = build_fused_executor(lambda rows, exact: rows @ w, **kwargs)
+    init, chunk = build_chunked_executor(
+        lambda rows, exact: rows @ w, chunk_iters=chunk_iters, **kwargs
+    )
+    init, chunk = jax.jit(init), jax.jit(chunk)
+    agg_ids = jnp.zeros((k,), jnp.int32)
+    exact = jnp.zeros((0,), jnp.float32)
+    delta = jnp.asarray(0.3, jnp.float32)
+    for seed in range(4):
+        vals, n = _lane_inputs(k, cap, seed)
+        want = mono(vals, n, agg_ids, delta, exact)
+        state = init(vals, n, agg_ids, delta, exact,
+                     jnp.asarray(True), jnp.asarray(0.95, jnp.float32),
+                     jnp.asarray(max_iters, jnp.int32))
+        state, dispatches = _drain(chunk, state)
+        np.testing.assert_array_equal(np.asarray(state.z), np.asarray(want.z))
+        assert int(state.it) == int(want.iters)
+        assert float(state.y_hat) == float(want.y_hat)
+        assert float(state.prob) == float(want.prob)
+        if chunk_iters >= max_iters:
+            assert dispatches <= 1, "one chunk must BE the monolithic loop"
+        else:
+            assert dispatches >= -(-int(want.iters) // chunk_iters)
+
+
+def test_chunked_inactive_lane_is_inert():
+    """active=False forces done at init with zero iterations — the empty
+    lane-table invariant new_table relies on."""
+    k, cap = 2, 128
+    w = jnp.asarray([1.0, 1.0])
+    init, chunk = build_chunked_executor(
+        lambda rows, exact: rows @ w, chunk_iters=2,
+        k=k, task="regression", m=16, m_sobol=8, max_iters=8,
+    )
+    vals, n = _lane_inputs(k, cap, 0)
+    state = jax.jit(init)(
+        vals, n, jnp.zeros((k,), jnp.int32), jnp.asarray(0.3, jnp.float32),
+        jnp.zeros((0,), jnp.float32), jnp.asarray(False),
+        jnp.asarray(0.95, jnp.float32), jnp.asarray(8, jnp.int32),
+    )
+    assert bool(state.done) and int(state.it) == 0
+    state = jax.jit(chunk)(state)
+    assert bool(state.done) and int(state.it) == 0
+
+
+def test_build_chunked_executor_validates_chunk_iters():
+    with pytest.raises(ValueError, match="chunk_iters"):
+        build_chunked_executor(
+            lambda rows, exact: rows, chunk_iters=0, k=1, task="regression"
+        )
+
+
+# --------------------------------------- pipeline-level chunk parity
+def _drain_table(srv, table, max_dispatches=200):
+    chunks = 0
+    out = srv.readback(table)
+    while not out["done"].all():
+        table = srv.run_chunk(table)
+        out = srv.readback(table)
+        chunks += 1
+        assert chunks <= max_dispatches
+    return table, out
+
+
+@pytest.mark.parametrize("pipeline", ["turbofan", "sensor_health"])
+@pytest.mark.parametrize("chunk_iters", [2, 64])
+def test_pipeline_chunked_matches_fixed_lane(pipeline, chunk_iters):
+    """Admitting a whole batch into the lane table and draining it matches
+    BatchedFusedServer.serve_batch bitwise (z, iters) and exactly on
+    predictions — parametric AND holistic pipelines, chunk_iters both far
+    below and at/above max_iters (64 >= default max_iters)."""
+    b = make_pipeline(pipeline, **SMALL)
+    reqs = b.requests[:4]
+    fixed = BatchedFusedServer(b, CFG, batch_size=len(reqs))
+    want = fixed.serve_batch(reqs)
+
+    srv = ContinuousBatchedServer(
+        b, CFG, batch_size=len(reqs), chunk_iters=chunk_iters
+    )
+    cap = srv.trace_cap(reqs)
+    assert cap == want.cap, "parity needs both paths at the same cap bucket"
+    table, _ = srv.admit(
+        srv.new_table(cap), cap, [(i, r, None) for i, r in enumerate(reqs)]
+    )
+    table, out = _drain_table(srv, table)
+    np.testing.assert_array_equal(out["z"], np.asarray(want.z))
+    np.testing.assert_array_equal(out["it"], np.asarray(want.iters))
+    np.testing.assert_array_equal(out["y_hat"], np.asarray(want.y_hat))
+    np.testing.assert_array_equal(out["prob"], np.asarray(want.prob))
+
+
+# ------------------------------------- recycling vs serial replay parity
+def test_recycling_matches_serial_replay():
+    """The acceptance bitwise-parity relation: a saturating trace served
+    WITH lane recycling produces, per request, the same z-plan, iteration
+    count and prediction as serving that request alone.  Single cap bucket
+    (groups 0..7 = 128) so the serial replay traces identical shapes."""
+    b = make_small_bundle()
+    reqs = [{"g": g} for g in range(8)]
+    from repro.data.synthetic import poisson_arrivals
+
+    arrivals = poisson_arrivals(reqs, 500.0, n=20, seed=13)
+    srv = ContinuousBatchedServer(b, SMALL_CFG, batch_size=2, chunk_iters=2)
+    stats = ContinuousServingRuntime(srv).run(arrivals)
+    s = stats.summary()
+    assert s["n"] == 20
+    assert s["n_recycles"] > 0, "trace did not exercise recycling"
+    assert s["compile_count"] == 0
+
+    serial = BatchedFusedServer(b, SMALL_CFG, batch_size=1)
+    for rec in stats.records:
+        res = serial.serve_batch([arrivals[rec.req_id][1]])
+        # integer plans are the bitwise contract; predictions fp-close only
+        # (vmap width 1 vs 2 may re-associate the replicate reductions)
+        assert rec.z == tuple(int(x) for x in res.z[0]), rec.req_id
+        assert rec.iters == int(res.iters[0])
+        scale = max(abs(float(res.y_hat[0])), 1.0)
+        assert abs(rec.y_hat - float(res.y_hat[0])) <= 1e-5 * scale
+        assert abs(rec.prob - float(res.prob[0])) <= 1e-5
+
+
+# --------------------------------------------- continuous compile contract
+def test_compile_count_two_per_bucket_across_fills():
+    """Exactly refill + chunk per cap bucket: partial admits, full admits,
+    repeated chunks and a second trace through the same table never mint a
+    third executable; a NEW cap bucket mints exactly two more."""
+    b = make_small_bundle()
+    srv = ContinuousBatchedServer(b, SMALL_CFG, batch_size=4, chunk_iters=3)
+    assert srv.compile_count == 0
+    table = srv.new_table(128)
+    assert srv.compile_count == 0, "new_table must not compile"
+    table, _ = srv.admit(table, 128, [(0, {"g": 0}, None)])
+    table, _ = _drain_table(srv, table)
+    assert (srv.refill_compiles, srv.chunk_compiles) == (1, 1)
+    # fill variation, lane reuse, different assignment patterns: no compile
+    table, _ = srv.admit(
+        table, 128, [(i, {"g": i}, None) for i in (0, 2, 3)]
+    )
+    table, _ = _drain_table(srv, table)
+    table, _ = srv.admit(table, 128, [(1, {"g": 5}, None)])
+    table, _ = _drain_table(srv, table)
+    assert srv.compile_count == 2
+    assert srv.compiled_buckets == [128]
+    # a new cap bucket is the ONLY compile trigger: two more executables
+    big = srv.new_table(1024)
+    big, _ = srv.admit(big, 1024, [(0, {"g": 8}, None)])
+    _drain_table(srv, big)
+    assert srv.compile_count == 4
+    assert srv.compiled_buckets == [128, 1024]
+    assert srv.refill_compiles == srv.chunk_compiles == 2
+
+
+def test_admit_validation():
+    b = make_small_bundle()
+    srv = ContinuousBatchedServer(b, SMALL_CFG, batch_size=2, chunk_iters=2)
+    table = srv.new_table(128)
+    with pytest.raises(ValueError, match="lane"):
+        srv.admit(table, 128, [(2, {"g": 0}, None)])
+    with pytest.raises(ValueError, match="twice"):
+        srv.admit(table, 128, [(0, {"g": 0}, None), (0, {"g": 1}, None)])
+    with pytest.raises(ValueError, match="cap"):
+        srv.admit(table, 128, [(0, {"g": 8}, None)])  # 900-row group
+
+
+# ------------------------------------------- chunk-boundary accounting
+def test_chunked_straggler_report_empty():
+    rep = chunked_straggler_report(
+        np.zeros((0, 4), np.int64), np.zeros((0, 4), bool), lanes=4,
+        n_devices=2,
+    )
+    assert rep["n_chunks"] == 0
+    assert rep["lane_occupancy"] == 0.0
+    assert rep["wasted_frac"] == 0.0
+    assert rep["per_device_fill"] == pytest.approx([0.0, 0.0])
+    assert rep["lane_imbalance"] == 0.0
+
+
+def test_chunked_straggler_report_device_blocks():
+    """Waste is charged against the lane's own device-block max PER CHUNK,
+    and empty lanes are neither charged nor counted as fill."""
+    iters = np.array([[3, 1, 2, 2],     # dev0 max 3, dev1 max 2
+                      [0, 2, 4, 0]])    # dev0 max 2, dev1 max 4
+    occ = np.array([[True, True, True, True],
+                    [False, True, True, True]])
+    rep = chunked_straggler_report(iters, occ, lanes=4, n_devices=2)
+    assert rep["n_chunks"] == 2
+    assert rep["lane_occupancy"] == pytest.approx(7 / 8)
+    # chunk 0 waste: [0, 2, 0, 0]; chunk 1: [-, 0, 0, 4] (lane 0 empty)
+    np.testing.assert_array_equal(rep["wasted_iters"], [0, 2, 0, 4])
+    assert rep["wasted_frac"] == pytest.approx(6 / (3 + 3 + 2 + 2 + 2 + 4 + 4))
+    # occupancy-true per-device fill: dev0 saw 3/4 occupied lane-chunks
+    assert rep["per_device_fill"] == pytest.approx([3 / 4, 1.0])
+    assert rep["lane_imbalance"] == pytest.approx(0.25)
+    assert rep["total_iters"] == 14
+
+
+def test_chunked_straggler_report_validates_alignment():
+    with pytest.raises(ValueError):
+        chunked_straggler_report(
+            np.zeros((2, 3), np.int64), np.zeros((2, 3), bool), lanes=4
+        )
+
+
+# ----------------------------------------------------------- mesh parity
+def _table_trace(srv, reqs):
+    cap = srv.trace_cap(reqs)
+    table, _ = srv.admit(
+        srv.new_table(cap), cap, [(i, r, None) for i, r in enumerate(reqs)]
+    )
+    # recycle lane 0 mid-trace to exercise the per-device swap path
+    table = srv.run_chunk(table)
+    table, _ = srv.admit(table, cap, [(0, reqs[-1], None)])
+    table, out = _drain_table(srv, table)
+    return out
+
+
+def test_mesh_table_matches_unsharded():
+    """A 1-device mesh exercises the full shard_map refill/chunk path and
+    must match the plain vmapped table bitwise."""
+    b = make_small_bundle()
+    reqs = [{"g": g} for g in range(4)]
+    base = ContinuousBatchedServer(b, SMALL_CFG, batch_size=4, chunk_iters=2)
+    mesh = ContinuousBatchedServer(
+        b, SMALL_CFG, batch_size=4, chunk_iters=2, mesh=make_serving_mesh(1)
+    )
+    assert mesh.n_devices == 1
+    ob, om = _table_trace(base, reqs), _table_trace(mesh, reqs)
+    for key in ("z", "it", "y_hat", "prob", "done"):
+        np.testing.assert_array_equal(ob[key], om[key])
+    assert mesh.compile_count == 2
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 2, reason="needs >= 2 devices (CI forces 8)"
+)
+def test_mesh_table_matches_unsharded_multidevice():
+    """Same trace, lanes partitioned over 2 devices: identical results —
+    the collective-free per-device lane swap contract."""
+    b = make_small_bundle()
+    reqs = [{"g": g} for g in range(4)]
+    base = ContinuousBatchedServer(b, SMALL_CFG, batch_size=4, chunk_iters=2)
+    mesh = ContinuousBatchedServer(
+        b, SMALL_CFG, batch_size=4, chunk_iters=2, mesh=make_serving_mesh(2)
+    )
+    assert mesh.n_devices == 2
+    ob, om = _table_trace(base, reqs), _table_trace(mesh, reqs)
+    for key in ("z", "it"):
+        np.testing.assert_array_equal(ob[key], om[key])
+    np.testing.assert_allclose(ob["y_hat"], om["y_hat"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ob["prob"], om["prob"], rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------- runtime summary surface
+def test_continuous_runtime_summary_keys():
+    b = make_small_bundle()
+    from repro.data.synthetic import poisson_arrivals
+
+    reqs = [{"g": g} for g in range(8)]
+    arrivals = poisson_arrivals(reqs, 300.0, n=6, seed=3)
+    srv = ContinuousBatchedServer(b, SMALL_CFG, batch_size=2, chunk_iters=2)
+    rt = ContinuousServingRuntime(srv)
+    s = rt.run(arrivals).summary()
+    for key in ("n_chunks", "n_recycles", "lane_occupancy",
+                "chunk_wasted_frac"):
+        assert key in s, key
+    assert s["n"] == 6
+    assert 0.0 < s["lane_occupancy"] <= 1.0
+    assert s["compile_count"] == 0  # warmup owns both executables
+    # fixed-lane runs must NOT grow the new keys
+    fixed = BatchedFusedServer(b, SMALL_CFG, batch_size=2)
+    sf = ServingRuntime(fixed).run(arrivals).summary()
+    assert "n_chunks" not in sf and "lane_occupancy" not in sf

@@ -278,6 +278,74 @@ def test_incremental_respects_exactness_pins():
     assert int(res.z[0]) == 500
 
 
+# ------------------------------------- per-cap-bucket AFC heuristic (PR 7)
+def test_resolve_afc_plan_cap_heuristic(monkeypatch):
+    """"auto" picks rescan at/below AFC_REF_MAX_CAP (where BENCH_fused.json
+    measured the prefix tables not amortizing) and incremental above; with
+    no cap (build-time validation) the incremental default stands."""
+    from repro.kernels.sampled_agg.ops import AFC_REF_MAX_CAP, resolve_afc_plan
+
+    monkeypatch.delenv("REPRO_AFC_BACKEND", raising=False)
+    assert resolve_afc_plan("auto", cap=AFC_REF_MAX_CAP) == (False, None)
+    assert resolve_afc_plan("auto", cap=128) == (False, None)
+    assert resolve_afc_plan("auto", cap=AFC_REF_MAX_CAP * 2) == (True, None)
+    assert resolve_afc_plan("auto", cap=None) == (True, None)
+    with pytest.raises(ValueError, match="unknown afc_backend"):
+        resolve_afc_plan("bogus")
+
+
+def test_resolve_afc_plan_overrides_beat_heuristic(monkeypatch):
+    """Explicit build arguments and the env pin win over the cap heuristic
+    at BOTH sides of the threshold — parity legs stay pinned."""
+    from repro.kernels.sampled_agg.ops import resolve_afc_plan
+
+    monkeypatch.delenv("REPRO_AFC_BACKEND", raising=False)
+    for cap in (128, 65536):
+        assert resolve_afc_plan("ref", cap=cap) == (False, False)
+        assert resolve_afc_plan("kernel", cap=cap) == (True, True)
+        assert resolve_afc_plan("incremental", cap=cap) == (True, False)
+        assert resolve_afc_plan("inc", cap=cap) == (True, False)
+    # env force-overrides consulted under "auto" only
+    for env, want in [("ref", (False, False)), ("kernel", (True, True)),
+                      ("incremental", (True, False)), ("inc", (True, False))]:
+        monkeypatch.setenv("REPRO_AFC_BACKEND", env)
+        assert resolve_afc_plan("auto", cap=128) == want
+        assert resolve_afc_plan("auto", cap=65536) == want
+        # ...but never over an explicit build argument
+        assert resolve_afc_plan("ref", cap=65536) == (False, False)
+
+
+@pytest.mark.parametrize("cap_factor", [1, 2])
+def test_auto_heuristic_executor_parity_at_crossover(monkeypatch, cap_factor):
+    """The executor built with "auto" is bitwise-identical to the strategy
+    the heuristic resolves to, at the cap bucket just below and just above
+    the crossover — strategy selection must never change results."""
+    from repro.kernels.sampled_agg.ops import AFC_REF_MAX_CAP
+
+    monkeypatch.delenv("REPRO_AFC_BACKEND", raising=False)
+    cap = AFC_REF_MAX_CAP * cap_factor
+    forced = "ref" if cap <= AFC_REF_MAX_CAP else "incremental"
+    k = 2
+    w = jnp.asarray([2.0, -1.0])
+    kwargs = dict(k=k, task="regression", m=32, m_sobol=8, max_iters=8,
+                  n_boot=16)
+    auto = build_fused_executor(
+        lambda rows, exact: rows @ w, afc_backend="auto", **kwargs
+    )
+    pinned = build_fused_executor(
+        lambda rows, exact: rows @ w, afc_backend=forced, **kwargs
+    )
+    rng = np.random.default_rng(cap)
+    vals = jnp.asarray(rng.normal(0, 2, (k, cap)).astype(np.float32))
+    n = jnp.asarray([cap, cap - 7], jnp.int32)
+    args = (vals, n, jnp.zeros((k,), jnp.int32),
+            jnp.asarray(0.1, jnp.float32), jnp.zeros((0,), jnp.float32))
+    ra, rp = auto(*args), pinned(*args)
+    np.testing.assert_array_equal(np.asarray(ra.z), np.asarray(rp.z))
+    assert int(ra.iters) == int(rp.iters)
+    assert float(ra.y_hat) == float(rp.y_hat)
+
+
 # ------------------------------------------------- HLO-cost flatness claim
 def _executor_hlo(cap: int, afc_backend: str) -> str:
     k = 3
