@@ -1,0 +1,46 @@
+"""Static contract checking for the serving stack's compiled executables.
+
+Biathlon's serving speedups (DESIGN.md) rest on invariants that are easy to
+break silently in a later PR and expensive to debug from symptoms:
+
+* the jit cache holds a FIXED number of executables per power-of-two cap
+  bucket (one for the fixed-lane batch program, refill + chunk for the
+  continuous table) — a weak-typed scalar knob or an unpinned dtype turns
+  that into one compile per request;
+* the sharded hot path runs ZERO collectives under ``shard_map`` — a stray
+  ``psum`` re-serializes every chunk on the slowest device;
+* the donated lane buffers really alias input to output — a dropped
+  passthrough silently re-materializes the (lanes, k, cap) transfer per
+  batch;
+* all hot-loop RNG is counter-based (``fold_in`` on the per-request
+  iteration index) — a ``jax.random.split`` threaded through the carry
+  breaks bitwise lane-recycling parity with no test naming the cause.
+
+This package makes those invariants *declared* (``contracts`` — each
+executable builder registers its contract next to the code it constrains),
+*checkable before execution* (``jaxpr_lint`` walks traced jaxprs,
+``hlo_lint`` scans lowered/compiled HLO on the ``launch.hlo_cost`` /
+``launch.hlo_stats`` machinery), and *known-sensitive* (``mutations`` holds
+deliberately seeded violations the checker must catch).  ``check`` is the
+CLI / CI gate: ``python -m repro.analysis.check``.
+
+Only the registry is re-exported here; the linters import jax and the
+checker imports the serving stack, so they stay submodule imports
+(``repro.analysis.jaxpr_lint`` etc.) to keep contract declaration cheap for
+the modules that do it at import time.
+"""
+from repro.analysis.contracts import (
+    ExecutableContract,
+    all_contracts,
+    assert_compile_contract,
+    contract_for,
+    register_contract,
+)
+
+__all__ = [
+    "ExecutableContract",
+    "all_contracts",
+    "assert_compile_contract",
+    "contract_for",
+    "register_contract",
+]

@@ -1,0 +1,190 @@
+"""Executable contracts: declared invariants of the compiled serving programs.
+
+A contract is the machine-readable half of an executable builder's
+docstring: how many jit cache entries it may mint per power-of-two cap
+bucket, whether its compiled module may contain collectives, which inputs
+must be donated-and-aliased, and what RNG discipline its loop bodies must
+follow.  Builders declare their contract **next to the code it constrains**
+(``core/executor_fused.py``, ``serving/batched.py``,
+``serving/continuous.py`` call :func:`register_contract` at import time),
+and three consumers read the registry:
+
+* the static checker (``repro.analysis.check``) lints traced jaxprs and
+  compiled HLO against it and diffs the results against the checked-in
+  baseline;
+* the serving tests assert their trace-hook compile counts *through*
+  :func:`assert_compile_contract`, so a test and the checker can never
+  disagree about the expected executable count;
+* humans, via ``python -m repro.analysis.check --list``.
+
+This module is dependency-free (no jax import) so declaring a contract
+costs nothing at import time.
+"""
+from __future__ import annotations
+
+from collections.abc import Sequence
+from dataclasses import dataclass, fields
+from typing import Any
+
+__all__ = [
+    "ExecutableContract",
+    "all_contracts",
+    "assert_compile_contract",
+    "contract_for",
+    "register_contract",
+]
+
+#: RNG disciplines a contract can demand of loop bodies.
+RNG_COUNTER_BASED = "counter_based"
+RNG_FREE = "free"
+
+
+@dataclass(frozen=True)
+class ExecutableContract:
+    """Invariants one executable builder promises about its compiled output.
+
+    ``executables_per_bucket``
+        jit cache entries the owning server may mint per power-of-two cap
+        bucket (1 for the fixed-lane batch program; 2 for the continuous
+        table's refill + chunk pair).  Enforced by
+        :func:`assert_compile_contract` against the server's trace-hook
+        counters.
+    ``collectives``
+        cross-device collective ops (all-reduce / all-gather /
+        reduce-scatter / all-to-all / collective-permute) the compiled
+        module may contain.  The sharded serving path promises 0.
+    ``donated``
+        human-readable names of inputs that must be donated AND aliased to
+        an output (XLA ``input_output_alias``) — the no-copy contract for
+        the (lanes, k, cap) values buffer / the continuous lane table.
+        Empty tuple = no donation requirement.
+    ``rng``
+        ``"counter_based"`` forbids ``jax.random.split`` and key-typed
+        carries inside loop bodies (bootstrap draws must ``fold_in`` a
+        loop counter on a closure key — the lane-recycling parity
+        property); ``"free"`` lifts the restriction.
+    ``weak_type_inputs``
+        whether weak-typed input avals are tolerated.  False means every
+        traced input must carry a strong dtype — a weak scalar (a raw
+        Python float) re-traces the program whenever a caller's promotion
+        context changes, silently breaking ``executables_per_bucket``.
+    ``allow_f64``
+        whether f64 values may appear anywhere in the traced program
+        (they never should: the stack is pinned to f32 with compensated
+        accumulation — see kernels/sampled_agg/compensated.py).
+    ``while_body_flat``
+        whether the planner while-loop body's HLO cost must be independent
+        of the cap-bucket width (the incremental-AFC promise; checked via
+        ``launch.hlo_cost.while_costs`` at two caps).
+    """
+
+    name: str
+    builder: str
+    executables_per_bucket: int
+    collectives: int = 0
+    donated: tuple[str, ...] = ()
+    rng: str = RNG_COUNTER_BASED
+    weak_type_inputs: bool = False
+    allow_f64: bool = False
+    while_body_flat: bool = False
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if self.executables_per_bucket < 0:
+            raise ValueError(
+                f"contract {self.name!r}: executables_per_bucket must be >= 0"
+            )
+        if self.collectives < 0:
+            raise ValueError(f"contract {self.name!r}: collectives must be >= 0")
+        if self.rng not in (RNG_COUNTER_BASED, RNG_FREE):
+            raise ValueError(
+                f"contract {self.name!r}: rng must be "
+                f"{RNG_COUNTER_BASED!r} or {RNG_FREE!r}, got {self.rng!r}"
+            )
+
+    def as_dict(self) -> dict[str, Any]:
+        d = {f.name: getattr(self, f.name) for f in fields(self)}
+        d["donated"] = list(self.donated)
+        return d
+
+
+_REGISTRY: dict[str, ExecutableContract] = {}
+
+
+def register_contract(contract: ExecutableContract) -> ExecutableContract:
+    """Register a builder's contract; returns it for inline declaration.
+
+    Re-registering the IDENTICAL contract is a no-op (modules may be
+    re-imported); registering a conflicting contract under an existing name
+    raises — two builders silently fighting over one name is exactly the
+    drift this registry exists to surface.
+    """
+    prev = _REGISTRY.get(contract.name)
+    if prev is not None and prev != contract:
+        raise ValueError(
+            f"conflicting contract registration for {contract.name!r}: "
+            f"{prev} vs {contract}"
+        )
+    _REGISTRY[contract.name] = contract
+    return contract
+
+
+def contract_for(name: str) -> ExecutableContract:
+    """The registered contract, or a loud error naming what IS registered."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no contract registered under {name!r}; known: "
+            f"{sorted(_REGISTRY)} (builders register at import time — "
+            "import the owning module first)"
+        ) from None
+
+
+def all_contracts() -> dict[str, ExecutableContract]:
+    """Snapshot of the registry (name -> contract), declaration-order."""
+    return dict(_REGISTRY)
+
+
+def assert_compile_contract(
+    server: Any,
+    name: str | Sequence[str],
+    *,
+    buckets: Sequence[int] | None = None,
+) -> None:
+    """Assert a server's observed compile counters match its contract(s).
+
+    The one place the expected-executable arithmetic lives: a server that
+    exposes ``compile_count`` (trace-hook cache-miss counter) and
+    ``compiled_buckets`` (cap buckets served) must satisfy
+
+        compile_count == sum(executables_per_bucket) * len(compiled_buckets)
+
+    ``name`` is a contract name or a sequence of them — a server built from
+    several executables (the continuous table's refill + chunk pair) sums
+    their per-bucket budgets.  ``buckets`` (optional) additionally pins the
+    exact bucket list.  Both the serving tests and the runtime checker call
+    this, so the test suite and ``python -m repro.analysis.check`` cannot
+    drift apart on what "no recompiles" means.  Raises ``AssertionError``
+    naming the violated contract(s).
+    """
+    names = (name,) if isinstance(name, str) else tuple(name)
+    cs = [contract_for(n) for n in names]
+    observed = int(server.compile_count)
+    got_buckets = list(server.compiled_buckets)
+    per_bucket = sum(c.executables_per_bucket for c in cs)
+    expected = per_bucket * len(got_buckets)
+    label = " + ".join(repr(c.name) for c in cs)
+    if observed != expected:
+        builders = ", ".join(sorted({c.builder for c in cs}))
+        raise AssertionError(
+            f"contract {label} (builder {builders}) violated: "
+            f"{observed} executables compiled for {len(got_buckets)} cap "
+            f"bucket(s) {got_buckets}, contract allows "
+            f"{per_bucket} per bucket = {expected}"
+        )
+    if buckets is not None and got_buckets != sorted(buckets):
+        raise AssertionError(
+            f"contract {label}: served cap buckets {got_buckets} != "
+            f"expected {sorted(buckets)}"
+        )

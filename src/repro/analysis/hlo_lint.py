@@ -1,0 +1,214 @@
+"""HLO linting: collectives, donation aliasing, while-body cost flatness.
+
+The jaxpr linter (jaxpr_lint.py) sees what the *program says*; this module
+checks what the *compiler produced* — the two can disagree (SPMD
+partitioning inserts collectives no jaxpr ever named; XLA silently declines
+a donation when the aliased output's layout does not match).  It is built
+on the existing post-SPMD HLO machinery:
+
+* ``launch.hlo_stats.collect_collective_stats`` counts and sizes every
+  all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute — the sharded serving contract allows exactly zero;
+* ``launch.hlo_cost.while_costs`` prices each while-loop body, which is
+  how the incremental-AFC flatness contract (loop-body cost independent of
+  the cap-bucket width) is enforced without running anything;
+* donation is verified against the *compiled* executable: XLA's
+  ``memory_analysis().alias_size_in_bytes`` must cover the donated buffer
+  AND the module must carry an ``input_output_alias`` annotation — a
+  donation that silently fell back to a copy passes neither.
+
+All checks return :class:`~repro.analysis.jaxpr_lint.LintFinding` lists so
+the checker reports jaxpr- and HLO-level violations uniformly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.analysis.jaxpr_lint import LintFinding
+from repro.launch.hlo_cost import HloCost, while_costs
+from repro.launch.hlo_stats import collect_collective_stats
+
+__all__ = [
+    "check_collectives",
+    "check_donation",
+    "check_f64",
+    "check_while_flatness",
+    "planner_body_cost",
+]
+
+_F64 = re.compile(r"\bf64\[")
+
+
+def check_collectives(
+    hlo_text: str, executable: str, *, allowed: int = 0, n_devices: int = 1
+) -> list[LintFinding]:
+    """Compiled module must contain at most ``allowed`` collective ops.
+
+    Counts post-SPMD instructions via ``collect_collective_stats`` — the
+    authoritative place a stray ``psum`` (or a sharding constraint XLA
+    resolved with an all-gather) becomes visible.
+    """
+    stats = collect_collective_stats(hlo_text, n_devices)
+    total = sum(stats.per_op_count.values())
+    if total <= allowed:
+        return []
+    per_op = ", ".join(
+        f"{k}×{v} ({stats.per_op_bytes.get(k, 0.0):.0f}B)"
+        for k, v in sorted(stats.per_op_count.items())
+    )
+    return [LintFinding(
+        contract="collectives",
+        executable=executable,
+        where="<hlo>",
+        message=(
+            f"compiled module contains {total} collective op(s) "
+            f"[{per_op}], contract allows {allowed} — the sharded lane "
+            "path must stay collective-free (per-lane reductions local to "
+            "the owning device; params replicated as closure constants)"
+        ),
+    )]
+
+
+def check_f64(hlo_text: str, executable: str) -> list[LintFinding]:
+    """No f64 buffers in the compiled module (f32 + compensation only)."""
+    n = len(_F64.findall(hlo_text))
+    if n == 0:
+        return []
+    return [LintFinding(
+        contract="allow_f64",
+        executable=executable,
+        where="<hlo>",
+        message=(
+            f"{n} f64 buffer(s) in the compiled module — double-precision "
+            "drift doubles HBM traffic; the stack is pinned to f32 with "
+            "compensated accumulation (kernels/sampled_agg/compensated.py)"
+        ),
+    )]
+
+
+def check_donation(
+    compiled: Any,
+    executable: str,
+    *,
+    min_alias_bytes: int,
+    donated: tuple[str, ...],
+) -> list[LintFinding]:
+    """Donated inputs must ACTUALLY alias outputs in the compiled program.
+
+    ``donate_argnums`` is a *permission*, not a guarantee: XLA drops the
+    alias (and silently copies) when the output layout or shape does not
+    line up.  Both signals must hold — ``memory_analysis`` reports at
+    least the donated buffer's bytes aliased, and the module text carries
+    the ``input_output_alias`` annotation.
+    """
+    findings: list[LintFinding] = []
+    names = ", ".join(donated) or "<buffers>"
+    try:
+        alias = int(compiled.memory_analysis().alias_size_in_bytes)
+    except Exception as e:  # backend without memory_analysis support
+        return [LintFinding(
+            contract="donated",
+            executable=executable,
+            where="<memory_analysis>",
+            message=f"cannot verify donation of {names}: {e}",
+        )]
+    if alias < min_alias_bytes:
+        findings.append(LintFinding(
+            contract="donated",
+            executable=executable,
+            where="<memory_analysis>",
+            message=(
+                f"donated input(s) {names} not aliased: "
+                f"alias_size_in_bytes={alias} < expected {min_alias_bytes} "
+                "— XLA fell back to a per-dispatch copy (is the buffer "
+                "threaded back out as an output, e.g. FusedResult.lane_vals?)"
+            ),
+        ))
+    if "input_output_alias" not in compiled.as_text():
+        findings.append(LintFinding(
+            contract="donated",
+            executable=executable,
+            where="<hlo>",
+            message=(
+                f"no input_output_alias annotation in the compiled module — "
+                f"donation of {names} was dropped entirely"
+            ),
+        ))
+    return findings
+
+
+def planner_body_cost(hlo_text: str) -> HloCost | None:
+    """Cost of ONE iteration of the module's most expensive while body.
+
+    The planner loop is the while with the largest body bytes (the inner
+    Beta-rejection loops are tiny) — same convention as the incremental-AFC
+    regression test.  None when the module has no while loop at all.
+    """
+    costs = while_costs(hlo_text)
+    if not costs:
+        return None
+    return max(costs, key=lambda c: c["cost"].bytes)["cost"]
+
+
+def check_while_flatness(
+    texts_by_cap: dict[int, str],
+    executable: str,
+    *,
+    bytes_tol: float = 1.3,
+    flops_tol: float = 1.1,
+) -> list[LintFinding]:
+    """Loop-body cost must be independent of the cap-bucket width.
+
+    ``texts_by_cap`` maps cap -> compiled HLO text of the SAME executable
+    lowered at that cap.  The smallest cap is the reference; every larger
+    cap's planner-body bytes must stay within ``bytes_tol`` of it (FLOPs
+    within ``flops_tol``) — the incremental-AFC promise that all O(cap)
+    work lives in the once-per-request precompute, outside the loop.
+    """
+    if len(texts_by_cap) < 2:
+        raise ValueError("need >= 2 caps to check flatness")
+    caps = sorted(texts_by_cap)
+    base = planner_body_cost(texts_by_cap[caps[0]])
+    if base is None:
+        return [LintFinding(
+            contract="while_body_flat",
+            executable=executable,
+            where=f"<hlo cap={caps[0]}>",
+            message="no while loop found in the compiled module",
+        )]
+    findings: list[LintFinding] = []
+    for cap in caps[1:]:
+        cost = planner_body_cost(texts_by_cap[cap])
+        if cost is None:
+            findings.append(LintFinding(
+                contract="while_body_flat",
+                executable=executable,
+                where=f"<hlo cap={cap}>",
+                message="no while loop found in the compiled module",
+            ))
+            continue
+        if cost.bytes > bytes_tol * max(base.bytes, 1.0):
+            findings.append(LintFinding(
+                contract="while_body_flat",
+                executable=executable,
+                where=f"<hlo cap={cap}>",
+                message=(
+                    f"while-body HBM bytes scale with cap: {cost.bytes:.0f}B "
+                    f"at cap {cap} vs {base.bytes:.0f}B at cap {caps[0]} "
+                    f"(> {bytes_tol}x) — O(cap) work leaked from the "
+                    "once-per-request precompute into the loop body"
+                ),
+            ))
+        if cost.flops > flops_tol * max(base.flops, 1.0):
+            findings.append(LintFinding(
+                contract="while_body_flat",
+                executable=executable,
+                where=f"<hlo cap={cap}>",
+                message=(
+                    f"while-body FLOPs scale with cap: {cost.flops:.0f} at "
+                    f"cap {cap} vs {base.flops:.0f} at cap {caps[0]} "
+                    f"(> {flops_tol}x)"
+                ),
+            ))
+    return findings

@@ -1,0 +1,198 @@
+"""Seeded contract violations: the checker's sensitivity tests.
+
+A static checker that never fires is indistinguishable from one that
+cannot fire.  Each function here builds a deliberately broken variant of a
+real executable pattern — the exact regressions the contracts exist to
+stop — runs the relevant lint, and returns its findings.  An empty return
+means the checker MISSED the violation; ``python -m repro.analysis.check
+--mutation-test`` (and ``tests/test_analysis.py``) fail on any miss, so
+the pass is known-sensitive, not vacuously green.
+
+The mutants use the toy linear-model executor (same probe as the
+incremental-AFC HLO tests): real ``build_fused_executor`` programs, tiny
+enough to trace and compile in milliseconds.
+"""
+from __future__ import annotations
+
+from collections.abc import Callable
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_lint, jaxpr_lint
+from repro.analysis.jaxpr_lint import LintFinding
+from repro.core.executor_fused import build_fused_executor, shard_lanes_executor
+from repro.launch.mesh import make_serving_mesh
+
+__all__ = ["MUTATIONS"]
+
+_K = 3
+_W = jnp.asarray([1.0, -2.0, 0.5])
+
+
+def _toy_executor(
+    model_fn: Callable[..., Any] | None = None, **overrides: Any
+) -> Any:
+    kwargs: dict[str, Any] = dict(k=_K, task="regression", m=16, m_sobol=8,
+                                  max_iters=8, n_boot=16)
+    kwargs.update(overrides)
+    return build_fused_executor(
+        model_fn if model_fn is not None else (lambda rows, exact: rows @ _W),
+        **kwargs,
+    )
+
+
+def _lane_args(cap: int = 256) -> tuple[Any, ...]:
+    """Single-lane executor inputs (the 8-ary fused signature)."""
+    return (
+        jnp.zeros((_K, cap), jnp.float32),
+        jnp.full((_K,), cap, jnp.int32),
+        jnp.zeros((_K,), jnp.int32),
+        jnp.asarray(0.1, jnp.float32),
+        jnp.zeros((0,), jnp.float32),
+        jnp.asarray(True),
+        jnp.asarray(0.95, jnp.float32),
+        jnp.asarray(8, jnp.int32),
+    )
+
+
+def _batched_args(lanes: int = 4, cap: int = 256) -> tuple[Any, ...]:
+    return tuple(
+        jnp.broadcast_to(a, (lanes,) + a.shape) for a in _lane_args(cap)
+    )
+
+
+# ----------------------------------------------------------- the mutants
+def injected_collective() -> list[LintFinding]:
+    """A psum smuggled into the shard_map lane program.
+
+    The sharded serving contract is zero collectives — a cross-lane
+    reduction re-serializes every chunk on the slowest device.  The HLO
+    linter must see the all-reduce in the compiled module (it survives
+    even on a 1-device mesh).
+    """
+    run = _toy_executor()
+
+    def lane(vals, n, agg_ids, delta, exact, active, tau, iter_cap):
+        res = run(vals, n, agg_ids, delta, exact, active, tau, iter_cap)
+        return res._replace(y_hat=jax.lax.psum(res.y_hat, "lanes"))
+
+    mesh = make_serving_mesh(1)
+    fn = shard_lanes_executor(lane, mesh)
+    hlo = fn.lower(*_batched_args()).compile().as_text()
+    return hlo_lint.check_collectives(
+        hlo, "mutant/psum_in_shard_map", allowed=0, n_devices=1
+    )
+
+
+def split_rng_bootstrap() -> list[LintFinding]:
+    """A split-based bootstrap sampler: key threaded through the carry.
+
+    The classic non-counter-based pattern — each iteration splits the
+    carried key.  Draws then depend on how many trips the carry's previous
+    occupants ran, which breaks recycled-lane bitwise parity.
+    """
+    def sampler(key, vals):
+        def cond(carry):
+            return carry[2] < 8
+
+        def body(carry):
+            key, acc, i = carry
+            key, sub = jax.random.split(key)
+            idx = jax.random.randint(sub, vals.shape, 0, vals.shape[0])
+            return key, acc + jnp.take(vals, idx).mean(), i + 1
+
+        return jax.lax.while_loop(
+            cond, body, (key, jnp.float32(0.0), jnp.int32(0))
+        )[1]
+
+    jaxpr = jax.make_jaxpr(sampler)(
+        jax.random.PRNGKey(0), jnp.zeros((32,), jnp.float32)
+    )
+    return jaxpr_lint.check_rng(jaxpr, "mutant/split_bootstrap")
+
+
+def dropped_donation() -> list[LintFinding]:
+    """The donated values buffer no longer threads back out.
+
+    ``donate_argnums`` alone is not a no-copy guarantee: without the
+    ``lane_vals`` passthrough there is no output to alias the (lanes, k,
+    cap) buffer onto, and XLA silently drops the donation.  The
+    ``memory_analysis`` check must notice.
+    """
+    run = _toy_executor()
+    fn = jax.jit(jax.vmap(run), donate_argnums=(0,))  # no passthrough
+    args = _batched_args()
+    compiled = fn.lower(*args).compile()
+    return hlo_lint.check_donation(
+        compiled, "mutant/undonated_vals",
+        min_alias_bytes=args[0].nbytes,
+        donated=("vals (lanes, k, cap) values buffer",),
+    )
+
+
+def weak_type_knob() -> list[LintFinding]:
+    """A raw Python float reaching the traced call as the delta knob.
+
+    The weak-typed scalar retraces whenever a caller's promotion context
+    changes — the one-executable-per-bucket killer.  The dtype lint must
+    flag the weak input aval.
+    """
+    run = _toy_executor()
+    vals, n, agg_ids, _, exact, active, tau, iter_cap = _lane_args()
+    jaxpr = jax.make_jaxpr(run)(
+        vals, n, agg_ids, 0.5, exact, active, tau, iter_cap  # knob unpinned
+    )
+    return jaxpr_lint.check_dtypes(jaxpr, "mutant/weak_delta")
+
+
+def host_callback_in_loop() -> list[LintFinding]:
+    """A debug print left inside the model function.
+
+    ``jax.debug.print`` compiles to a ``debug_callback`` inside the planner
+    while body — a device->host round trip on every iteration of the hot
+    path.  The host-sync lint must flag it.
+    """
+    def chatty_model(rows, exact):
+        y = rows @ _W
+        jax.debug.print("y_hat={y}", y=y)
+        return y
+
+    run = _toy_executor(model_fn=chatty_model)
+    jaxpr = jax.make_jaxpr(run)(*_lane_args())
+    return jaxpr_lint.check_host_sync(jaxpr, "mutant/debug_print")
+
+
+def cap_leak_in_loop_body() -> list[LintFinding]:
+    """O(cap) work leaked into the planner while body.
+
+    The rescan AFC oracle recomputes all prefix work per iteration — the
+    exact shape of a flatness regression — so forcing ``afc_backend="ref"``
+    must trip the while-body flatness check across a 4x cap span.
+    """
+    texts: dict[int, str] = {}
+    for cap in (1024, 4096):
+        run = _toy_executor(afc_backend="ref")
+        args = (
+            jax.ShapeDtypeStruct((_K, cap), jnp.float32),
+            jax.ShapeDtypeStruct((_K,), jnp.int32),
+            jax.ShapeDtypeStruct((_K,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((0,), jnp.float32),
+        )
+        texts[cap] = jax.jit(run).lower(*args).compile().as_text()
+    return hlo_lint.check_while_flatness(
+        texts, "mutant/rescan_afc", bytes_tol=1.3
+    )
+
+
+#: name -> builder; each must return >= 1 finding or the checker is blind.
+MUTATIONS: dict[str, Callable[[], list[LintFinding]]] = {
+    "injected_collective": injected_collective,
+    "split_rng_bootstrap": split_rng_bootstrap,
+    "dropped_donation": dropped_donation,
+    "weak_type_knob": weak_type_knob,
+    "host_callback_in_loop": host_callback_in_loop,
+    "cap_leak_in_loop_body": cap_leak_in_loop_body,
+}

@@ -98,6 +98,7 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import ExecutableContract, register_contract
 from repro.core.planner import direction, gamma_abs, initial_plan, next_plan
 from repro.core.propagation import qmc_uniforms
 from repro.core.uncertainty import sample_features_fused
@@ -297,6 +298,24 @@ def shard_lanes_state_executor(chunk_fn, mesh, *, axis: str = "lanes",
         ),
         donate_argnums=(0,) if donate_state else (),
     )
+
+
+#: Sharded-lane contract: the shard_map wrappers above promise a compiled
+#: module with ZERO cross-device collectives (params replicated as closure
+#: constants, per-lane reductions local to the owning device) and the same
+#: one-executable-per-cap-bucket cache behavior as the unsharded path.
+SHARDED_LANES_CONTRACT = register_contract(ExecutableContract(
+    name="sharded_lanes",
+    builder="repro.core.executor_fused.shard_lanes_executor",
+    executables_per_bucket=1,
+    collectives=0,
+    donated=("vals (lanes, k, cap) values buffer",),
+    while_body_flat=True,
+    description=(
+        "shard_map over the 1-D ('lanes',) mesh: fixed-lane batch program "
+        "partitioned device-parallel, collective-free by construction"
+    ),
+))
 
 
 def pipeline_executor_kwargs(agg_features) -> dict:
@@ -694,6 +713,29 @@ def build_fused_executor(
     return run
 
 
+#: Fixed-lane fused contract: the vmapped ``run`` above is the whole batch
+#: program, so the jit cache is keyed by (lanes, k, cap) only — one
+#: executable per power-of-two cap bucket; delta/tau/iter_cap are traced
+#: (lanes,) inputs, never cache keys.  Bootstrap draws are counter-based
+#: (``fold_in`` of the per-request iteration index on a closure key), the
+#: lane-recycling bitwise-parity property.  The planner while body must
+#: price independent of cap on the incremental-AFC path (all O(cap) work in
+#: the once-per-request precompute).
+FUSED_CONTRACT = register_contract(ExecutableContract(
+    name="fused",
+    builder="repro.core.executor_fused.build_fused_executor",
+    executables_per_bucket=1,
+    collectives=0,
+    donated=("vals (lanes, k, cap) values buffer",),
+    while_body_flat=True,
+    description=(
+        "fixed-lane batch program (BatchedFusedServer): one executable per "
+        "cap bucket, donated values buffer threaded out as lane_vals, "
+        "counter-based bootstrap RNG in the planner loop"
+    ),
+))
+
+
 def build_chunked_executor(
     model_fn,
     *,
@@ -825,3 +867,37 @@ def build_chunked_executor(
         )
 
     return init, chunk
+
+
+#: Continuous-table contracts: ``build_chunked_executor`` returns the
+#: (refill, chunk) pair, each its own jit executable — together the
+#: 2-per-cap-bucket budget of ContinuousBatchedServer.  Both donate the
+#: LaneState table so iteration-level recycling updates it in place, and
+#: both inherit the counter-based RNG discipline (a recycled lane replays
+#: the exact bootstrap stream of a fresh one).
+REFILL_CONTRACT = register_contract(ExecutableContract(
+    name="refill",
+    builder="repro.core.executor_fused.build_chunked_executor (init)",
+    executables_per_bucket=1,
+    collectives=0,
+    donated=("table (LaneState pytree, lanes-leading)",),
+    description=(
+        "single-lane init written into the donated table at one lane row; "
+        "per-request degradation knobs are traced inputs, so admitting a "
+        "request never mints an executable"
+    ),
+))
+
+CHUNK_CONTRACT = register_contract(ExecutableContract(
+    name="chunk",
+    builder="repro.core.executor_fused.build_chunked_executor (chunk)",
+    executables_per_bucket=1,
+    collectives=0,
+    donated=("table (LaneState pytree, lanes-leading)",),
+    while_body_flat=True,
+    description=(
+        "bounded planner burst (<= chunk_iters trips) over every occupied "
+        "lane of the donated table; cost-flat while body on the "
+        "incremental-AFC path"
+    ),
+))

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import assert_compile_contract
 from repro.core.executor_fused import (
     build_fused_executor,
     pipeline_executor_kwargs,
@@ -305,6 +306,9 @@ class BatchedFusedServer:
         self.batch_size = batch_size
         self.mesh = mesh
         self.n_devices = validate_serving_mesh(mesh, batch_size)
+        #: registered contract governing this server's compiled executables
+        #: (repro.analysis.contracts; declared in core/executor_fused.py)
+        self.contract = ("sharded_lanes",) if mesh is not None else ("fused",)
         p = bundle.pipeline
         feat_kwargs = pipeline_executor_kwargs(p.agg_features)
         self._agg_ids = feat_kwargs.pop("agg_ids")
@@ -358,6 +362,11 @@ class BatchedFusedServer:
     def compile_count(self) -> int:
         """Executables built so far — must equal ``len(compiled_buckets)``."""
         return self._compile_count
+
+    def check_compile_contract(self, *, buckets=None) -> None:
+        """Assert observed compiles match the registered ``fused`` /
+        ``sharded_lanes`` contract (one executable per cap bucket)."""
+        assert_compile_contract(self, self.contract, buckets=buckets)
 
     def batch_cap(self, requests: list[dict]) -> int:
         """Power-of-two bucket over THIS batch's largest group."""

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import assert_compile_contract
 from repro.core.executor_fused import (
     build_chunked_executor,
     pipeline_executor_kwargs,
@@ -84,6 +85,10 @@ class ContinuousBatchedServer:
         self.chunk_iters = int(chunk_iters)
         self.mesh = mesh
         self.n_devices = validate_serving_mesh(mesh, batch_size)
+        #: registered contracts governing this server's compiled executables
+        #: (repro.analysis.contracts; declared in core/executor_fused.py) —
+        #: the refill + chunk pair sums to the 2-per-bucket compile budget
+        self.contract = ("refill", "chunk")
         p = bundle.pipeline
         feat_kwargs = pipeline_executor_kwargs(p.agg_features)
         self._agg_ids = feat_kwargs.pop("agg_ids")
@@ -201,6 +206,11 @@ class ContinuousBatchedServer:
     @property
     def chunk_compiles(self) -> int:
         return self._chunk_compiles
+
+    def check_compile_contract(self, *, buckets=None) -> None:
+        """Assert observed compiles match the registered ``refill`` +
+        ``chunk`` contracts (two executables per cap bucket, total)."""
+        assert_compile_contract(self, self.contract, buckets=buckets)
 
     def request_cap(self, req: dict) -> int:
         """Power-of-two bucket over THIS request's largest group."""

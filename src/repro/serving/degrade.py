@@ -38,6 +38,8 @@ from __future__ import annotations
 import bisect
 from dataclasses import dataclass
 
+import numpy as np
+
 __all__ = [
     "KnobTier",
     "LaneKnobs",
@@ -65,12 +67,25 @@ class KnobTier:
 
 @dataclass(frozen=True)
 class LaneKnobs:
-    """Resolved per-lane knob vector handed to ``serve_batch``."""
+    """Resolved per-lane knob vector handed to ``serve_batch``.
+
+    Values are pinned to strong numpy dtypes at construction: a raw
+    Python scalar handed to a jitted call traces as a weak-typed aval,
+    and a weak-typed knob re-traces the executable whenever a caller's
+    promotion context changes — silently breaking the
+    one-executable-per-cap-bucket contract the static checker enforces
+    (``repro.analysis``, contract field ``weak_type_inputs``).
+    """
 
     delta: float
     tau: float
     iter_cap: int
     tier: int = 0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "delta", np.float32(self.delta))
+        object.__setattr__(self, "tau", np.float32(self.tau))
+        object.__setattr__(self, "iter_cap", np.int32(self.iter_cap))
 
 
 def default_tiers(tau: float, max_iters: int) -> tuple[KnobTier, ...]:

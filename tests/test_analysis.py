@@ -1,0 +1,220 @@
+"""Static contract checker: registry, linters, and mutation sensitivity.
+
+Three layers, mirroring how the checker is built:
+
+1. the registry — declaration semantics (idempotent re-register, loud
+   conflicts, the compile-count arithmetic in assert_compile_contract);
+2. the lint passes — each rule on minimal good/bad programs, including the
+   one subtlety the real codebase exercised: ``random_split`` of a
+   ``fold_in``-derived key inside a loop body is counter-based fan-out,
+   NOT a violation;
+3. the seeded mutations (repro.analysis.mutations) — every deliberately
+   broken executable must be caught, or the checker is vacuously green.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import jaxpr_lint, mutations
+from repro.analysis.contracts import (
+    ExecutableContract,
+    all_contracts,
+    assert_compile_contract,
+    contract_for,
+    register_contract,
+)
+from repro.serving.batched import BatchedFusedServer
+from repro.serving.degrade import LaneKnobs
+
+from serving_fixtures import SMALL_CFG, make_small_bundle
+
+
+# ------------------------------------------------------------- registry
+def test_builders_register_their_contracts_on_import():
+    names = set(all_contracts())
+    assert {"fused", "chunk", "refill", "sharded_lanes"} <= names
+    assert contract_for("fused").executables_per_bucket == 1
+    assert contract_for("fused").collectives == 0
+    assert contract_for("sharded_lanes").collectives == 0
+    assert contract_for("chunk").while_body_flat
+    assert contract_for("refill").donated
+
+
+def test_reregister_identical_is_noop_conflict_raises():
+    c = contract_for("fused")
+    assert register_contract(c) is c  # idempotent
+    evil = ExecutableContract(
+        name="fused", builder=c.builder, executables_per_bucket=99
+    )
+    with pytest.raises(ValueError, match="conflicting contract"):
+        register_contract(evil)
+
+
+def test_unknown_contract_names_the_known_ones():
+    with pytest.raises(KeyError, match="fused"):
+        contract_for("definitely_not_registered")
+
+
+class _FakeServer:
+    def __init__(self, count, buckets):
+        self.compile_count = count
+        self.compiled_buckets = buckets
+
+
+def test_assert_compile_contract_arithmetic():
+    assert_compile_contract(_FakeServer(2, [128, 1024]), "fused")
+    assert_compile_contract(_FakeServer(4, [128, 1024]), ("refill", "chunk"))
+    with pytest.raises(AssertionError, match="'fused'"):
+        assert_compile_contract(_FakeServer(3, [128, 1024]), "fused")
+    with pytest.raises(AssertionError, match="refill"):
+        assert_compile_contract(_FakeServer(5, [128, 1024]), ("refill", "chunk"))
+    with pytest.raises(AssertionError, match="cap buckets"):
+        assert_compile_contract(
+            _FakeServer(2, [128, 1024]), "fused", buckets=[128, 2048]
+        )
+
+
+def test_server_integration_check_compile_contract():
+    srv = BatchedFusedServer(make_small_bundle(), SMALL_CFG, batch_size=4)
+    srv.serve_batch([{"g": 0}])
+    srv.check_compile_contract(buckets=[128])
+    srv._compile_count += 1  # simulate an untracked recompile
+    with pytest.raises(AssertionError, match="'fused'"):
+        srv.check_compile_contract()
+
+
+# ------------------------------------------------------------ RNG rules
+def _while_jaxpr(body, carry):
+    return jax.make_jaxpr(
+        lambda c: jax.lax.while_loop(lambda c: c[-1] < 8, body, c)
+    )(carry)
+
+
+def test_counter_based_fold_in_loop_is_clean():
+    base = jax.random.PRNGKey(0)
+
+    def body(c):
+        acc, i = c
+        k = jax.random.fold_in(base, i)
+        return acc + jax.random.normal(k, ()), i + 1
+
+    jaxpr = _while_jaxpr(body, (jnp.float32(0.0), jnp.int32(0)))
+    assert jaxpr_lint.check_rng(jaxpr, "good/fold_in") == []
+
+
+def test_split_of_fold_in_key_in_loop_is_clean():
+    """Fixed fan-out of a counter-derived key: bitwise parity preserved."""
+    base = jax.random.PRNGKey(0)
+
+    def body(c):
+        acc, i = c
+        k1, k2 = jax.random.split(jax.random.fold_in(base, i))
+        return acc + jax.random.normal(k1, ()) * jax.random.uniform(k2), i + 1
+
+    jaxpr = _while_jaxpr(body, (jnp.float32(0.0), jnp.int32(0)))
+    assert jaxpr_lint.check_rng(jaxpr, "good/fold_in_fanout") == []
+
+
+def test_split_without_fold_in_is_flagged():
+    def body(c):
+        key, acc, i = c
+        key, sub = jax.random.split(key)
+        return key, acc + jax.random.normal(sub, ()), i + 1
+
+    jaxpr = _while_jaxpr(
+        body, (jax.random.PRNGKey(0), jnp.float32(0.0), jnp.int32(0))
+    )
+    found = jaxpr_lint.check_rng(jaxpr, "bad/split")
+    assert found and all(f.contract == "rng" for f in found)
+
+
+def test_typed_key_carry_is_flagged():
+    def body(c):
+        key, i = c
+        return jax.random.fold_in(key, i), i + 1  # evolved key re-carried
+
+    jaxpr = _while_jaxpr(body, (jax.random.key(0), jnp.int32(0)))
+    found = jaxpr_lint.check_rng(jaxpr, "bad/key_carry")
+    assert any("carry" in f.where for f in found)
+
+
+def test_split_in_scan_without_fold_in_is_flagged():
+    def step(key, _):
+        key, sub = jax.random.split(key)
+        return key, jax.random.normal(sub, ())
+
+    jaxpr = jax.make_jaxpr(
+        lambda k: jax.lax.scan(step, k, None, length=4)
+    )(jax.random.PRNGKey(0))
+    assert jaxpr_lint.check_rng(jaxpr, "bad/scan_split")
+
+
+# ------------------------------------------------ host-sync and dtypes
+def test_callback_in_loop_flagged_as_per_iteration():
+    def body(c):
+        jax.debug.print("i={i}", i=c[1])
+        return c[0] + 1.0, c[1] + 1
+
+    jaxpr = _while_jaxpr(body, (jnp.float32(0.0), jnp.int32(0)))
+    found = jaxpr_lint.check_host_sync(jaxpr, "bad/debug_print")
+    assert any("loop body" in f.message for f in found)
+
+
+def test_traced_bool_coercion_becomes_a_finding():
+    def branchy(x):
+        if x > 0:  # traced-bool coercion: host sync at trace time
+            return x
+        return -x
+
+    jaxpr, findings = jaxpr_lint.trace_for_lint(
+        branchy, jnp.float32(1.0), executable="bad/bool"
+    )
+    assert jaxpr is None
+    assert findings and findings[0].contract == "host_sync"
+
+
+def test_weak_input_flagged_pinned_input_clean():
+    f = lambda x, d: x * d  # noqa: E731
+    weak = jax.make_jaxpr(f)(jnp.zeros((4,), jnp.float32), 0.5)
+    found = jaxpr_lint.check_dtypes(weak, "bad/weak")
+    assert found and found[0].contract == "weak_type_inputs"
+    strong = jax.make_jaxpr(f)(jnp.zeros((4,), jnp.float32), np.float32(0.5))
+    assert jaxpr_lint.check_dtypes(strong, "good/pinned") == []
+
+
+def test_lane_knobs_are_pinned_at_construction():
+    """Satellite of the same contract: LaneKnobs can never leak a weak
+    scalar into a traced call, no matter what the call site does."""
+    kn = LaneKnobs(delta=0.5, tau=0.95, iter_cap=64)
+    assert kn.delta.dtype == np.float32
+    assert kn.tau.dtype == np.float32
+    assert kn.iter_cap.dtype == np.int32
+    jaxpr = jax.make_jaxpr(lambda x, d: x * d)(
+        jnp.zeros((2,), jnp.float32), kn.delta
+    )
+    assert jaxpr_lint.check_dtypes(jaxpr, "knobs") == []
+
+
+# ------------------------------------------------------------ mutations
+@pytest.mark.parametrize("name", sorted(mutations.MUTATIONS))
+def test_seeded_mutation_is_caught(name):
+    findings = mutations.MUTATIONS[name]()
+    assert findings, f"checker is blind to seeded mutation {name!r}"
+    for f in findings:
+        # actionable: names the violated contract and where
+        assert f.contract and f.message and f.executable
+
+
+def test_mutation_messages_name_the_contract_field():
+    by_name = {
+        "injected_collective": "collectives",
+        "split_rng_bootstrap": "rng",
+        "dropped_donation": "donated",
+        "weak_type_knob": "weak_type_inputs",
+        "host_callback_in_loop": "host_sync",
+        "cap_leak_in_loop_body": "while_body_flat",
+    }
+    for name, field in by_name.items():
+        found = mutations.MUTATIONS[name]()
+        assert any(f.contract == field for f in found), (name, found)

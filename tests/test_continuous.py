@@ -220,13 +220,14 @@ def test_compile_count_two_per_bucket_across_fills():
     table, _ = srv.admit(table, 128, [(1, {"g": 5}, None)])
     table, _ = _drain_table(srv, table)
     assert srv.compile_count == 2
-    assert srv.compiled_buckets == [128]
+    # the refill+chunk 2-per-bucket arithmetic lives in the contract registry
+    # (repro.analysis.contracts), shared with python -m repro.analysis.check
+    srv.check_compile_contract(buckets=[128])
     # a new cap bucket is the ONLY compile trigger: two more executables
     big = srv.new_table(1024)
     big, _ = srv.admit(big, 1024, [(0, {"g": 8}, None)])
     _drain_table(srv, big)
-    assert srv.compile_count == 4
-    assert srv.compiled_buckets == [128, 1024]
+    srv.check_compile_contract(buckets=[128, 1024])
     assert srv.refill_compiles == srv.chunk_compiles == 2
 
 
@@ -307,7 +308,7 @@ def test_mesh_table_matches_unsharded():
     ob, om = _table_trace(base, reqs), _table_trace(mesh, reqs)
     for key in ("z", "it", "y_hat", "prob", "done"):
         np.testing.assert_array_equal(ob[key], om[key])
-    assert mesh.compile_count == 2
+    mesh.check_compile_contract()
 
 
 @pytest.mark.skipif(

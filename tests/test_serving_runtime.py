@@ -76,13 +76,15 @@ def test_one_compile_per_cap_bucket_across_fills(small_bundle):
     r3 = srv.serve_batch([{"g": 1}, {"g": 2}, {"g": 3}])
     r4 = srv.serve_batch([{"g": c} for c in range(4)])
     assert srv.compile_count == 1, "fill variation must not recompile"
-    assert srv.compiled_buckets == [128]
+    # the 1-executable-per-bucket arithmetic lives in the contract registry
+    # (repro.analysis.contracts), shared with python -m repro.analysis.check
+    srv.check_compile_contract(buckets=[128])
     assert r1.lanes == r3.lanes == r4.lanes == 4
     assert (r1.y_hat.shape, r3.y_hat.shape, r4.y_hat.shape) == ((1,), (3,), (4,))
     # a new cap bucket is the ONLY thing that compiles
     rb = srv.serve_batch([{"g": 8}])
     assert srv.compile_count == 2
-    assert srv.compiled_buckets == [128, 1024]
+    srv.check_compile_contract(buckets=[128, 1024])
     assert rb.cap == 1024
 
 

@@ -152,10 +152,10 @@ def test_sharded_compile_count_per_bucket_across_fills(small_bundle):
     srv.serve_batch([{"g": 1}, {"g": 2}, {"g": 3}])
     srv.serve_batch([{"g": c} for c in range(4)])
     assert srv.compile_count == 1, "fill variation must not recompile"
-    assert srv.compiled_buckets == [128]
+    # sharded servers assert through the 'sharded_lanes' registry contract
+    srv.check_compile_contract(buckets=[128])
     srv.serve_batch([{"g": 8}])  # a new cap bucket is the ONLY compile trigger
-    assert srv.compile_count == 2
-    assert srv.compiled_buckets == [128, 1024]
+    srv.check_compile_contract(buckets=[128, 1024])
 
 
 # ------------------------------------------------- per-device accounting
