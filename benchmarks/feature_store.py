@@ -1,0 +1,129 @@
+"""Online feature store: hot-group cache vs per-request precompute (PR 9).
+
+A skewed (hot-group) request log served twice per cap bucket:
+
+* **before** — the uncached fused server: every request re-gathers its
+  (k, cap) host buffers (H2D) and re-runs the AFC precompute inside the
+  program.  Under the ``auto`` strategy this is the small-cap regime that
+  regressed in the PR-5 ``incremental_afc`` sweep (rescan wins the loop
+  body but precompute dominates the request at cap <= 1k).
+* **after** — the same server with ``cache_size`` set: hot keys are served
+  from the version-keyed LRU (serving/feature_cache.py), so a hit pays
+  zero precompute and zero H2D — only the already-compiled prebuilt
+  dispatch.
+
+Writes the ``feature_store`` section of BENCH_fused.json: steady-state
+latency + speedup per cap, host-side ``cache.get`` hit/miss cost (the
+"cached precompute ~ 0" evidence), and the small-cap verdict — cached
+speedup must be >= 1.0x at EVERY cap <= 1k, erasing the regression the
+cache-aware ``resolve_afc_plan`` heuristic exists to fix.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    DEFAULT_CFG,
+    QUICK,
+    csv_row,
+    latency_stats,
+    write_bench_json,
+)
+from repro.core.executor import BiathlonConfig
+from repro.serving import BiathlonServer
+
+# every cap <= 1k (the regressed regime) plus one large cap as the control
+CAPS = (256, 1024) if QUICK else (256, 512, 1024, 8192)
+PIPE = "turbofan"
+# hot-key skew: passes over the same few groups — the head of a production
+# key distribution, where the LRU converges to all-hits
+HOT_GROUPS = 3
+PASSES = 2 if QUICK else 4
+
+
+def _hot_log(b, n_groups: int, passes: int) -> list[dict]:
+    reqs = b.requests[:n_groups]
+    return [r for _ in range(passes) for r in reqs]
+
+
+def _steady_state(srv, log) -> dict:
+    """Serve the log once to warm (compiles + cache fills), then measure."""
+    for req in log:
+        srv.serve(req)
+    lat = []
+    for req in log:
+        t0 = time.perf_counter()
+        srv.serve(req)
+        lat.append(time.perf_counter() - t0)
+    return latency_stats(lat)
+
+
+def _get_cost_us(srv, req, cap_hint: int) -> dict:
+    """Host-side cache.get latency: hit vs (evict-forced) miss."""
+    p = srv.pipeline
+    specs = p.agg_specs(req)
+    cap = min(srv._cap, cap_hint)
+    srv.cache.get(specs, cap)  # ensure resident
+    t0 = time.perf_counter()
+    entry = srv.cache.get(specs, cap)
+    hit_us = (time.perf_counter() - t0) * 1e6
+    srv.cache._entries.clear()  # force the cold path once
+    t0 = time.perf_counter()
+    srv.cache.get(specs, cap)
+    miss_us = (time.perf_counter() - t0) * 1e6
+    assert entry is not None
+    return {"hit_us": float(hit_us), "miss_us": float(miss_us)}
+
+
+def run(caps=CAPS) -> list[str]:
+    from repro.data.synthetic import make_pipeline
+
+    out = []
+    cfg = BiathlonConfig(**DEFAULT_CFG)
+    payload: dict = {
+        "config": {**DEFAULT_CFG, "hot_groups": HOT_GROUPS, "passes": PASSES},
+        "caps": list(caps),
+        "pipeline": PIPE,
+        "per_cap": {},
+    }
+    small_cap_speedups = {}
+    for cap in caps:
+        # 0.79*cap keeps every group inside one power-of-two bucket (= cap)
+        b = make_pipeline(
+            PIPE, rows_per_group=int(cap * 0.79), n_train_groups=40,
+            n_serve_groups=max(HOT_GROUPS, 4), n_requests=HOT_GROUPS,
+        )
+        log = _hot_log(b, HOT_GROUPS, PASSES)
+        before_srv = BiathlonServer(b, cfg, mode="fused")
+        before = _steady_state(before_srv, log)
+        after_srv = BiathlonServer(b, cfg, mode="fused", cache_size=16)
+        after = _steady_state(after_srv, log)
+        after_srv.check_compile_contract()  # hits minted zero executables
+        get_cost = _get_cost_us(after_srv, log[0], cap)
+        speedup = before["mean_us"] / after["mean_us"]
+        if cap <= 1024:
+            small_cap_speedups[str(cap)] = speedup
+        payload["per_cap"][str(cap)] = {
+            "before": before,
+            "after": after,
+            "speedup": speedup,
+            "cache_get": get_cost,
+            "cache_stats": after_srv.cache.stats,
+        }
+        out.append(
+            csv_row(
+                f"perf/feature_store/{PIPE}@{cap}",
+                after["mean_us"],
+                f"before_us={before['mean_us']:.0f};speedup={speedup:.2f};"
+                f"hit_get_us={get_cost['hit_us']:.0f};"
+                f"hits={after_srv.cache.stats['hits']}",
+            )
+        )
+    payload["small_cap"] = {
+        "speedups": small_cap_speedups,
+        "all_geq_1": bool(all(s >= 1.0 for s in small_cap_speedups.values())),
+    }
+    write_bench_json("feature_store", payload)
+    return out

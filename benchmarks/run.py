@@ -15,6 +15,7 @@ def main() -> None:
     from benchmarks import (
         breakdown,
         end_to_end,
+        feature_store,
         fused_vs_host,
         kernel_micro,
         median_bootstrap,
@@ -43,6 +44,9 @@ def main() -> None:
         "perf_fused_vs_host_holistic": fused_vs_host.run_holistic,
         # incremental-AFC cap sweep (PR 5): rescan vs prefix-stats loop body
         "perf_incremental_afc": fused_vs_host.run_large_n,
+        # hot-group feature cache (PR 9): cached precompute ~0, small-cap
+        # speedup >= 1 (BENCH_fused.json["feature_store"])
+        "perf_feature_store": feature_store.run,
         "perf_serving_load": serving_load.run,
         # SLO-aware degradation: latency/guarantee Pareto sweep + bounded
         # 3x-overload run (BENCH_serving.json["adaptive_slo"]) — wired here

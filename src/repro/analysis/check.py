@@ -50,6 +50,7 @@ from repro.launch.hlo_stats import collect_collective_stats
 from repro.launch.mesh import make_serving_mesh
 from repro.serving.batched import BatchedFusedServer, lane_request_inputs
 from repro.serving.continuous import ContinuousBatchedServer
+from repro.serving.server import BiathlonServer
 
 __all__ = ["main", "run_checks"]
 
@@ -156,6 +157,39 @@ def _compile_contract_findings(srv: Any, exe: str) -> list[LintFinding]:
         )]
 
 
+def cache_coherence_findings(
+    cached: Any, oracle: Any, requests: Sequence[dict[str, Any]], exe: str
+) -> list[LintFinding]:
+    """Serve the same log through a cache-fed server and an uncached oracle.
+
+    Any divergence is a stale read: the z-plans are a bitwise contract
+    (incremental and rescan AFC agree exactly, the PR-5 parity property),
+    so a cached entry whose versions lag the store shows up as a z or
+    prediction mismatch.  Also the sensitivity oracle for the
+    ``stale_cache_read`` mutant (analysis/mutations.py) — a cache keyed
+    without group versions must trip this probe.
+    """
+    findings: list[LintFinding] = []
+    for i, req in enumerate(requests):
+        a = cached.serve(req)
+        b = oracle.serve(req)
+        same_z = bool(np.array_equal(a["z"], b["z"]))
+        scale = max(abs(b["y_hat"]), 1.0)
+        same_y = abs(a["y_hat"] - b["y_hat"]) <= 1e-4 * scale
+        if not (same_z and same_y):
+            findings.append(LintFinding(
+                contract="cache_version_key", executable=exe,
+                where=f"request[{i}]",
+                message=(
+                    "cache-fed serve diverged from the uncached oracle "
+                    f"(y {a['y_hat']:.6g} vs {b['y_hat']:.6g}, "
+                    f"z match={same_z}): stale entry served — the cache "
+                    "key must include the per-spec group versions"
+                ),
+            ))
+    return findings
+
+
 # --------------------------------------------------------- per-executable
 def check_fused(
     bundle: Any, *, mesh: Any = None, n_devices: int = 1
@@ -221,6 +255,84 @@ def check_continuous(
     return [(exe_r, findings + fr, facts_r), (exe_c, fc, facts_c)]
 
 
+def check_feature_cache(
+    bundle: Any,
+) -> tuple[str, list[LintFinding], dict[str, Any]]:
+    """Cache-fed serving (PR 9): hits mint nothing, appends stay coherent.
+
+    Three probes on top of the static lint of the prebuilt batch program:
+
+    1. compile contract — the cached server's trace hooks must show exactly
+       ``fused_prebuilt + afc_precompute`` executables per cap bucket;
+    2. hit path — re-serving a resident key must compile ZERO new
+       executables (the whole point of device-resident precompute);
+    3. append coherence — after ``Table.append`` on a served group, the
+       cached server must match an uncached oracle (version-keyed entries
+       can never serve stale data).
+    """
+    exe = f"{bundle.name}/fused_prebuilt"
+    srv = BiathlonServer(bundle, CFG, mode="fused", cache_size=8)
+    reqs = list(bundle.requests[:3])
+    for req in reqs:
+        srv.serve(req)
+    findings = _compile_contract_findings(srv, exe)
+    before = srv.compile_count
+    srv.serve(reqs[0])
+    hit_clean = srv.compile_count == before
+    if not hit_clean:
+        findings.append(LintFinding(
+            contract="executables_per_bucket", executable=exe,
+            where="<cache hit>",
+            message=(
+                f"cache-hit serve minted {srv.compile_count - before} "
+                "executable(s); hits must re-dispatch the bucket's "
+                "existing prebuilt program"
+            ),
+        ))
+    # append-coherence probe: grow a served group, then diff against an
+    # uncached oracle (fresh server; the store is shared, so the oracle
+    # re-gathers the post-append truth)
+    oracle = BiathlonServer(bundle, CFG, mode="fused")
+    t, _c, g = bundle.pipeline.agg_specs(reqs[0])[0]
+    table = bundle.store[t]
+    table.append(
+        {name: [float(np.asarray(col).mean()) + 3.0]
+         for name, col in table.columns.items()},
+        group_key=g,
+    )
+    coherence = cache_coherence_findings(srv, oracle, reqs, exe)
+    findings += coherence
+
+    # static lint of the prebuilt batch program: the donated stacked values
+    # buffer must still alias through lane_vals with tables as an input
+    bsrv = BatchedFusedServer(bundle, CFG, batch_size=LANES, cache_size=8)
+    bsrv.serve_batch(reqs)
+    cap = bsrv.batch_cap(reqs)
+    p = bundle.pipeline
+    entries = [bsrv.cache.get(p.agg_specs(r), cap) for r in reqs]
+    lane_entries = entries + [entries[0]] * (LANES - len(reqs))
+    args = (
+        jnp.stack([e.vals for e in lane_entries]),
+        jnp.stack([e.n for e in lane_entries]),
+        jnp.broadcast_to(bsrv._agg_ids, (LANES, p.k)),
+        jnp.zeros((LANES,), jnp.float32) + jnp.float32(1.0),
+        jnp.zeros((LANES, len(p.exact_features)), jnp.float32),
+        jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[e.tables for e in lane_entries]
+        ),
+        jnp.asarray(np.arange(LANES) < len(reqs)),
+        jnp.full((LANES,), CFG.tau, jnp.float32),
+        jnp.full((LANES,), CFG.max_iters, jnp.int32),
+    )
+    f2, facts = _lint_static(
+        bsrv._batched, args, contract_for("fused_prebuilt"), exe,
+        min_alias_bytes=args[0].nbytes, n_devices=1,
+    )
+    facts["hit_zero_compiles"] = hit_clean
+    facts["append_coherent"] = not coherence
+    return exe, findings + f2, facts
+
+
 def check_flatness() -> tuple[str, list[LintFinding], dict[str, Any]]:
     """Incremental-AFC while-body flatness probe (pipeline-independent).
 
@@ -276,6 +388,10 @@ def run_checks(
         for exe, f, fa in check_continuous(bundle):
             findings += f
             facts[exe] = fa
+        # LAST per pipeline: the append-coherence probe mutates the store
+        exe, f, fa = check_feature_cache(bundle)
+        findings += f
+        facts[exe] = fa
     if flatness:
         exe, f, fa = check_flatness()
         findings += f

@@ -19,6 +19,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis import hlo_lint, jaxpr_lint
 from repro.analysis.jaxpr_lint import LintFinding
@@ -187,6 +188,47 @@ def cap_leak_in_loop_body() -> list[LintFinding]:
     )
 
 
+def stale_cache_read() -> list[LintFinding]:
+    """A feature cache keyed WITHOUT group versions.
+
+    The classic broken serving cache: the key identifies the request shape
+    but not data freshness, so ``Table.append`` leaves a stale entry
+    resident and every later hit silently serves pre-append aggregates.
+    ``FeatureCache``'s ``key_fn`` injection seam plants exactly that bug;
+    the append-coherence probe (``analysis.check.cache_coherence_findings``)
+    must see the cached server diverge from the uncached oracle.
+    """
+    from repro.analysis.check import cache_coherence_findings
+    from repro.core.executor import BiathlonConfig
+    from repro.data.store import bucket_size
+    from repro.data.synthetic import make_pipeline
+    from repro.serving.server import BiathlonServer
+
+    b = make_pipeline("turbofan", rows_per_group=120, n_train_groups=20,
+                      n_serve_groups=2, n_requests=2)
+    cfg = BiathlonConfig(m=32, m_sobol=8, n_bootstrap=16)
+    srv = BiathlonServer(b, cfg, mode="fused", cache_size=4)
+    # the seeded bug: freshness dropped from the key (version-less cache)
+    srv.cache._key_fn = lambda store, specs, cap: ()
+    req = b.requests[0]
+    srv.serve(req)  # entry now resident at the broken key
+    t, _c, g = b.pipeline.agg_specs(req)[0]
+    table = b.store[t]
+    # grow the served group WITHOUT crossing its power-of-two bucket (a
+    # bucket change would mint a fresh key and mask the staleness)
+    n = table.group_size(g)
+    grow = max(1, min(6, bucket_size(n) - n))
+    table.append(
+        {name: [float(np.asarray(col).mean()) + 5.0] * grow
+         for name, col in table.columns.items()},
+        group_key=np.full(grow, g),
+    )
+    oracle = BiathlonServer(b, cfg, mode="fused")
+    return cache_coherence_findings(
+        srv, oracle, [req], "mutant/stale_cache_read"
+    )
+
+
 #: name -> builder; each must return >= 1 finding or the checker is blind.
 MUTATIONS: dict[str, Callable[[], list[LintFinding]]] = {
     "injected_collective": injected_collective,
@@ -195,4 +237,5 @@ MUTATIONS: dict[str, Callable[[], list[LintFinding]]] = {
     "weak_type_knob": weak_type_knob,
     "host_callback_in_loop": host_callback_in_loop,
     "cap_leak_in_loop_body": cap_leak_in_loop_body,
+    "stale_cache_read": stale_cache_read,
 }

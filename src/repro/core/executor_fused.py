@@ -113,8 +113,11 @@ from repro.kernels.sampled_agg.ops import (
 )
 from repro.kernels.sampled_agg.prefix_stats import (
     HolisticRankIndex,
+    append_power_sums,
     build_rank_index,
+    merge_sorted_prefix,
     prefix_moments_at,
+    rank_index_from_sorted,
     select_ranks_indexed,
 )
 
@@ -123,6 +126,8 @@ f32 = jnp.float32
 __all__ = [
     "FusedResult",
     "LaneState",
+    "PrebuiltTables",
+    "build_afc_precompute",
     "build_chunked_executor",
     "build_fused_executor",
     "empty_rank_index",
@@ -131,6 +136,23 @@ __all__ = [
     "shard_lanes_executor",
     "shard_lanes_state_executor",
 ]
+
+
+class PrebuiltTables(NamedTuple):
+    """Device-resident incremental-AFC precompute for one request.
+
+    The handle the feature-store cache (serving/feature_cache.py) passes to
+    a ``prebuilt=True`` executor instead of letting it run its internal
+    ``core.precompute``: ``ptab (k, cap, 4)`` prefix power-sum tables,
+    ``shift (k,)`` their accumulation origin (= ``vals[:, 0]``), and the
+    holistic :class:`HolisticRankIndex` (zero-size when the pipeline has no
+    holistic features).  Built by :func:`build_afc_precompute`, which also
+    owns the append-event delta refresh — the executor only ever reads it.
+    """
+
+    ptab: jnp.ndarray
+    shift: jnp.ndarray
+    rindex: HolisticRankIndex
 
 
 class FusedResult(NamedTuple):
@@ -365,6 +387,7 @@ def _executor_core(
     approx,
     n_boot: int,
     base_key,
+    cached: bool = False,
 ):
     """The per-iteration machinery BOTH executors trace through.
 
@@ -374,6 +397,9 @@ def _executor_core(
     tests assert.  The AFC strategy is resolved per trace from the buffer
     cap (``resolve_afc_plan(afc_backend, cap)``), so a cap bucket always
     gets one consistent strategy across init/loop/chunk programs.
+    ``cached=True`` (the prebuilt-tables executors) tells the resolver the
+    precompute is amortized by the feature-store cache, flipping "auto" to
+    the incremental path at every cap.
     """
     u_ami = qmc_uniforms(m, k)                       # (m, k) static
     u_sob = qmc_uniforms(m_sobol, 2 * k, None)       # (m_sobol, 2k)
@@ -438,7 +464,9 @@ def _executor_core(
         what lets the holistic membership counts be precomputed per
         candidate plan.  Returns ``(None, None, None)`` under rescan.
         """
-        incremental, use_kernel = resolve_afc_plan(afc_backend, cap=vals.shape[1])
+        incremental, use_kernel = resolve_afc_plan(
+            afc_backend, cap=vals.shape[1], cached=cached
+        )
         if not incremental:
             return None, None, None
         shift = vals[:, 0]
@@ -465,7 +493,9 @@ def _executor_core(
         while_loop body stays shape- and key-static and the two
         strategies stay z-plan-parity comparable.
         """
-        incremental, use_kernel = resolve_afc_plan(afc_backend, cap=vals.shape[1])
+        incremental, use_kernel = resolve_afc_plan(
+            afc_backend, cap=vals.shape[1], cached=cached
+        )
         if incremental:
             value, sigma = estimates_from_power_sums(
                 prefix_moments_at(ptab, z), z, n, agg_ids, shift
@@ -601,8 +631,22 @@ def build_fused_executor(
     n_boot: int = 256,
     approximate: Sequence[bool] | None = None,
     boot_seed: int = 0,
+    prebuilt: bool = False,
 ):
     """Returns jit-able ``run(vals (k,cap), n (k,), agg_ids (k,), delta) -> FusedResult``.
+
+    ``prebuilt=True`` builds the cache-fed twin: ``run(vals, n, agg_ids,
+    delta, exact, tables, active=None, tau=None, iter_cap=None)`` takes a
+    :class:`PrebuiltTables` (built once by :func:`build_afc_precompute` and
+    kept device-resident by the feature-store cache) instead of running the
+    internal per-request precompute — a cache hit pays zero precompute and
+    zero H2D re-transfer.  The AFC strategy resolves with ``cached=True``
+    (incremental at every cap under plain "auto"; the env override still
+    wins, in which case the tables ride along unused on the rescan path).
+    Everything after the precompute is the same ``_executor_core`` body, so
+    cache-hit and cache-miss dispatches of the same executable are
+    bitwise-identical and a prebuilt run matches the plain executor
+    wherever both resolve to the same strategy.
 
     ``model_fn``: (rows (n,k), exact (e,)) -> (n,) predictions (regression
     values or class ids); must be jittable — tabular models and LM heads both
@@ -670,12 +714,11 @@ def build_fused_executor(
         alpha=alpha, gamma=gamma, max_iters=max_iters, afc_backend=afc_backend,
         hol_idx=hol_idx, n_hol=n_hol, qs=qs, approx=approx,
         n_boot=int(n_boot), base_key=jax.random.PRNGKey(boot_seed),
+        cached=prebuilt,
     )
     static_tau, static_max_iters = tau, max_iters
 
-    @jax.jit
-    def run(vals, n, agg_ids, delta, exact, active=None, tau=None,
-            iter_cap=None) -> FusedResult:
+    def _knobs(active, tau, iter_cap):
         act = jnp.asarray(True) if active is None else active
         # degradation knobs: traced when supplied, compile-time otherwise
         tau = static_tau if tau is None else tau
@@ -684,13 +727,10 @@ def build_fused_executor(
             if iter_cap is None
             else jnp.minimum(jnp.asarray(iter_cap, jnp.int32), static_max_iters)
         )
-        cap = vals.shape[1]
-        n = jnp.minimum(n.astype(jnp.int32), cap)
-        # exact-only operators (Fig. 10 ablation) consume their full groups
-        # from z⁰ on — the planner then never selects them (exhausted).
-        z0 = jnp.where(approx, initial_plan(n, alpha), n)
-        step = gamma_abs(n, gamma)
-        ptab, shift, rindex = core.precompute(vals, n, z0, step)
+        return act, tau, cap_eff
+
+    def _finish(vals, n, agg_ids, delta, exact, act, tau, cap_eff,
+                z0, step, ptab, shift, rindex) -> FusedResult:
         carry0 = core.init_eval(
             vals, n, agg_ids, exact, delta, act, tau, cap_eff,
             z0, ptab, shift, rindex,
@@ -709,6 +749,39 @@ def build_fused_executor(
             z=z,
             samples_used=jnp.where(act, jnp.sum(jnp.minimum(z, n)), 0),
         )
+
+    if prebuilt:
+
+        @jax.jit
+        def run_prebuilt(vals, n, agg_ids, delta, exact, tables,
+                         active=None, tau=None, iter_cap=None) -> FusedResult:
+            act, tau, cap_eff = _knobs(active, tau, iter_cap)
+            cap = vals.shape[1]
+            n = jnp.minimum(n.astype(jnp.int32), cap)
+            z0 = jnp.where(approx, initial_plan(n, alpha), n)
+            step = gamma_abs(n, gamma)
+            incremental, _ = resolve_afc_plan(afc_backend, cap=cap, cached=True)
+            ptab = tables.ptab if incremental else None
+            shift = tables.shift if incremental else None
+            rindex = tables.rindex if (incremental and n_hol) else None
+            return _finish(vals, n, agg_ids, delta, exact, act, tau, cap_eff,
+                           z0, step, ptab, shift, rindex)
+
+        return run_prebuilt
+
+    @jax.jit
+    def run(vals, n, agg_ids, delta, exact, active=None, tau=None,
+            iter_cap=None) -> FusedResult:
+        act, tau, cap_eff = _knobs(active, tau, iter_cap)
+        cap = vals.shape[1]
+        n = jnp.minimum(n.astype(jnp.int32), cap)
+        # exact-only operators (Fig. 10 ablation) consume their full groups
+        # from z⁰ on — the planner then never selects them (exhausted).
+        z0 = jnp.where(approx, initial_plan(n, alpha), n)
+        step = gamma_abs(n, gamma)
+        ptab, shift, rindex = core.precompute(vals, n, z0, step)
+        return _finish(vals, n, agg_ids, delta, exact, act, tau, cap_eff,
+                       z0, step, ptab, shift, rindex)
 
     return run
 
@@ -735,6 +808,139 @@ FUSED_CONTRACT = register_contract(ExecutableContract(
     ),
 ))
 
+#: Prebuilt-tables twin of the fused contract: identical loop body, but the
+#: per-request precompute is hoisted out of the executable entirely (fed as
+#: the PrebuiltTables input), so the cap bucket still mints exactly one
+#: executable and cache hits re-dispatch it with zero new compiles.
+FUSED_PREBUILT_CONTRACT = register_contract(ExecutableContract(
+    name="fused_prebuilt",
+    builder="repro.core.executor_fused.build_fused_executor (prebuilt=True)",
+    executables_per_bucket=1,
+    collectives=0,
+    donated=("vals (lanes, k, cap) values buffer",),
+    while_body_flat=True,
+    description=(
+        "cache-fed fused program: PrebuiltTables replace the internal "
+        "precompute; one executable per cap bucket shared by cache hits "
+        "and misses"
+    ),
+))
+
+
+def build_afc_precompute(
+    *,
+    k: int,
+    alpha: float = 0.05,
+    gamma: float = 0.01,
+    max_iters: int = 32,
+    holistic: Sequence[int] = (),
+    quantiles: Sequence[float] | None = None,
+    approximate: Sequence[bool] | None = None,
+):
+    """The standalone incremental-AFC precompute + its append-delta refresh.
+
+    Returns ``SimpleNamespace(cold, refresh)``:
+
+    ``cold(vals (k, cap), n (k,)) -> PrebuiltTables``
+        exactly the tables ``_executor_core.precompute`` would build inside
+        a run — same shift basis (``vals[:, 0]``), same candidate ladder
+        ``min(z⁰ + i·γ, n)`` — hoisted into its own jit executable so the
+        feature-store cache can build once and re-dispatch many times.
+
+    ``refresh(vals, n, tables, j, x, aff) -> (vals', n', tables')``
+        applies ONE logged append event — value ``x (k,)`` (the appended
+        row read through each feature's column) inserted at prefix position
+        ``j`` of the groups flagged by ``aff (k,)`` — as delta updates:
+        the values buffer shifts right from j, the power-sum tables get the
+        :func:`append_power_sums` two-sum row update, and the holistic
+        index merges the event into its maintained sorted runs
+        (:func:`merge_sorted_prefix`) then recounts ``blk_cnt`` against the
+        new candidate ladder (n changed, so z⁰ and the ladder move) without
+        re-sorting.  Callers must route ``j == 0`` events to ``cold``
+        instead — they replace the shift basis.  All of j/x/aff are traced,
+        so replaying a whole append log is N dispatches of one executable.
+
+    The ladder math is deliberately duplicated from the executor core in
+    one place only (here), and the parity tests pin ``cold`` against the
+    in-executor precompute via served-result equality.
+    """
+    hol_idx, n_hol, _qs, approx = _parse_feature_spec(
+        k, holistic, quantiles, approximate
+    )
+    _, use_kernel = resolve_afc_plan("auto", cached=True)
+    n_z = max_iters + 1
+
+    def zcand_of(n):
+        z0 = jnp.where(approx, initial_plan(n, alpha), n)
+        step = gamma_abs(n, gamma)
+        return jnp.minimum(
+            z0[:, None] + jnp.arange(n_z, dtype=jnp.int32)[None, :] * step,
+            n[:, None],
+        )
+
+    @jax.jit
+    def cold(vals, n) -> PrebuiltTables:
+        cap = vals.shape[1]
+        n = jnp.minimum(n.astype(jnp.int32), cap)
+        shift = vals[:, 0]
+        ptab = prefix_power_sums(vals, shift, use_kernel=use_kernel)
+        if n_hol:
+            zc = zcand_of(n)
+            rindex = build_rank_index(vals[hol_idx], n[hol_idx], zc[hol_idx])
+        else:
+            rindex = empty_rank_index()
+        return PrebuiltTables(ptab=ptab, shift=shift, rindex=rindex)
+
+    @jax.jit
+    def refresh(vals, n, tables: PrebuiltTables, j, x, aff):
+        cap = vals.shape[1]
+        n = jnp.minimum(n.astype(jnp.int32), cap)
+        j = jnp.asarray(j, jnp.int32)
+        x = jnp.asarray(x, f32)
+        aff = jnp.asarray(aff, bool)
+        c = jnp.arange(cap, dtype=jnp.int32)
+        prev = jnp.concatenate([vals[:, :1], vals[:, :-1]], axis=1)
+        inserted = jnp.where(
+            c[None, :] < j, vals, jnp.where(c[None, :] == j, x[:, None], prev)
+        )
+        vals2 = jnp.where(aff[:, None] & (j < cap), inserted, vals)
+        ptab2 = append_power_sums(tables.ptab, tables.shift, j, x, aff)
+        n2 = jnp.minimum(n + aff.astype(jnp.int32), cap)
+        if n_hol:
+            ri = tables.rindex
+            msv, msi, _ = merge_sorted_prefix(
+                ri.sorted_vals, ri.sorted_idx, n[hol_idx], cap,
+                j, x[hol_idx], aff[hol_idx],
+            )
+            block = ri.sorted_vals.shape[1] // (ri.blk_cnt.shape[-1] - 1)
+            rindex = rank_index_from_sorted(
+                msv, msi, zcand_of(n2)[hol_idx], block=block
+            )
+        else:
+            rindex = tables.rindex
+        return vals2, n2, PrebuiltTables(
+            ptab=ptab2, shift=tables.shift, rindex=rindex
+        )
+
+    return SimpleNamespace(cold=cold, refresh=refresh, n_hol=n_hol)
+
+
+#: The standalone precompute is one more executable per cap bucket on the
+#: cached serving paths (cold builds on cache misses; the delta refresh
+#: shares its jit cache entry count — one executable each, but refresh only
+#: traces when appends actually happen, so the steady-state budget is 1).
+AFC_PRECOMPUTE_CONTRACT = register_contract(ExecutableContract(
+    name="afc_precompute",
+    builder="repro.core.executor_fused.build_afc_precompute",
+    executables_per_bucket=1,
+    collectives=0,
+    description=(
+        "once-per-cache-miss precompute: prefix power-sum tables + holistic "
+        "rank index as a standalone executable whose output (PrebuiltTables) "
+        "stays device-resident in the feature-store cache"
+    ),
+))
+
 
 def build_chunked_executor(
     model_fn,
@@ -755,8 +961,16 @@ def build_chunked_executor(
     n_boot: int = 256,
     approximate: Sequence[bool] | None = None,
     boot_seed: int = 0,
+    prebuilt: bool = False,
 ):
     """Chunked twin of :func:`build_fused_executor` for continuous batching.
+
+    ``prebuilt=True`` is the cache-fed admission path: ``init`` grows a
+    trailing ``tables`` argument (:class:`PrebuiltTables` from the
+    feature-store cache) and packs those leaves into the LaneState instead
+    of running the per-request precompute; the AFC strategy resolves with
+    ``cached=True`` in both init and chunk, so every cap bucket keeps one
+    consistent LaneState structure (full-size ptab/rindex leaves).
 
     Returns ``(init, chunk)``, both jit-able per-lane functions over
     :class:`LaneState` (callers vmap/shard them; serving/continuous.py):
@@ -802,20 +1016,18 @@ def build_chunked_executor(
         alpha=alpha, gamma=gamma, max_iters=max_iters, afc_backend=afc_backend,
         hol_idx=hol_idx, n_hol=n_hol, qs=qs, approx=approx,
         n_boot=int(n_boot), base_key=jax.random.PRNGKey(boot_seed),
+        cached=prebuilt,
     )
     static_max_iters = max_iters
 
-    def init(vals, n, agg_ids, delta, exact, active, tau, iter_cap) -> LaneState:
-        cap = vals.shape[1]
-        n = jnp.minimum(n.astype(jnp.int32), cap)
+    def _pack(vals, n, agg_ids, delta, exact, active, tau, iter_cap,
+              ptab, shift, rindex) -> LaneState:
         act = jnp.asarray(active, bool)
         tau = jnp.asarray(tau, f32)
         iter_cap = jnp.asarray(iter_cap, jnp.int32)
         delta = jnp.asarray(delta, f32)
         cap_eff = jnp.minimum(iter_cap, static_max_iters)
         z0 = jnp.where(approx, initial_plan(n, alpha), n)
-        step = gamma_abs(n, gamma)
-        ptab, shift, rindex = core.precompute(vals, n, z0, step)
         carry = core.init_eval(
             vals, n, agg_ids, exact, delta, act, tau, cap_eff,
             z0, ptab, shift, rindex,
@@ -831,8 +1043,36 @@ def build_chunked_executor(
             rindex=rindex if rindex is not None else empty_rank_index(),
         )
 
+    def init(vals, n, agg_ids, delta, exact, active, tau, iter_cap) -> LaneState:
+        cap = vals.shape[1]
+        n = jnp.minimum(n.astype(jnp.int32), cap)
+        z0 = jnp.where(approx, initial_plan(n, alpha), n)
+        step = gamma_abs(n, gamma)
+        ptab, shift, rindex = core.precompute(vals, n, z0, step)
+        return _pack(vals, n, agg_ids, delta, exact, active, tau, iter_cap,
+                     ptab, shift, rindex)
+
+    def init_prebuilt(vals, n, agg_ids, delta, exact, active, tau, iter_cap,
+                      tables: PrebuiltTables) -> LaneState:
+        cap = vals.shape[1]
+        n = jnp.minimum(n.astype(jnp.int32), cap)
+        incremental, _ = resolve_afc_plan(afc_backend, cap=cap, cached=True)
+        state = _pack(
+            vals, n, agg_ids, delta, exact, active, tau, iter_cap,
+            tables.ptab if incremental else None,
+            tables.shift if incremental else None,
+            tables.rindex if (incremental and n_hol) else None,
+        )
+        # keep the full-size leaves in the table even when the env override
+        # forces rescan — one LaneState structure per cap bucket either way
+        return state._replace(
+            ptab=tables.ptab, shift=tables.shift, rindex=tables.rindex
+        )
+
     def chunk(state: LaneState) -> LaneState:
-        incremental, _ = resolve_afc_plan(afc_backend, cap=state.vals.shape[1])
+        incremental, _ = resolve_afc_plan(
+            afc_backend, cap=state.vals.shape[1], cached=prebuilt
+        )
         ptab = state.ptab if incremental else None
         shift = state.shift if incremental else None
         rindex = state.rindex if (incremental and n_hol) else None
@@ -866,7 +1106,7 @@ def build_chunked_executor(
             done=~core.want_more(carry, state.active, state.tau, cap_eff, n),
         )
 
-    return init, chunk
+    return (init_prebuilt if prebuilt else init), chunk
 
 
 #: Continuous-table contracts: ``build_chunked_executor`` returns the

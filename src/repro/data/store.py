@@ -12,6 +12,17 @@ incremental online-aggregation property.  On a real TPU cluster the column
 buffers live sharded in HBM and the gather below is the ``sampled_agg``
 Pallas kernel's DMA; here they live in host memory / device 0.
 
+**Streaming append** (DESIGN.md § Online feature store): the paper's setting
+is *online* aggregation over continuously arriving rows, so the store is not
+a frozen snapshot.  :meth:`Table.append` extends a group's permuted prefix by
+drawing the new row's position ``j ~ Uniform{0..m}`` from the table's own
+seeded RNG stream (the sequential construction of a uniform random
+permutation), which preserves the prefix-is-SRS invariant for every prefix
+length after every append.  Each insertion bumps the group's **version** —
+the cache-invalidation signal for device-resident precompute
+(serving/feature_cache.py) — and is recorded in a bounded per-group append
+log so cached prefix tables can be *delta-updated* instead of rebuilt.
+
 The store is deliberately framework-agnostic (plain numpy in, jnp out) so the
 serving runtime, the fused executor, and the benchmarks all share it.
 """
@@ -23,7 +34,12 @@ from typing import Mapping
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Table", "ColumnStore", "bucket_size"]
+__all__ = ["Table", "ColumnStore", "bucket_size", "build_table", "MAX_APPEND_LOG"]
+
+#: Append-log depth per group.  A cached entry older than this many
+#: insertions can no longer be delta-refreshed and falls back to a full
+#: rebuild — bounding both log memory and worst-case delta-chain length.
+MAX_APPEND_LOG = 64
 
 
 def bucket_size(z: int, minimum: int = 64) -> int:
@@ -36,12 +52,29 @@ def bucket_size(z: int, minimum: int = 64) -> int:
 
 @dataclass
 class Table:
-    """Row-aligned columns + CSR-style group index over a permutation."""
+    """Row-aligned columns + CSR-style group index over a permutation.
+
+    ``versions[g]`` counts insertions into dense group ``g`` since build
+    (0 = pristine); any append bumps it, so ``(table, group, version)`` is a
+    sound cache key.  ``rng`` continues the build-time seeded stream, making
+    the whole append trajectory deterministic given (seed, append sequence).
+    """
 
     columns: dict[str, np.ndarray]
     group_ptr: np.ndarray          # (G+1,) offsets into perm
     perm: np.ndarray               # (R,) row ids, permuted within each group
     group_ids: dict[int, int]      # external group key -> dense group index
+    name: str = ""
+    rng: np.random.Generator = field(
+        default_factory=lambda: np.random.default_rng(0), repr=False
+    )
+    versions: list[int] = field(default_factory=list, repr=False)
+    # dense group -> [(version, j, row_id)] for the last MAX_APPEND_LOG
+    # insertions, oldest first (version = the group version the insertion
+    # produced; j = the drawn prefix position; row_id indexes ``columns``).
+    _log: dict[int, list[tuple[int, int, int]]] = field(
+        default_factory=dict, repr=False
+    )
 
     @property
     def n_rows(self) -> int:
@@ -51,17 +84,38 @@ class Table:
     def n_groups(self) -> int:
         return int(self.group_ptr.shape[0] - 1)
 
+    def _group_index(self, gid: int) -> int:
+        """Dense index of an external group key, or a loud ValueError.
+
+        Streaming ingest makes unknown keys an expected runtime condition
+        (a request for a user the store has never seen), so the error names
+        the table and the key instead of leaking a bare KeyError.
+        """
+        try:
+            return self.group_ids[int(gid)]
+        except KeyError:
+            raise ValueError(
+                f"table {self.name or '<unnamed>'!r}: unknown group key "
+                f"{int(gid)} (known groups: {len(self.group_ids)})"
+            ) from None
+
+    def version(self, gid: int) -> int:
+        """Insertions into the group since build — the cache-key component."""
+        g = self._group_index(gid)
+        return self.versions[g] if g < len(self.versions) else 0
+
     def group_size(self, gid: int) -> int:
-        g = self.group_ids[int(gid)]
+        g = self._group_index(gid)
         return int(self.group_ptr[g + 1] - self.group_ptr[g])
 
     def sample_prefix(self, column: str, gid: int, cap: int) -> np.ndarray:
         """First ``min(cap, N)`` permuted rows of the group, padded to cap.
 
         The prefix is the group's canonical SRS order; callers mask with the
-        live ``z``.  Padding repeats 0.0 (masked out by estimators).
+        live ``z``.  Padding repeats 0.0 (masked out by estimators); an
+        empty group is therefore the all-zero buffer with n = 0.
         """
-        g = self.group_ids[int(gid)]
+        g = self._group_index(gid)
         start, stop = int(self.group_ptr[g]), int(self.group_ptr[g + 1])
         take = min(cap, stop - start)
         rows = self.perm[start : start + take]
@@ -70,15 +124,111 @@ class Table:
         return out
 
     def full_values(self, column: str, gid: int) -> np.ndarray:
-        g = self.group_ids[int(gid)]
+        g = self._group_index(gid)
         start, stop = int(self.group_ptr[g]), int(self.group_ptr[g + 1])
         return self.columns[column][self.perm[start:stop]].astype(np.float32)
 
     def lookup(self, column: str, gid: int) -> float:
-        """Point lookup (lightweight datastore op — computed exactly)."""
-        g = self.group_ids[int(gid)]
-        row = self.perm[int(self.group_ptr[g])]
-        return float(self.columns[column][row])
+        """Point lookup (lightweight datastore op — computed exactly).
+
+        An empty group (a just-registered user with no history) reads as
+        0.0 — the same neutral value the padded sample buffers use — rather
+        than silently reading the next group's first row.
+        """
+        g = self._group_index(gid)
+        start, stop = int(self.group_ptr[g]), int(self.group_ptr[g + 1])
+        if start == stop:
+            return 0.0
+        return float(self.columns[column][self.perm[start]])
+
+    # --- streaming append --------------------------------------------------
+    def add_group(self, gid: int) -> int:
+        """Register an empty group (a new user); returns its dense index.
+
+        Idempotent for known keys.  The group starts at version 0 with zero
+        rows: lookups read 0.0 and sample buffers come back all-pad until
+        the first append.
+        """
+        key = int(gid)
+        if key in self.group_ids:
+            return self.group_ids[key]
+        g = self.n_groups
+        self.group_ptr = np.append(self.group_ptr, self.group_ptr[-1])
+        self.group_ids[key] = g
+        self._ensure_versions(g)
+        return g
+
+    def _ensure_versions(self, g: int) -> None:
+        while len(self.versions) <= g:
+            self.versions.append(0)
+
+    def append(self, rows: Mapping[str, np.ndarray], group_key) -> None:
+        """Append rows, drawing each one's SRS position from the seeded RNG.
+
+        ``rows`` maps every existing column name to a (r,) array;
+        ``group_key`` gives each row's group (unknown keys register new
+        groups).  Row i lands at position ``j ~ Uniform{0..m}`` inside its
+        group's permuted prefix (m = the group's size before the insertion)
+        — the sequential construction of a uniform random permutation, so
+        every prefix stays a simple random sample after every append.
+
+        Each insertion bumps the group's version and is logged (bounded at
+        ``MAX_APPEND_LOG`` per group) so device-resident caches can
+        delta-update instead of rebuilding.
+        """
+        group_key = np.atleast_1d(np.asarray(group_key))
+        r = group_key.shape[0]
+        missing = sorted(set(self.columns) - set(rows))
+        extra = sorted(set(rows) - set(self.columns))
+        if missing or extra:
+            raise ValueError(
+                f"table {self.name or '<unnamed>'!r}: append columns must "
+                f"match the table (missing {missing}, unexpected {extra})"
+            )
+        new_cols = {
+            k: np.atleast_1d(np.asarray(v)).astype(self.columns[k].dtype)
+            for k, v in rows.items()
+        }
+        for k, v in new_cols.items():
+            if v.shape[0] != r:
+                raise ValueError(
+                    f"table {self.name or '<unnamed>'!r}: column {k!r} has "
+                    f"{v.shape[0]} rows, group_key has {r}"
+                )
+        base = self.n_rows
+        for k in self.columns:
+            self.columns[k] = np.concatenate([self.columns[k], new_cols[k]])
+        for i in range(r):
+            g = self.add_group(int(group_key[i]))
+            row_id = base + i
+            start = int(self.group_ptr[g])
+            m = int(self.group_ptr[g + 1]) - start
+            j = int(self.rng.integers(0, m + 1))
+            self.perm = np.insert(self.perm, start + j, row_id)
+            self.group_ptr[g + 1 :] += 1
+            self._ensure_versions(g)
+            self.versions[g] += 1
+            log = self._log.setdefault(g, [])
+            log.append((self.versions[g], j, row_id))
+            del log[:-MAX_APPEND_LOG]
+
+    def events_since(
+        self, gid: int, version: int
+    ) -> list[tuple[int, int]] | None:
+        """The ``(j, row_id)`` insertions after ``version``, oldest first.
+
+        Returns ``None`` when the bounded log no longer reaches back to
+        ``version`` (or the group predates version tracking) — the caller
+        must fall back to a full rebuild.
+        """
+        g = self._group_index(gid)
+        current = self.versions[g] if g < len(self.versions) else 0
+        if version == current:
+            return []
+        log = self._log.get(g, [])
+        if not log or log[0][0] > version + 1:
+            return None
+        return [(j, row_id) for (v, j, row_id) in log if v > version]
 
 
 def build_table(
@@ -100,7 +250,10 @@ def build_table(
         perm[s:e] = rng.permutation(perm[s:e])
     cols = {k: np.asarray(v) for k, v in columns.items()}
     gids = {int(k): i for i, k in enumerate(uniq)}
-    return Table(columns=cols, group_ptr=ptr, perm=perm, group_ids=gids)
+    return Table(
+        columns=cols, group_ptr=ptr, perm=perm, group_ids=gids,
+        rng=rng, versions=[0] * len(uniq),
+    )
 
 
 @dataclass
@@ -110,6 +263,7 @@ class ColumnStore:
     tables: dict[str, Table] = field(default_factory=dict)
 
     def add(self, name: str, table: Table) -> "ColumnStore":
+        table.name = table.name or name
         self.tables[name] = table
         return self
 
@@ -136,3 +290,7 @@ class ColumnStore:
             np.int32,
         )
         return jnp.asarray(bufs), jnp.asarray(sizes)
+
+    def spec_versions(self, specs: list[tuple[str, str, int]]) -> tuple[int, ...]:
+        """Per-spec group versions — the freshness half of a cache key."""
+        return tuple(self.tables[t].version(g) for (t, _c, g) in specs)

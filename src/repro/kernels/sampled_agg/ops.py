@@ -54,7 +54,7 @@ def _resolve_backend(use_kernel: bool | None) -> bool:
 
 
 def resolve_afc_plan(
-    afc_backend: str, cap: int | None = None
+    afc_backend: str, cap: int | None = None, *, cached: bool = False
 ) -> tuple[bool, bool | None]:
     """Executor AFC strategy from the ``afc_backend`` build argument.
 
@@ -77,6 +77,15 @@ def resolve_afc_plan(
     shapes yet) keeps the incremental default.  Force-overrides — the env
     and every non-"auto" build argument — win over the heuristic, so
     parity legs stay pinned.
+
+    ``cached=True`` declares that the executor is fed **prebuilt tables**
+    from the feature-store precompute cache (serving/feature_cache.py): the
+    :data:`AFC_REF_MAX_CAP` crossover was calibrated against a per-request
+    rebuild, but a cache hit pays zero precompute, so the incremental path
+    wins at every cap and "auto" picks it regardless of the bucket
+    (``BENCH_fused.json["feature_store"]`` re-measures the crossover).
+    Explicit backends and the env override still win — the ref-parity CI
+    legs stay pinned even on cached paths.
     """
     if afc_backend == "auto":
         env = os.environ.get("REPRO_AFC_BACKEND", "auto").lower()
@@ -86,6 +95,8 @@ def resolve_afc_plan(
             return True, True
         if env in ("incremental", "inc"):
             return True, False
+        if cached:
+            return True, None
         if cap is not None and cap <= AFC_REF_MAX_CAP:
             return False, None
         return True, None

@@ -49,15 +49,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.sampled_agg.compensated import comp_cumsum, kahan_step
+from repro.kernels.sampled_agg.compensated import comp_cumsum, kahan_step, two_sum
 
 __all__ = [
     "N_POWERS",
     "prefix_power_sums",
     "prefix_power_sums_ref",
     "prefix_moments_at",
+    "append_power_sums",
     "HolisticRankIndex",
     "build_rank_index",
+    "merge_sorted_prefix",
+    "rank_counts_from_sorted",
+    "rank_index_from_sorted",
     "select_ranks_indexed",
 ]
 
@@ -229,19 +233,55 @@ def build_rank_index(
         padded = jnp.pad(padded, ((0, 0), (0, capp - cap)), constant_values=jnp.inf)
     order = jnp.argsort(padded, axis=1, stable=True).astype(jnp.int32)
     svals = jnp.take_along_axis(padded, order, axis=1)
-    member = order[:, None, :] < zcand[:, :, None]          # (h, n_z, capp)
+    return rank_index_from_sorted(svals, order, zcand, block=block)
+
+
+def rank_counts_from_sorted(
+    sidx: jnp.ndarray,      # (h, capp) original positions, sorted-value order
+    zcand: jnp.ndarray,     # (h, n_z) candidate plans
+    *,
+    block: int = BLOCK_S,
+) -> jnp.ndarray:
+    """Exclusive block-start prefix-membership counts from a sorted order.
+
+    The count half of :func:`build_rank_index`, factored out so a column
+    whose sorted order is *incrementally maintained* (merge-on-query append
+    path, DESIGN.md § Online feature store) can refresh its ``blk_cnt``
+    table — the only part that depends on the candidate ladder — without
+    re-running the argsort.
+    """
+    h, capp = sidx.shape
+    member = sidx[:, None, :] < zcand[:, :, None]           # (h, n_z, capp)
     per_blk = member.reshape(h, zcand.shape[1], capp // block, block).sum(
         axis=-1, dtype=jnp.int32
     )
-    blk_cnt = jnp.concatenate(
+    return jnp.concatenate(
         [
             jnp.zeros((h, zcand.shape[1], 1), jnp.int32),
             jnp.cumsum(per_blk, axis=-1, dtype=jnp.int32),
         ],
         axis=-1,
     )
+
+
+def rank_index_from_sorted(
+    svals: jnp.ndarray,     # (h, capp) ascending, +inf past the live prefix
+    sidx: jnp.ndarray,      # (h, capp) original positions (stable tie order)
+    zcand: jnp.ndarray,     # (h, n_z)
+    *,
+    block: int = BLOCK_S,
+) -> HolisticRankIndex:
+    """Assemble a :class:`HolisticRankIndex` from presorted value/index rows.
+
+    ``build_rank_index == rank_index_from_sorted ∘ stable-argsort``; callers
+    that maintain the sorted order themselves (:func:`merge_sorted_prefix`)
+    use this to skip the sort.
+    """
     return HolisticRankIndex(
-        sorted_vals=svals, sorted_idx=order, blk_cnt=blk_cnt, zcand=zcand
+        sorted_vals=svals,
+        sorted_idx=sidx.astype(jnp.int32),
+        blk_cnt=rank_counts_from_sorted(sidx, zcand, block=block),
+        zcand=zcand,
     )
 
 
@@ -291,3 +331,106 @@ def select_ranks_indexed(
     hit = member & (running == (r + 1)[:, :, None])
     val = jnp.sum(jnp.where(hit, gv, 0.0), axis=-1)
     return jnp.where(jnp.any(hit, axis=-1), val, jnp.inf)
+
+
+# --------------------------------------------------------------------------
+# Streaming-append delta updates (DESIGN.md § Online feature store)
+# --------------------------------------------------------------------------
+def append_power_sums(
+    ptab: jnp.ndarray,       # (k, cap, 4) prefix power-sum tables
+    shift: jnp.ndarray,      # (k,) the tables' accumulation origin
+    j: jnp.ndarray,          # () int32 insertion position, 0 < j
+    x: jnp.ndarray,          # (k,) inserted value per feature row
+    aff: jnp.ndarray | None = None,  # (k,) bool — rows the event touches
+) -> jnp.ndarray:
+    """Delta-update prefix tables for one insertion at position ``j``.
+
+    Inserting ``x`` at prefix position j maps the old row onto the new one
+    exactly: ``P'[c] = P[c]`` for c < j and ``P'[c] = P[c−1] + (x−shift)^p``
+    for c ≥ j — a shift-right plus one broadcast addition, performed as a
+    Knuth :func:`two_sum` error-free transform so each delta adds at most
+    one f32 rounding (vs the O(ε·log n) compensated rebuild).  On data where
+    f32 arithmetic is exact (integer-valued columns within 2²⁴) the result
+    is **bitwise identical** to a from-scratch :func:`prefix_power_sums_ref`
+    rebuild — the append→rebuild parity tests pin exactly that; on general
+    floats the two differ only in final-rounding placement (O(ε)).
+
+    Callers must hold two preconditions the math assumes: ``j ≥ 1`` (j = 0
+    replaces the shift basis ``vals[:, 0]`` — rebuild instead) and ``j``
+    within the buffer (``j ≥ cap`` is a no-op: the masked update never
+    fires).  ``aff`` masks the update to the feature rows whose
+    (table, group) the event belongs to.
+    """
+    k, cap, _ = ptab.shape
+    pw = _powers(x.astype(jnp.float32) - shift.astype(jnp.float32))  # (k, 4)
+    shifted = jnp.concatenate(
+        [jnp.zeros((k, 1, N_POWERS), jnp.float32), ptab[:, :-1]], axis=1
+    )
+    s, e = two_sum(shifted, pw[:, None, :])
+    upd = s + e
+    c = jnp.arange(cap, dtype=jnp.int32)
+    mask = (c[None, :] >= j) & (j < cap)
+    if aff is not None:
+        mask = mask & aff[:, None]
+    return jnp.where(mask[:, :, None], upd, ptab)
+
+
+def merge_sorted_prefix(
+    svals: jnp.ndarray,      # (h, capp) sorted values, +inf past the prefix
+    sidx: jnp.ndarray,       # (h, capp) original positions
+    n: jnp.ndarray,          # (h,) int32 live prefix lengths (<= cap)
+    cap: int,                # buffer width the positions index into
+    j: jnp.ndarray,          # () int32 insertion position
+    x: jnp.ndarray,          # (h,) inserted value per feature row
+    aff: jnp.ndarray | None = None,  # (h,) bool — rows the event touches
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Merge one appended element into maintained sorted-prefix runs.
+
+    The merge-on-query half of the holistic append path: the compacted base
+    run is the cached index's own (sorted_vals, sorted_idx) pair, the
+    pending run is the store's append log, and this routine merges one
+    pending event in O(capp) data movement — no argsort.  Ordering is
+    (value, original position) lexicographic, exactly the stable-argsort
+    order :func:`build_rank_index` produces, so the merged arrays are
+    **bitwise identical** to a full re-sort (finite column values assumed).
+
+    Steps per affected row: renumber live positions ≥ j (the buffer shifted
+    right), drop the element pushed past ``cap`` (at most one, only when the
+    buffer was full), insert (x, j) at its lexicographic rank, and normalize
+    the +inf tail to the argsort convention (positions in order).  ``j ≥
+    cap`` is a no-op (the row landed beyond the prefix buffer).  Returns the
+    merged ``(svals, sidx, n)``.
+    """
+    h, capp = svals.shape
+    pos = jnp.arange(capp, dtype=jnp.int32)
+
+    def merge_one(sv, si, nf, xf):
+        live = si < nf
+        si_r = jnp.where(live & (si >= j), si + 1, si)
+        drop = live & (si_r >= cap)
+        order = jnp.argsort(drop.astype(jnp.int32), stable=True)
+        sv2, si2 = sv[order], si_r[order]
+        nlive = nf - jnp.sum(drop).astype(jnp.int32)
+        before = (pos < nlive) & ((sv2 < xf) | ((sv2 == xf) & (si2 < j)))
+        ins = jnp.sum(before).astype(jnp.int32)
+        sv_prev = jnp.concatenate([sv2[:1], sv2[:-1]])
+        si_prev = jnp.concatenate([si2[:1], si2[:-1]])
+        sv3 = jnp.where(pos < ins, sv2, jnp.where(pos == ins, xf, sv_prev))
+        si3 = jnp.where(pos < ins, si2, jnp.where(pos == ins, j, si_prev))
+        n2 = jnp.minimum(nlive + 1, cap)
+        sv4 = jnp.where(pos < n2, sv3, jnp.inf)
+        si4 = jnp.where(pos < n2, si3, pos)
+        return sv4, si4.astype(jnp.int32), n2
+
+    msv, msi, mn = jax.vmap(merge_one)(
+        svals, sidx, n.astype(jnp.int32), x.astype(jnp.float32)
+    )
+    apply = jnp.asarray(j, jnp.int32) < cap
+    if aff is not None:
+        apply = apply & aff
+    apply = jnp.broadcast_to(apply, (h,))
+    return (
+        jnp.where(apply[:, None], msv, svals),
+        jnp.where(apply[:, None], msi, sidx),
+        jnp.where(apply, mn, n.astype(jnp.int32)),
+    )

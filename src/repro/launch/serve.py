@@ -51,6 +51,13 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan \
       --mode fused-continuous --arrival-rate 80 --batch-size 8 \
       --chunk-iters 4
+  PYTHONPATH=src python -m repro.launch.serve --pipeline turbofan \
+      --mode fused --cache-size 64
+
+``--cache-size N`` (fused modes, unsharded) turns on the hot-group feature
+cache: per-(group, version) device-resident sample buffers + AFC precompute
+served from an N-entry LRU (serving/feature_cache.py), so repeat hits on a
+hot key pay zero precompute and zero H2D transfer.
 """
 from __future__ import annotations
 
@@ -128,6 +135,11 @@ def main():
                     help="seeded fault schedule wrapped around serve_batch "
                     "(serving/faults.py)")
     ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--cache-size", type=int, default=None,
+                    help="enable the hot-group feature cache with this many "
+                    "LRU entries: fused modes serve version-keyed "
+                    "device-resident precompute (fused / fused-batched / "
+                    "fused-continuous; incompatible with --devices)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -165,6 +177,7 @@ def main():
         srv = ContinuousBatchedServer(
             bundle, cfg, batch_size=args.batch_size,
             chunk_iters=args.chunk_iters, mesh=mesh,
+            cache_size=args.cache_size,
         )
         arrivals = poisson_arrivals(
             bundle.requests, args.arrival_rate, n=args.requests,
@@ -224,7 +237,8 @@ def main():
 
             mesh = make_serving_mesh(args.devices)
         srv = BatchedFusedServer(
-            bundle, cfg, batch_size=args.batch_size, mesh=mesh
+            bundle, cfg, batch_size=args.batch_size, mesh=mesh,
+            cache_size=args.cache_size,
         )
         controller = None
         if args.degrade:
@@ -279,12 +293,20 @@ def main():
         _print_table(stats.summary())
         return
 
-    srv = BiathlonServer(bundle, cfg, mode=args.mode)
+    if args.cache_size is not None and args.mode != "fused":
+        ap.error("--cache-size requires a fused mode")
+    srv = BiathlonServer(bundle, cfg, mode=args.mode,
+                         cache_size=args.cache_size)
     srv.serve(bundle.requests[0])  # warm the jit caches
     stats = srv.serve_all(bundle.requests)
     s = stats.summary(bundle.pipeline.delta_default, bundle.pipeline.task)
-    print(f"[serve] {args.pipeline} mode={args.mode} delta={delta:.4f}")
+    print(f"[serve] {args.pipeline} mode={args.mode} delta={delta:.4f}"
+          + (f" cache={args.cache_size}" if args.cache_size is not None
+             else ""))
     _print_table(s)
+    if srv.cache is not None:
+        _print_table({f"cache_{k}": v for k, v in srv.cache.stats.items()})
+        srv.check_compile_contract()
 
 
 if __name__ == "__main__":

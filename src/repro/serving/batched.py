@@ -38,12 +38,14 @@ import numpy as np
 
 from repro.analysis.contracts import assert_compile_contract
 from repro.core.executor_fused import (
+    build_afc_precompute,
     build_fused_executor,
     pipeline_executor_kwargs,
     shard_lanes_executor,
 )
 from repro.core.pipeline import make_fused_model_fn
 from repro.data.store import bucket_size
+from repro.serving.feature_cache import FeatureCache
 
 __all__ = [
     "BatchedFusedServer",
@@ -296,19 +298,40 @@ class BatchedFusedServer:
     place instead of copying it per batch; ``afc_backend`` is forwarded to
     :func:`build_fused_executor` ("auto" = incremental prefix-stats AFC,
     "ref" = the pre-refactor rescan oracle).
+
+    ``cache_size`` enables the hot-group feature cache: every lane's
+    ``(vals, n, PrebuiltTables)`` comes from a version-keyed LRU
+    (serving/feature_cache.py), the executor runs ``prebuilt=True``, and the
+    per-lane stacks are fresh ``jnp.stack`` copies — so donating the stacked
+    buffer never aliases a cache entry.  Incompatible with ``mesh`` (the
+    sharded path owns its lane buffers device-side).
     """
 
     def __init__(self, bundle, config, batch_size: int = 8,
                  max_cap: int | None = None, mesh=None,
-                 afc_backend: str = "auto"):
+                 afc_backend: str = "auto", cache_size: int | None = None):
         self.bundle = bundle
         self.config = config
         self.batch_size = batch_size
         self.mesh = mesh
         self.n_devices = validate_serving_mesh(mesh, batch_size)
+        if cache_size is not None and mesh is not None:
+            raise ValueError(
+                "cache_size and mesh are mutually exclusive: cached lanes "
+                "stack host-tracked cache entries, sharded lanes partition "
+                "device-resident buffers"
+            )
+        self._cache_size = cache_size
+        self.cache: FeatureCache | None = None
+        cached = cache_size is not None
         #: registered contract governing this server's compiled executables
         #: (repro.analysis.contracts; declared in core/executor_fused.py)
-        self.contract = ("sharded_lanes",) if mesh is not None else ("fused",)
+        if cached:
+            self.contract = ("fused_prebuilt", "afc_precompute")
+        elif mesh is not None:
+            self.contract = ("sharded_lanes",)
+        else:
+            self.contract = ("fused",)
         p = bundle.pipeline
         feat_kwargs = pipeline_executor_kwargs(p.agg_features)
         self._agg_ids = feat_kwargs.pop("agg_ids")
@@ -317,7 +340,8 @@ class BatchedFusedServer:
             n_classes=max(p.n_classes, 2),
             m=config.m, m_sobol=config.m_sobol, alpha=config.alpha,
             gamma=config.gamma, tau=config.tau, max_iters=config.max_iters,
-            n_boot=config.n_bootstrap, afc_backend=afc_backend, **feat_kwargs,
+            n_boot=config.n_bootstrap, afc_backend=afc_backend,
+            prebuilt=cached, **feat_kwargs,
         )
 
         # jit caches one executable per distinct (lanes, k, cap) input shape;
@@ -326,22 +350,54 @@ class BatchedFusedServer:
         # making the compile count observable without backend internals.
         self._compile_count = 0
 
-        def _counted(vals, ns, agg_ids, delta, exacts, active, tau, iter_cap):
-            self._compile_count += 1
-            res = self._run(vals, ns, agg_ids, delta, exacts, active, tau,
-                            iter_cap)
-            # thread the donated values buffer back out as lane state: the
-            # identity passthrough becomes an XLA input-output alias, so the
-            # (lanes, k, cap) buffer is neither copied per batch nor kept
-            # alive twice (no-copy contract; see shard_lanes_executor).
-            return res._replace(lane_vals=vals)
+        if cached:
+            pre = build_afc_precompute(
+                k=p.k, alpha=config.alpha, gamma=config.gamma,
+                max_iters=config.max_iters,
+                holistic=feat_kwargs["holistic"],
+                quantiles=feat_kwargs["quantiles"],
+                approximate=feat_kwargs["approximate"],
+            )
+            inner_cold = pre.cold
 
-        # the trace hook sits INSIDE the vmap/shard_map wrappers, so it still
-        # fires exactly once per jit cache miss on the sharded path
-        if mesh is not None:
-            self._batched = shard_lanes_executor(_counted, mesh, donate_vals=True)
+            def _counted_pre(vals, ns, agg_ids, delta, exacts, tables,
+                             active, tau, iter_cap):
+                self._compile_count += 1
+                res = self._run(vals, ns, agg_ids, delta, exacts, tables,
+                                active, tau, iter_cap)
+                return res._replace(lane_vals=vals)
+
+            def _counted_cold(vals, n):
+                self._compile_count += 1
+                return inner_cold(vals, n)
+
+            self._batched = jax.jit(jax.vmap(_counted_pre),
+                                    donate_argnums=(0,))
+            self.cache = FeatureCache(
+                bundle.store, jax.jit(_counted_cold), pre.refresh,
+                maxsize=cache_size,
+            )
         else:
-            self._batched = jax.jit(jax.vmap(_counted), donate_argnums=(0,))
+            def _counted(vals, ns, agg_ids, delta, exacts, active, tau,
+                         iter_cap):
+                self._compile_count += 1
+                res = self._run(vals, ns, agg_ids, delta, exacts, active, tau,
+                                iter_cap)
+                # thread the donated values buffer back out as lane state:
+                # the identity passthrough becomes an XLA input-output alias,
+                # so the (lanes, k, cap) buffer is neither copied per batch
+                # nor kept alive twice (no-copy contract; see
+                # shard_lanes_executor).
+                return res._replace(lane_vals=vals)
+
+            # the trace hook sits INSIDE the vmap/shard_map wrappers, so it
+            # still fires exactly once per jit cache miss on the sharded path
+            if mesh is not None:
+                self._batched = shard_lanes_executor(
+                    _counted, mesh, donate_vals=True
+                )
+            else:
+                self._batched = jax.jit(jax.vmap(_counted), donate_argnums=(0,))
         self._caps_seen: set[int] = set()
         max_n = max(
             bundle.store[f.table].group_size(g)
@@ -418,14 +474,26 @@ class BatchedFusedServer:
             )
         lanes = self.batch_size
         cap = self.batch_cap(requests)
-        vals = np.zeros((lanes, p.k, cap), np.float32)
-        ns = np.zeros((lanes, p.k), np.int32)
         true_ns = np.zeros((r, p.k), np.int64)
         exacts = np.zeros((lanes, len(p.exact_features)), np.float32)
-        for i, req in enumerate(requests):
-            vals[i], ns[i], true_ns[i], exacts[i] = lane_request_inputs(
-                p, store, req, cap
-            )
+        entries = None
+        if self.cache is not None:
+            # cached lanes: vals/n/tables come device-resident from the LRU;
+            # only the cheap scalars (true sizes, exact features) touch host
+            entries = []
+            for i, req in enumerate(requests):
+                entries.append(self.cache.get(p.agg_specs(req), cap))
+                true_ns[i] = np.asarray(p.group_sizes(store, req), np.int64)
+                exacts[i] = np.asarray(
+                    p.exact_feature_values(store, req), np.float32
+                )
+        else:
+            vals = np.zeros((lanes, p.k, cap), np.float32)
+            ns = np.zeros((lanes, p.k), np.int32)
+            for i, req in enumerate(requests):
+                vals[i], ns[i], true_ns[i], exacts[i] = lane_request_inputs(
+                    p, store, req, cap
+                )
         active = np.arange(lanes) < r
         # per-lane degradation knobs: traced data, never part of the cache
         # key (pad lanes + unknobbed requests get the config defaults)
@@ -440,16 +508,36 @@ class BatchedFusedServer:
                 taus[i] = kn.tau
                 caps[i] = min(int(kn.iter_cap), self.config.max_iters)
         self._caps_seen.add(cap)
-        res = self._batched(
-            jnp.asarray(vals),
-            jnp.asarray(ns),
-            jnp.broadcast_to(self._agg_ids, (lanes, p.k)),
-            jnp.asarray(deltas),
-            jnp.asarray(exacts),
-            jnp.asarray(active),
-            jnp.asarray(taus),
-            jnp.asarray(caps),
-        )
+        if entries is not None:
+            # pad lanes reuse the first entry (active=False predicates them
+            # out); jnp.stack COPIES, so the donated stacked buffer can never
+            # alias — and never corrupt — a live cache entry
+            lane_entries = entries + [entries[0]] * (lanes - r)
+            res = self._batched(
+                jnp.stack([e.vals for e in lane_entries]),
+                jnp.stack([e.n for e in lane_entries]),
+                jnp.broadcast_to(self._agg_ids, (lanes, p.k)),
+                jnp.asarray(deltas),
+                jnp.asarray(exacts),
+                jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[e.tables for e in lane_entries],
+                ),
+                jnp.asarray(active),
+                jnp.asarray(taus),
+                jnp.asarray(caps),
+            )
+        else:
+            res = self._batched(
+                jnp.asarray(vals),
+                jnp.asarray(ns),
+                jnp.broadcast_to(self._agg_ids, (lanes, p.k)),
+                jnp.asarray(deltas),
+                jnp.asarray(exacts),
+                jnp.asarray(active),
+                jnp.asarray(taus),
+                jnp.asarray(caps),
+            )
         iters = np.asarray(res.iters)[:r]
         return BatchResult(
             y_hat=np.asarray(res.y_hat)[:r],

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.analysis.contracts import assert_compile_contract
 from repro.core.executor_fused import (
+    build_afc_precompute,
     build_chunked_executor,
     pipeline_executor_kwargs,
     shard_lanes_state_executor,
@@ -54,6 +55,7 @@ from repro.core.executor_fused import (
 from repro.core.pipeline import make_fused_model_fn
 from repro.data.store import bucket_size
 from repro.serving.batched import lane_request_inputs, validate_serving_mesh
+from repro.serving.feature_cache import FeatureCache
 
 __all__ = ["ContinuousBatchedServer"]
 
@@ -65,8 +67,13 @@ class ContinuousBatchedServer:
     ``chunk_iters`` the planner iterations per chunk dispatch — the
     continuous-batching knob trading scheduling granularity (how quickly a
     freed lane is refilled) against per-dispatch overhead.  ``max_cap``,
-    ``mesh`` and ``afc_backend`` mean exactly what they mean on
-    :class:`~repro.serving.batched.BatchedFusedServer`.
+    ``mesh``, ``afc_backend`` and ``cache_size`` mean exactly what they
+    mean on :class:`~repro.serving.batched.BatchedFusedServer`: with a
+    cache, every admission feeds a version-keyed LRU entry's
+    ``(vals, n, PrebuiltTables)`` into a ``prebuilt=True`` refill — the
+    single-lane init skips its AFC precompute — at the price of one extra
+    executable per bucket (the cold precompute; ``cache_size`` and
+    ``mesh`` are mutually exclusive).
 
     The server is deliberately schedule-free: it owns the compiled
     executables and the buffer assembly, while the caller owns the table
@@ -78,17 +85,32 @@ class ContinuousBatchedServer:
 
     def __init__(self, bundle, config, batch_size: int = 8,
                  chunk_iters: int = 4, max_cap: int | None = None,
-                 mesh=None, afc_backend: str = "auto"):
+                 mesh=None, afc_backend: str = "auto",
+                 cache_size: int | None = None):
         self.bundle = bundle
         self.config = config
         self.batch_size = batch_size
         self.chunk_iters = int(chunk_iters)
         self.mesh = mesh
         self.n_devices = validate_serving_mesh(mesh, batch_size)
+        if cache_size is not None and mesh is not None:
+            raise ValueError(
+                "cache_size and mesh are mutually exclusive: cached "
+                "admissions feed host-tracked cache entries into the refill "
+                "scatter, sharded tables partition device-resident buffers"
+            )
+        self._cache_size = cache_size
+        self.cache: FeatureCache | None = None
+        cached = cache_size is not None
         #: registered contracts governing this server's compiled executables
         #: (repro.analysis.contracts; declared in core/executor_fused.py) —
-        #: the refill + chunk pair sums to the 2-per-bucket compile budget
-        self.contract = ("refill", "chunk")
+        #: the refill + chunk pair sums to the 2-per-bucket compile budget;
+        #: the cache-fed table adds the cold precompute for 3 per bucket
+        self.contract = (
+            ("refill", "chunk", "afc_precompute")
+            if cached
+            else ("refill", "chunk")
+        )
         p = bundle.pipeline
         feat_kwargs = pipeline_executor_kwargs(p.agg_features)
         self._agg_ids = feat_kwargs.pop("agg_ids")
@@ -97,7 +119,8 @@ class ContinuousBatchedServer:
             k=p.k, task=p.task, n_classes=max(p.n_classes, 2),
             m=config.m, m_sobol=config.m_sobol, alpha=config.alpha,
             gamma=config.gamma, tau=config.tau, max_iters=config.max_iters,
-            n_boot=config.n_bootstrap, afc_backend=afc_backend, **feat_kwargs,
+            n_boot=config.n_bootstrap, afc_backend=afc_backend,
+            prebuilt=cached, **feat_kwargs,
         )
 
         # trace hooks: fire once per jit cache miss (= per compiled
@@ -105,11 +128,40 @@ class ContinuousBatchedServer:
         # INSIDE the vmap/shard_map wrappers so the sharded path counts too
         self._refill_compiles = 0
         self._chunk_compiles = 0
+        self._cold_compiles = 0
 
-        def _counted_init(vals, n, agg_ids, delta, exact, active, tau, cap):
-            self._refill_compiles += 1
-            return self._init_fn(vals, n, agg_ids, delta, exact, active,
-                                 tau, cap)
+        if cached:
+            pre = build_afc_precompute(
+                k=p.k, alpha=config.alpha, gamma=config.gamma,
+                max_iters=config.max_iters,
+                holistic=feat_kwargs["holistic"],
+                quantiles=feat_kwargs["quantiles"],
+                approximate=feat_kwargs["approximate"],
+            )
+            self._pre_cold = pre.cold
+            inner_cold = pre.cold
+
+            def _counted_cold(vals, n):
+                self._cold_compiles += 1
+                return inner_cold(vals, n)
+
+            self.cache = FeatureCache(
+                bundle.store, jax.jit(_counted_cold), pre.refresh,
+                maxsize=cache_size,
+            )
+
+            def _counted_init(vals, n, agg_ids, delta, exact, active, tau,
+                              cap, tables):
+                self._refill_compiles += 1
+                return self._init_fn(vals, n, agg_ids, delta, exact, active,
+                                     tau, cap, tables)
+        else:
+
+            def _counted_init(vals, n, agg_ids, delta, exact, active, tau,
+                              cap):
+                self._refill_compiles += 1
+                return self._init_fn(vals, n, agg_ids, delta, exact, active,
+                                     tau, cap)
 
         def _counted_chunk(state):
             self._chunk_compiles += 1
@@ -162,6 +214,16 @@ class ContinuousBatchedServer:
                 out_specs=spec, check_rep=False,
             )
             self._chunk = shard_lanes_state_executor(_counted_chunk, mesh)
+        elif cached:
+
+            def refill_fn(table, vals, n, agg_ids, delta, exact, tau, cap,
+                          lane, tables):
+                fresh = _counted_init(vals, n, agg_ids, delta, exact,
+                                      jnp.asarray(True), tau, cap, tables)
+                return _write_lane(table, fresh, lane)
+
+            self._chunk = jax.jit(jax.vmap(_counted_chunk),
+                                  donate_argnums=(0,))
         else:
 
             def refill_fn(table, vals, n, agg_ids, delta, exact, tau, cap,
@@ -192,12 +254,18 @@ class ContinuousBatchedServer:
 
     @property
     def compile_count(self) -> int:
-        """Executables built so far: refill + chunk, per cap bucket.
+        """Executables built so far, per cap bucket.
 
-        Must equal ``2 * len(compiled_buckets)`` — the continuous compile
-        contract (``refill_compiles`` / ``chunk_compiles`` split it).
+        Must equal ``2 * len(compiled_buckets)`` (refill + chunk) — or 3
+        with the feature cache enabled (+ the cold AFC precompute) — the
+        continuous compile contract (``refill_compiles`` /
+        ``chunk_compiles`` / ``cold_compiles`` split it).
         """
-        return self._refill_compiles + self._chunk_compiles
+        return self._refill_compiles + self._chunk_compiles + self._cold_compiles
+
+    @property
+    def cold_compiles(self) -> int:
+        return self._cold_compiles
 
     @property
     def refill_compiles(self) -> int:
@@ -244,7 +312,13 @@ class ContinuousBatchedServer:
             jax.ShapeDtypeStruct((), np.float32),          # tau
             jax.ShapeDtypeStruct((), np.int32),            # iter_cap
         )
-        lane = jax.eval_shape(self._init_fn, *dummy)
+        if self.cache is not None:
+            # the prebuilt init also takes a PrebuiltTables — its shapes come
+            # from eval_shape on the cold precompute (no compile either)
+            tables = jax.eval_shape(self._pre_cold, dummy[0], dummy[1])
+            lane = jax.eval_shape(self._init_fn, *dummy, tables)
+        else:
+            lane = jax.eval_shape(self._init_fn, *dummy)
         lanes = self.batch_size
         return jax.tree_util.tree_map(
             lambda s: jnp.zeros((lanes,) + s.shape, s.dtype), lane
@@ -288,7 +362,20 @@ class ContinuousBatchedServer:
             seen.add(lane)
         self._caps_seen.add(cap)
         for lane, req, kn in assignments:
-            vals, n, true_n, exact = lane_request_inputs(p, store, req, cap)
+            if self.cache is not None:
+                # cached admission: vals/n/tables come device-resident from
+                # the LRU; the refill scatter copies them into the lane row,
+                # so the entry itself is never aliased by the donated table
+                entry = self.cache.get(p.agg_specs(req), cap)
+                vals, n = entry.vals, entry.n
+                true_n = np.asarray(p.group_sizes(store, req), np.int64)
+                exact = np.asarray(
+                    p.exact_feature_values(store, req), np.float32
+                )
+            else:
+                vals, n, true_n, exact = lane_request_inputs(
+                    p, store, req, cap
+                )
             true_rows[lane] = int(true_n.sum())
             delta = delta_default if kn is None else kn.delta
             tau = cfg.tau if kn is None else kn.tau
@@ -296,7 +383,7 @@ class ContinuousBatchedServer:
                 cfg.max_iters if kn is None
                 else min(int(kn.iter_cap), cfg.max_iters)
             )
-            table = self._refill(
+            refill_args = (
                 table,
                 jnp.asarray(vals),
                 jnp.asarray(n),
@@ -307,6 +394,10 @@ class ContinuousBatchedServer:
                 jnp.asarray(iter_cap, jnp.int32),
                 jnp.asarray(lane, jnp.int32),
             )
+            if self.cache is not None:
+                table = self._refill(*refill_args, entry.tables)
+            else:
+                table = self._refill(*refill_args)
         return table, true_rows
 
     def run_chunk(self, table):

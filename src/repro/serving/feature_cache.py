@@ -1,0 +1,166 @@
+"""Hot-group precompute cache: (table, group, version)-keyed device residency.
+
+The head of a real key distribution is where serving cost concentrates
+(InferLine's provisioning argument; Willump's statistically-aware feature
+caching is the exemplar fix — PAPERS.md), and in this stack the dominated
+per-request cost at small caps is the incremental-AFC precompute + the H2D
+transfer of the (k, cap) sample buffers.  :class:`FeatureCache` keeps both
+device-resident per *(request spec row, group version)*:
+
+* **key** — ``((table, column, gid), ...) + (cap,)`` identifies the request
+  shape, and the tuple of per-spec **group versions** (bumped by every
+  ``Table.append``) identifies freshness.  A version mismatch can never
+  serve stale data: the entry is either delta-refreshed to the new version
+  or rebuilt.
+* **hit** — returns the cached ``(vals, n, PrebuiltTables)`` untouched:
+  zero precompute, zero H2D, zero new executables (the prebuilt executor is
+  already compiled for the bucket).
+* **stale hit** — replays the store's bounded append log through the
+  ``refresh`` delta executable (``build_afc_precompute``): the values
+  buffer shifts, power-sum tables get two-sum row updates, the holistic
+  index merges its sorted runs — no argsort, no full rescan.  Events that
+  land at prefix position 0 (they replace the power-sum shift basis) or
+  that have aged out of the log fall back to a cold rebuild.
+* **miss** — gathers host buffers once and runs the ``cold`` precompute
+  executable; the entry then lives in an LRU of ``maxsize`` groups.
+
+The cache itself is host-side bookkeeping (a dict of device-array handles);
+all numeric work happens in the two jitted executables its owner supplies,
+so servers can route them through their compile-counting trace hooks and
+the ``repro.analysis`` contracts can assert the hit path compiles nothing.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor_fused import PrebuiltTables
+from repro.data.store import ColumnStore
+
+__all__ = ["CacheEntry", "FeatureCache"]
+
+
+@dataclass
+class CacheEntry:
+    """Device-resident precompute for one (spec row, cap) request shape."""
+
+    vals: jnp.ndarray          # (k, cap) padded prefix buffers
+    n: jnp.ndarray             # (k,) int32 group sizes clamped to cap
+    tables: PrebuiltTables
+    versions: tuple[int, ...]  # per-spec group versions the entry reflects
+
+
+class FeatureCache:
+    """LRU of :class:`CacheEntry` keyed by ``(specs, cap)`` + group versions.
+
+    ``cold(vals, n) -> PrebuiltTables`` and ``refresh(vals, n, tables, j, x,
+    aff) -> (vals, n, tables)`` are the owner's (possibly compile-counted)
+    jitted executables from ``build_afc_precompute``.  ``key_fn`` computes
+    the freshness component from the store — it exists as an injection seam
+    so the mutation test can build the classic broken cache (keyed without
+    versions) and prove the checker catches the stale read.
+    """
+
+    def __init__(
+        self,
+        store: ColumnStore,
+        cold: Callable[..., PrebuiltTables],
+        refresh: Callable[..., Any] | None = None,
+        *,
+        maxsize: int = 64,
+        key_fn: Callable[[ColumnStore, list, int], tuple] | None = None,
+    ) -> None:
+        self.store = store
+        self.cold = cold
+        self.refresh = refresh
+        self.maxsize = int(maxsize)
+        self._key_fn = key_fn or (
+            lambda store, specs, cap: store.spec_versions(specs)
+        )
+        self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.refreshes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return dict(
+            hits=self.hits, misses=self.misses, refreshes=self.refreshes,
+            entries=len(self._entries),
+        )
+
+    def get(self, specs: list[tuple[str, str, int]], cap: int) -> CacheEntry:
+        """The entry for this request, built/refreshed/fetched as needed."""
+        specs = [tuple(s) for s in specs]
+        base = (tuple(specs), int(cap))
+        want = tuple(self._key_fn(self.store, specs, cap))
+        entry = self._entries.get(base)
+        if entry is not None:
+            if entry.versions == want:
+                self.hits += 1
+                self._entries.move_to_end(base)
+                return entry
+            refreshed = self._try_refresh(entry, specs, cap, want)
+            if refreshed is not None:
+                self.refreshes += 1
+                self._entries[base] = refreshed
+                self._entries.move_to_end(base)
+                return refreshed
+        self.misses += 1
+        vals, sizes = self.store.request_buffers(specs, cap)
+        entry = CacheEntry(
+            vals=vals, n=sizes, tables=self.cold(vals, sizes), versions=want
+        )
+        self._entries[base] = entry
+        self._entries.move_to_end(base)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return entry
+
+    def _try_refresh(
+        self,
+        entry: CacheEntry,
+        specs: list[tuple[str, str, int]],
+        cap: int,
+        want: tuple,
+    ) -> CacheEntry | None:
+        """Delta-update a stale entry from the append logs, or None."""
+        if self.refresh is None:
+            return None
+        # one event stream per distinct (table, gid) the specs reference
+        groups: dict[tuple[str, int], list[tuple[int, int]]] = {}
+        for si, (t, _c, g) in enumerate(specs):
+            gk = (t, g)
+            if gk in groups:
+                continue
+            base_version = entry.versions[si]
+            events = self.store[t].events_since(g, base_version)
+            if events is None or any(j == 0 for (j, _r) in events):
+                return None  # log aged out / shift-basis change: rebuild
+            groups[gk] = events
+        vals, n, tables = entry.vals, entry.n, entry.tables
+        for (t, g), events in groups.items():
+            table = self.store[t]
+            aff = np.array(
+                [(st == t and sg == g) for (st, _sc, sg) in specs], bool
+            )
+            for (j, row_id) in events:
+                x = np.array(
+                    [
+                        float(table.columns[sc][row_id]) if aff[si] else 0.0
+                        for si, (_st, sc, _sg) in enumerate(specs)
+                    ],
+                    np.float32,
+                )
+                vals, n, tables = self.refresh(
+                    vals, n, tables, jnp.asarray(j, jnp.int32),
+                    jnp.asarray(x), jnp.asarray(aff),
+                )
+        return CacheEntry(vals=vals, n=n, tables=tables, versions=want)

@@ -21,14 +21,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import assert_compile_contract
 from repro.core.executor import BiathlonConfig, HostLoopExecutor, run_exact
 from repro.core.executor_fused import (
+    build_afc_precompute,
     build_fused_executor,
     pipeline_executor_kwargs,
 )
 from repro.core.pipeline import make_fused_model_fn
 from repro.data.store import bucket_size
 from repro.data.synthetic import PipelineBundle
+from repro.serving.feature_cache import FeatureCache
 
 __all__ = ["BiathlonServer", "ServerStats"]
 
@@ -87,6 +90,7 @@ class BiathlonServer:
         mode: str = "host",
         max_cap: int | None = None,
         afc_backend: str = "auto",
+        cache_size: int | None = None,
     ):
         self.bundle = bundle
         self.config = config or BiathlonConfig()
@@ -100,6 +104,18 @@ class BiathlonServer:
         # default); "ref" = the pre-refactor rescan oracle (parity/bench
         # baseline) — see executor_fused.build_fused_executor.
         self._afc_backend = afc_backend
+        # cache_size enables the hot-group feature cache (fused mode): the
+        # executor is built prebuilt=True and fed device-resident tables
+        # from a (table, group, version)-keyed LRU of ``cache_size`` groups.
+        self._cache_size = cache_size
+        self.cache: FeatureCache | None = None
+        self._compile_count = 0
+        self._caps_seen: set[int] = set()
+        self.contract = (
+            ("fused_prebuilt", "afc_precompute")
+            if cache_size is not None
+            else ("fused",)
+        )
         if mode == "fused":
             self._build_fused()
 
@@ -109,6 +125,7 @@ class BiathlonServer:
         cfg = self.config
         feat_kwargs = pipeline_executor_kwargs(p.agg_features)
         self._agg_ids = feat_kwargs.pop("agg_ids")
+        cached = self._cache_size is not None
         self._fused = build_fused_executor(
             make_fused_model_fn(p),
             k=p.k,
@@ -122,8 +139,34 @@ class BiathlonServer:
             max_iters=cfg.max_iters,
             n_boot=cfg.n_bootstrap,
             afc_backend=self._afc_backend,
+            prebuilt=cached,
             **feat_kwargs,
         )
+        if cached:
+            pre = build_afc_precompute(
+                k=p.k, alpha=cfg.alpha, gamma=cfg.gamma,
+                max_iters=cfg.max_iters,
+                holistic=feat_kwargs["holistic"],
+                quantiles=feat_kwargs["quantiles"],
+                approximate=feat_kwargs["approximate"],
+            )
+            inner_run, inner_cold = self._fused, pre.cold
+
+            # trace hooks: bodies execute once per jit cache miss, so the
+            # counter observes exactly the executables the bucket minted
+            def _counted_run(vals, n, agg_ids, delta, exact, tables):
+                self._compile_count += 1
+                return inner_run(vals, n, agg_ids, delta, exact, tables)
+
+            def _counted_cold(vals, n):
+                self._compile_count += 1
+                return inner_cold(vals, n)
+
+            self._fused = jax.jit(_counted_run)
+            self.cache = FeatureCache(
+                self.store, jax.jit(_counted_cold), pre.refresh,
+                maxsize=self._cache_size,
+            )
         max_n = max(
             self.store[f.table].group_size(g)
             for f in p.agg_features
@@ -156,13 +199,21 @@ class BiathlonServer:
         specs = p.agg_specs(request)
         n_np = p.group_sizes(self.store, request)
         cap = min(bucket_size(int(max(n_np.max(), 1))), self._cap)
-        vals, sizes = self.store.request_buffers(specs, cap)
         n_true = jnp.asarray(n_np, jnp.int32)
         exact = jnp.asarray(p.exact_feature_values(self.store, request))
-        res = self._fused(
-            vals, jnp.minimum(n_true, cap), self._agg_ids,
-            jnp.asarray(delta, jnp.float32), exact,
-        )
+        self._caps_seen.add(cap)
+        if self.cache is not None:
+            entry = self.cache.get(specs, cap)
+            res = self._fused(
+                entry.vals, entry.n, self._agg_ids,
+                jnp.asarray(delta, jnp.float32), exact, entry.tables,
+            )
+        else:
+            vals, sizes = self.store.request_buffers(specs, cap)
+            res = self._fused(
+                vals, jnp.minimum(n_true, cap), self._agg_ids,
+                jnp.asarray(delta, jnp.float32), exact,
+            )
         y = float(res.y_hat)
         dt = time.perf_counter() - t0
         return {
@@ -174,6 +225,20 @@ class BiathlonServer:
             "z": np.asarray(res.z),
             "n": np.asarray(jnp.minimum(n_true, cap)),
         }
+
+    # ------------------------------------------------------------------
+    # compile-contract accessors (cached fused mode): the trace hooks above
+    # count executable mints; assert_compile_contract does the arithmetic.
+    @property
+    def compile_count(self) -> int:
+        return self._compile_count
+
+    @property
+    def compiled_buckets(self) -> list[int]:
+        return sorted(self._caps_seen)
+
+    def check_compile_contract(self) -> None:
+        assert_compile_contract(self, self.contract)
 
     # ------------------------------------------------------------------
     def serve_all(self, requests=None, compare_exact: bool = True, seed: int = 0):

@@ -1,0 +1,494 @@
+"""Online feature store (PR 9): streaming append + hot-group cache.
+
+Covers, in order: ``Table.append`` permutation/version/log semantics and
+determinism, empty-group and unknown-key handling, the kernel-level delta
+updates (``append_power_sums`` bitwise vs rebuild on exactly-representable
+data, ``merge_sorted_prefix`` bitwise vs a full re-sort), the cache-aware
+``resolve_afc_plan`` precedence, ``FeatureCache`` hit/refresh/rebuild/LRU
+behaviour, and served parity + compile contracts for all three cached
+servers (cache hit == cache miss == uncached, before and after appends).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.executor_fused import build_afc_precompute
+from repro.data.store import MAX_APPEND_LOG, ColumnStore, build_table
+from repro.kernels.sampled_agg.ops import resolve_afc_plan
+from repro.kernels.sampled_agg.prefix_stats import (
+    append_power_sums,
+    merge_sorted_prefix,
+    prefix_power_sums_ref,
+)
+from repro.serving import (
+    BatchedFusedServer,
+    BiathlonServer,
+    ContinuousBatchedServer,
+)
+from repro.serving.feature_cache import FeatureCache
+
+from tests.serving_fixtures import SMALL_CFG, make_small_bundle
+
+
+def _toy_table(seed=0, sizes=(5, 3, 4)):
+    gid = np.concatenate([np.full(s, g) for g, s in enumerate(sizes)])
+    rng = np.random.default_rng(seed + 100)
+    t = build_table(
+        {"v": rng.normal(size=len(gid)), "a": rng.normal(size=len(gid))},
+        gid, seed=seed,
+    )
+    t.name = "toy"
+    return t
+
+
+# ------------------------------------------------------- streaming append
+def test_append_keeps_perm_a_valid_group_partition():
+    t = _toy_table()
+    t.append(
+        {"v": np.arange(4.0), "a": np.arange(4.0)},
+        group_key=np.array([0, 2, 2, 7]),  # 7 = brand-new group
+    )
+    assert t.n_rows == 12 + 4
+    # perm is a permutation of all row ids
+    assert sorted(t.perm.tolist()) == list(range(t.n_rows))
+    # each group's slice holds exactly its own rows
+    all_gid = np.concatenate(
+        [np.full(s, g) for g, s in enumerate((5, 3, 4))] + [[0, 2, 2, 7]]
+    )
+    for key, g in t.group_ids.items():
+        s, e = int(t.group_ptr[g]), int(t.group_ptr[g + 1])
+        assert (all_gid[t.perm[s:e]] == key).all()
+    assert t.group_size(7) == 1 and t.group_size(2) == 6
+
+
+def test_append_is_deterministic_given_seed():
+    rows = {"v": np.arange(6.0), "a": -np.arange(6.0)}
+    keys = np.array([0, 1, 0, 2, 2, 0])
+    a, b = _toy_table(seed=3), _toy_table(seed=3)
+    a.append(rows, keys)
+    b.append(rows, keys)
+    np.testing.assert_array_equal(a.perm, b.perm)
+    np.testing.assert_array_equal(a.group_ptr, b.group_ptr)
+
+
+def test_append_insertion_positions_span_uniform_range():
+    """j ~ Uniform{0..m}: over many appends into one group every prefix
+    position (including both ends) gets hit — the prefix-is-SRS invariant
+    needs the full support, not append-at-tail."""
+    t = _toy_table(seed=5)
+    seen = set()
+    for i in range(64):
+        m = t.group_size(0)
+        before = t.perm[int(t.group_ptr[0]) : int(t.group_ptr[1])].copy()
+        t.append({"v": [float(i)], "a": [0.0]}, group_key=[0])
+        after = t.perm[int(t.group_ptr[0]) : int(t.group_ptr[1])]
+        (j,) = np.where(after == t.n_rows - 1)[0]
+        seen.add((int(j), m))
+        # insertion only shifts; the surviving order is untouched
+        np.testing.assert_array_equal(np.delete(after, j), before)
+    js = {j for j, _m in seen}
+    assert 0 in js and max(js) >= 60  # both ends of Uniform{0..m} exercised
+
+
+def test_append_bumps_versions_and_events_since():
+    t = _toy_table()
+    assert t.version(1) == 0
+    assert t.events_since(1, 0) == []  # current = no events
+    t.append({"v": [1.0, 2.0], "a": [0.0, 0.0]}, group_key=[1, 1])
+    assert t.version(1) == 2
+    ev = t.events_since(1, 0)
+    assert len(ev) == 2
+    for j, row_id in ev:
+        assert 0 <= j <= t.group_size(1)
+        assert row_id in (12, 13)
+    assert t.events_since(1, 1) == ev[1:]
+    assert t.events_since(1, 2) == []
+
+
+def test_events_since_ages_out_past_log_bound():
+    t = _toy_table()
+    n = MAX_APPEND_LOG + 2
+    t.append(
+        {"v": np.zeros(n), "a": np.zeros(n)}, group_key=np.zeros(n, int)
+    )
+    assert t.events_since(0, 0) is None  # log no longer reaches version 0
+    assert len(t.events_since(0, 2)) == MAX_APPEND_LOG
+    assert t.events_since(0, n) == []
+
+
+def test_append_validates_columns_and_lengths():
+    t = _toy_table()
+    with pytest.raises(ValueError, match="missing \\['a'\\]"):
+        t.append({"v": [1.0]}, group_key=[0])
+    with pytest.raises(ValueError, match="unexpected \\['b'\\]"):
+        t.append({"v": [1.0], "a": [1.0], "b": [1.0]}, group_key=[0])
+    with pytest.raises(ValueError, match="column 'a' has 2 rows"):
+        t.append({"v": [1.0], "a": [1.0, 2.0]}, group_key=[0])
+
+
+# ----------------------------------------- empty-group / unknown-key paths
+def test_empty_group_reads_neutral_not_neighbor():
+    t = _toy_table()
+    # register two empty groups, then fill only the SECOND: the first is a
+    # middle-empty group whose ptr slice is zero-width between live data
+    t.add_group(50)
+    t.add_group(51)
+    t.append({"v": [9.0], "a": [9.0]}, group_key=[51])
+    assert t.group_size(50) == 0
+    assert t.version(50) == 0
+    assert t.lookup("v", 50) == 0.0  # NOT group 51's 9.0
+    np.testing.assert_array_equal(t.sample_prefix("v", 50, 8), np.zeros(8))
+    assert t.lookup("v", 51) == 9.0
+    # trailing-empty group behaves the same
+    t.add_group(60)
+    assert t.lookup("v", 60) == 0.0
+    np.testing.assert_array_equal(t.sample_prefix("a", 60, 4), np.zeros(4))
+    # add_group is idempotent
+    assert t.add_group(51) == t.group_ids[51]
+
+
+def test_unknown_group_key_raises_named_valueerror():
+    t = _toy_table()
+    for op in (
+        lambda: t.lookup("v", 99),
+        lambda: t.group_size(99),
+        lambda: t.sample_prefix("v", 99, 8),
+        lambda: t.version(99),
+        lambda: t.events_since(99, 0),
+    ):
+        with pytest.raises(ValueError, match="table 'toy'.*unknown group key 99"):
+            op()
+
+
+# ------------------------------------------------ delta-update kernel math
+def _ptab_fixture(rng, k=3, cap=32, ints=False):
+    if ints:
+        vals = rng.integers(-8, 8, size=(k, cap)).astype(np.float32)
+        x = rng.integers(-8, 8, size=(k,)).astype(np.float32)
+    else:
+        vals = rng.normal(size=(k, cap)).astype(np.float32)
+        x = rng.normal(size=(k,)).astype(np.float32)
+    shift = vals[:, 0]
+    return vals, shift, x
+
+
+def _rebuild_after_insert(vals, shift, j, x):
+    """Oracle: the post-insertion buffer, rebuilt from scratch."""
+    k, cap = vals.shape
+    new = np.stack([np.insert(vals[r], j, x[r])[:cap] for r in range(k)])
+    return np.asarray(prefix_power_sums_ref(jnp.asarray(new), jnp.asarray(shift)))
+
+
+@pytest.mark.parametrize("j", [1, 7, 31])
+def test_append_power_sums_bitwise_matches_rebuild_on_ints(j):
+    """On integer-valued data in [-8, 8) every partial sum of u^4 stays
+    below 2^24, f32 arithmetic is exact, and the two-sum delta update is
+    BITWISE identical to a from-scratch table rebuild."""
+    rng = np.random.default_rng(j)
+    vals, shift, x = _ptab_fixture(rng, ints=True)
+    ptab = prefix_power_sums_ref(jnp.asarray(vals), jnp.asarray(shift))
+    upd = append_power_sums(
+        ptab, jnp.asarray(shift), jnp.asarray(j, jnp.int32), jnp.asarray(x)
+    )
+    want = _rebuild_after_insert(vals, shift, j, x)
+    np.testing.assert_array_equal(np.asarray(upd), want)
+
+
+def test_append_power_sums_close_on_floats_and_masks_aff():
+    rng = np.random.default_rng(0)
+    vals, shift, x = _ptab_fixture(rng)
+    ptab = prefix_power_sums_ref(jnp.asarray(vals), jnp.asarray(shift))
+    aff = jnp.asarray([True, False, True])
+    upd = np.asarray(append_power_sums(
+        ptab, jnp.asarray(shift), jnp.asarray(5, jnp.int32),
+        jnp.asarray(x), aff,
+    ))
+    want = _rebuild_after_insert(vals, shift, 5, x)
+    np.testing.assert_allclose(upd[[0, 2]], want[[0, 2]], rtol=0, atol=1e-4)
+    np.testing.assert_array_equal(upd[1], np.asarray(ptab)[1])  # masked row
+
+
+def test_append_power_sums_past_cap_is_noop():
+    rng = np.random.default_rng(1)
+    vals, shift, x = _ptab_fixture(rng)
+    ptab = prefix_power_sums_ref(jnp.asarray(vals), jnp.asarray(shift))
+    upd = append_power_sums(
+        ptab, jnp.asarray(shift), jnp.asarray(vals.shape[1], jnp.int32),
+        jnp.asarray(x),
+    )
+    np.testing.assert_array_equal(np.asarray(upd), np.asarray(ptab))
+
+
+def _sorted_runs(vals, n, cap):
+    """The build_rank_index argsort convention: +inf tail, positions in
+    order, stable (value, position)-lexicographic order."""
+    pos = np.arange(cap)
+    masked = np.where(pos[None, :] < n[:, None], vals, np.inf)
+    sidx = np.argsort(masked, axis=1, kind="stable").astype(np.int32)
+    svals = np.take_along_axis(masked, sidx, axis=1).astype(np.float32)
+    return svals, sidx
+
+
+@pytest.mark.parametrize("j,full", [(0, False), (4, False), (9, False), (3, True)])
+def test_merge_sorted_prefix_bitwise_matches_resort(j, full):
+    """One merged append event == a full stable re-sort, bitwise — for
+    insertions at the head, middle and tail of a partial prefix, and into
+    a FULL buffer (where the element past cap must drop)."""
+    rng = np.random.default_rng(j + 10 * full)
+    h, cap = 3, 12
+    vals = rng.normal(size=(h, cap)).astype(np.float32)
+    n = np.full(h, cap if full else 9, np.int32)
+    svals, sidx = _sorted_runs(vals, n, cap)
+    x = rng.normal(size=(h,)).astype(np.float32)
+
+    msv, msi, mn = merge_sorted_prefix(
+        jnp.asarray(svals), jnp.asarray(sidx), jnp.asarray(n), cap,
+        jnp.asarray(j, jnp.int32), jnp.asarray(x),
+    )
+    # oracle: dense insert, trim to cap, stable re-sort
+    new = np.stack([np.insert(vals[r, : n[r]], j, x[r])[:cap] for r in range(h)])
+    n2 = np.minimum(n + 1, cap)
+    padded = np.zeros((h, cap), np.float32)
+    for r in range(h):
+        padded[r, : n2[r]] = new[r]
+    wsv, wsi = _sorted_runs(padded, n2, cap)
+    np.testing.assert_array_equal(np.asarray(mn), n2)
+    np.testing.assert_array_equal(np.asarray(msv), wsv)
+    np.testing.assert_array_equal(np.asarray(msi), wsi)
+
+
+def test_merge_sorted_prefix_aff_and_past_cap_are_noops():
+    rng = np.random.default_rng(2)
+    h, cap = 2, 8
+    vals = rng.normal(size=(h, cap)).astype(np.float32)
+    n = np.full(h, 6, np.int32)
+    svals, sidx = _sorted_runs(vals, n, cap)
+    x = rng.normal(size=(h,)).astype(np.float32)
+    # aff=False rows untouched
+    msv, msi, mn = merge_sorted_prefix(
+        jnp.asarray(svals), jnp.asarray(sidx), jnp.asarray(n), cap,
+        jnp.asarray(2, jnp.int32), jnp.asarray(x),
+        jnp.asarray([False, True]),
+    )
+    np.testing.assert_array_equal(np.asarray(msv)[0], svals[0])
+    np.testing.assert_array_equal(np.asarray(mn), [6, 7])
+    # j >= cap: the event landed beyond the prefix buffer entirely
+    msv, msi, mn = merge_sorted_prefix(
+        jnp.asarray(svals), jnp.asarray(sidx), jnp.asarray(n), cap,
+        jnp.asarray(cap, jnp.int32), jnp.asarray(x),
+    )
+    np.testing.assert_array_equal(np.asarray(msv), svals)
+    np.testing.assert_array_equal(np.asarray(msi), sidx)
+    np.testing.assert_array_equal(np.asarray(mn), n)
+
+
+# ---------------------------------------- cache-aware strategy resolution
+def test_resolve_afc_plan_cached_beats_small_cap_heuristic(monkeypatch):
+    monkeypatch.delenv("REPRO_AFC_BACKEND", raising=False)
+    # uncached small caps take the rescan path (the PR-5 crossover)...
+    assert resolve_afc_plan("auto", 256) == (False, None)
+    assert resolve_afc_plan("auto", 1024) == (False, None)
+    assert resolve_afc_plan("auto", 2048) == (True, None)
+    # ...but prebuilt tables pay zero precompute: cached wins at every cap
+    assert resolve_afc_plan("auto", 256, cached=True) == (True, None)
+    assert resolve_afc_plan("auto", 1024, cached=True) == (True, None)
+    assert resolve_afc_plan("auto", None, cached=True) == (True, None)
+
+
+def test_resolve_afc_plan_env_and_explicit_still_win(monkeypatch):
+    monkeypatch.setenv("REPRO_AFC_BACKEND", "ref")
+    # the ref-parity CI leg stays pinned even on cached paths
+    assert resolve_afc_plan("auto", 256, cached=True) == (False, False)
+    monkeypatch.setenv("REPRO_AFC_BACKEND", "incremental")
+    assert resolve_afc_plan("auto", 256, cached=True) == (True, False)
+    monkeypatch.delenv("REPRO_AFC_BACKEND", raising=False)
+    assert resolve_afc_plan("ref", 8192, cached=True) == (False, False)
+    assert resolve_afc_plan("kernel", 256, cached=True) == (True, True)
+
+
+# ----------------------------------------------------- FeatureCache unit
+def _small_cache(maxsize=8):
+    b = make_small_bundle()
+    pre = build_afc_precompute(k=2)
+    cache = FeatureCache(
+        b.store, pre.cold, pre.refresh, maxsize=maxsize
+    )
+    return b, cache
+
+
+def _specs(g):
+    return [("t", "v", g), ("t", "a", g)]
+
+
+def test_cache_hit_returns_same_entry():
+    b, cache = _small_cache()
+    e1 = cache.get(_specs(0), 128)
+    e2 = cache.get(_specs(0), 128)
+    assert e2 is e1
+    assert cache.stats == dict(hits=1, misses=1, refreshes=0, entries=1)
+
+
+def test_cache_append_triggers_delta_refresh_matching_rebuild():
+    b, cache = _small_cache()
+    table = b.store["t"]
+    cache.get(_specs(0), 128)
+    table.append({"v": [4.5, -1.0], "a": [0.25, 2.0]}, group_key=[0, 0])
+    entry = cache.get(_specs(0), 128)
+    assert cache.refreshes == 1 and cache.misses == 1
+    assert entry.versions == b.store.spec_versions(_specs(0))
+    # the shifted values buffer matches a fresh gather bitwise
+    want_vals, want_n = b.store.request_buffers(_specs(0), 128)
+    np.testing.assert_array_equal(np.asarray(entry.vals), np.asarray(want_vals))
+    np.testing.assert_array_equal(np.asarray(entry.n), np.asarray(want_n))
+    # the delta-updated tables match a cold rebuild to fp tolerance
+    rebuilt = cache.cold(want_vals, want_n)
+    np.testing.assert_array_equal(
+        np.asarray(entry.tables.shift), np.asarray(rebuilt.shift)
+    )
+    np.testing.assert_allclose(
+        np.asarray(entry.tables.ptab), np.asarray(rebuilt.ptab),
+        rtol=0, atol=1e-3,
+    )
+
+
+def test_cache_shift_basis_event_falls_back_to_rebuild():
+    """An insertion at j=0 replaces the power-sum shift basis, which the
+    delta path cannot express — the cache must cold-rebuild.  An append
+    into an EMPTY group always draws j=0 (Uniform{0..0})."""
+    b, cache = _small_cache()
+    table = b.store["t"]
+    table.add_group(77)
+    cache.get(_specs(77), 128)  # all-pad entry for the empty group
+    table.append({"v": [3.0], "a": [1.5]}, group_key=[77])
+    assert table.events_since(77, 0) == [(0, table.n_rows - 1)]
+    entry = cache.get(_specs(77), 128)
+    assert cache.misses == 2 and cache.refreshes == 0
+    assert np.asarray(entry.n).tolist() == [1, 1]
+    assert float(entry.vals[0, 0]) == 3.0
+
+
+def test_cache_aged_log_falls_back_to_rebuild():
+    b, cache = _small_cache()
+    table = b.store["t"]
+    cache.get(_specs(1), 128)
+    n = MAX_APPEND_LOG + 1
+    table.append(
+        {"v": np.zeros(n), "a": np.zeros(n)}, group_key=np.ones(n, int)
+    )
+    cache.get(_specs(1), 128)
+    assert cache.misses == 2 and cache.refreshes == 0
+
+
+def test_cache_lru_evicts_oldest():
+    b, cache = _small_cache(maxsize=2)
+    cache.get(_specs(0), 128)
+    cache.get(_specs(1), 128)
+    cache.get(_specs(2), 128)  # evicts group 0
+    assert len(cache) == 2
+    cache.get(_specs(1), 128)  # still resident
+    cache.get(_specs(0), 128)  # re-miss
+    assert cache.stats["hits"] == 1 and cache.stats["misses"] == 4
+
+
+# -------------------------------------------- served parity + contracts
+def test_cached_server_parity_hits_and_appends():
+    """Cache hit == cache miss == uncached: the single-request server with
+    a feature cache serves the identical z-plan (bitwise) and matching
+    prediction on the first (miss) and second (hit) pass, keeps serving
+    after appends (delta refresh), and mints zero executables on hits."""
+    b = make_small_bundle()
+    oracle = BiathlonServer(make_small_bundle(), SMALL_CFG, mode="fused")
+    srv = BiathlonServer(b, SMALL_CFG, mode="fused", cache_size=8)
+    reqs = [{"g": g} for g in (0, 1, 2)]
+    miss = [srv.serve(r) for r in reqs]
+    compiles_after_miss = srv.compile_count
+    hit = [srv.serve(r) for r in reqs]
+    assert srv.compile_count == compiles_after_miss, "a hit minted code"
+    assert srv.cache.stats["hits"] == len(reqs)
+    for r, a, h in zip(reqs, miss, hit):
+        want = oracle.serve(r)
+        np.testing.assert_array_equal(a["z"], want["z"])
+        np.testing.assert_array_equal(a["z"], h["z"])
+        scale = max(abs(want["y_hat"]), 1.0)
+        assert abs(a["y_hat"] - want["y_hat"]) <= 1e-4 * scale
+        assert a["y_hat"] == h["y_hat"]
+    srv.check_compile_contract()
+
+    # stream rows into a served group: both servers see the same store
+    # mutation (the oracle rebuilds, the cached server delta-refreshes)
+    rows = {"v": [2.0, -3.0, 0.5], "a": [1.0, 1.0, 0.0]}
+    b.store["t"].append(rows, group_key=[0, 0, 0])
+    oracle.bundle.store["t"].append(rows, group_key=[0, 0, 0])
+    # identical RNG streams => identical insertion positions
+    got, want = srv.serve(reqs[0]), oracle.serve(reqs[0])
+    assert srv.cache.stats["refreshes"] == 1
+    np.testing.assert_array_equal(got["z"], want["z"])
+    assert abs(got["y_hat"] - want["y_hat"]) <= 1e-3 * max(abs(want["y_hat"]), 1.0)
+    srv.check_compile_contract()
+
+
+def test_batched_cached_parity_and_mesh_exclusion():
+    b = make_small_bundle()
+    reqs = [{"g": g} for g in range(4)]
+    plain = BatchedFusedServer(b, SMALL_CFG, batch_size=4)
+    want = plain.serve_batch(reqs)
+    srv = BatchedFusedServer(b, SMALL_CFG, batch_size=4, cache_size=8)
+    got = srv.serve_batch(reqs)
+    np.testing.assert_array_equal(np.asarray(got.z), np.asarray(want.z))
+    np.testing.assert_array_equal(
+        np.asarray(got.iters), np.asarray(want.iters)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.y_hat), np.asarray(want.y_hat), rtol=1e-4, atol=1e-5
+    )
+    again = srv.serve_batch(reqs)  # all-hit pass: bitwise stable
+    np.testing.assert_array_equal(np.asarray(again.z), np.asarray(got.z))
+    np.testing.assert_array_equal(
+        np.asarray(again.y_hat), np.asarray(got.y_hat)
+    )
+    srv.check_compile_contract()
+
+    from repro.launch.mesh import make_serving_mesh
+
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        BatchedFusedServer(
+            b, SMALL_CFG, batch_size=4, mesh=make_serving_mesh(1), cache_size=4
+        )
+
+
+def test_continuous_cached_parity_and_contract():
+    b = make_small_bundle()
+    reqs = [{"g": g} for g in range(4)]
+    fixed = BatchedFusedServer(b, SMALL_CFG, batch_size=4)
+    want = fixed.serve_batch(reqs)
+
+    srv = ContinuousBatchedServer(
+        b, SMALL_CFG, batch_size=4, chunk_iters=3, cache_size=8
+    )
+    cap = srv.trace_cap(reqs)
+    table = srv.new_table(cap)
+    assert srv.compile_count == 0, "new_table must stay abstract (eval_shape)"
+    table, _ = srv.admit(
+        table, cap, [(i, r, None) for i, r in enumerate(reqs)]
+    )
+    out = srv.readback(table)
+    while not out["done"].all():
+        table = srv.run_chunk(table)
+        out = srv.readback(table)
+    np.testing.assert_array_equal(out["z"], np.asarray(want.z))
+    np.testing.assert_array_equal(out["it"], np.asarray(want.iters))
+    np.testing.assert_allclose(
+        out["y_hat"], np.asarray(want.y_hat), rtol=1e-4, atol=1e-5
+    )
+    compiles = srv.compile_count
+    table, _ = srv.admit(table, cap, [(0, reqs[0], None)])  # cache hit
+    assert srv.compile_count == compiles
+    srv.check_compile_contract()
+
+    from repro.launch.mesh import make_serving_mesh
+
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ContinuousBatchedServer(
+            b, SMALL_CFG, batch_size=4, mesh=make_serving_mesh(1),
+            cache_size=4,
+        )
