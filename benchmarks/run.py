@@ -55,6 +55,9 @@ def main() -> None:
         # continuous batching vs fixed lanes on one saturating trace
         # (BENCH_serving.json["continuous_batching"])
         "perf_continuous": serving_load.run_continuous,
+        # availability under a seeded fault storm: rollback/quarantine
+        # recovery must be bitwise-exact (BENCH_serving.json["fault_recovery"])
+        "perf_fault_recovery": serving_load.run_fault_recovery,
         # device-scaling sweep; fork-safe (re-execs itself with fresh
         # XLA_FLAGS), so the tracked sharded_scaling section can never go
         # stale relative to the serving_load section written above

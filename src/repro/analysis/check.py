@@ -190,6 +190,221 @@ def cache_coherence_findings(
     return findings
 
 
+def _drain_lanes(srv: Any, table: Any, lanes: Sequence[int],
+                 max_chunks: int = 128) -> tuple[Any, dict]:
+    """Chunk until every named lane reports done (bounded), then read back."""
+    for _ in range(max_chunks):
+        out = srv.readback(table)
+        if all(bool(out["done"][l]) for l in lanes):
+            return table, out
+        table = srv.run_chunk(table)
+    return table, srv.readback(table)
+
+
+def rollback_findings(
+    srv: Any, requests: Sequence[dict[str, Any]], exe: str,
+    *, skip_restore: Sequence[str] = (),
+) -> list[LintFinding]:
+    """Crash a chunk mid-flight, roll back, replay; diff bitwise vs oracle.
+
+    The rollback invariant (DESIGN.md § Fault tolerance): restoring the
+    CHUNK_CARRY_LEAVES snapshot after a mid-chunk wreck and replaying must
+    be bitwise-identical to the fault-free run — the bootstrap RNG is
+    counter-based on the restored iteration index, so nothing is re-drawn.
+    ``skip_restore`` is the sensitivity seam for the
+    ``rollback_skips_bootstrap_carry`` mutant (analysis/mutations.py): a
+    rollback that forgets a carry leaf must trip this probe.
+    """
+    from repro.serving import faults
+
+    lanes = list(range(min(srv.batch_size, len(requests))))
+    reqs = [requests[l] for l in lanes]
+    cap = srv.trace_cap(reqs)
+    assignments = [(l, reqs[l], None) for l in lanes]
+    table = srv.new_table(cap)
+    table, _ = srv.admit(table, cap, assignments)
+    _, want = _drain_lanes(srv, table, lanes)
+
+    table = srv.new_table(cap)
+    table, _ = srv.admit(table, cap, assignments)
+    table = srv.run_chunk(table)
+    ckpt = srv.snapshot(table)
+    wreck = faults.scramble_chunk_carry(table)  # simulated mid-chunk crash
+    kept = {k: v for k, v in ckpt.items() if k not in skip_restore}
+    table = srv.restore(wreck, kept)
+    _, got = _drain_lanes(srv, table, lanes)
+
+    findings: list[LintFinding] = []
+    for l in lanes:
+        same_z = bool(np.array_equal(want["z"][l], got["z"][l]))
+        same_y = bool(
+            np.asarray(want["y_hat"][l]).tobytes()
+            == np.asarray(got["y_hat"][l]).tobytes()
+        )
+        if not (same_z and same_y):
+            findings.append(LintFinding(
+                contract="rollback_replay", executable=exe,
+                where=f"lane[{l}]",
+                message=(
+                    "replay after chunk rollback diverged from the "
+                    f"fault-free oracle (z match={same_z}, y_hat "
+                    f"{got['y_hat'][l]:.6g} vs {want['y_hat'][l]:.6g}): "
+                    "the checkpoint must restore every chunk-mutable "
+                    "carry leaf"
+                ),
+            ))
+    return findings
+
+
+def quarantine_findings(
+    srv: Any, requests: Sequence[dict[str, Any]], exe: str,
+    *, reset_on_readmit: bool = True,
+) -> list[LintFinding]:
+    """Poison one lane's carry, quarantine + re-admit, diff bitwise vs oracle.
+
+    Two invariants: the poisoned lane's FULL re-admission must converge to
+    the same result as a never-poisoned run (admits re-init every lane leaf
+    from counter-based RNG), and the neighbor lane must be bitwise
+    untouched (quarantine is per-lane, never table-wide).
+    ``reset_on_readmit=False`` is the sensitivity seam for the
+    ``quarantine_readmit_without_reset`` mutant: flag-flipping the lane
+    back to live while keeping its poisoned carry must trip this probe.
+    """
+    import jax
+
+    from repro.serving import faults
+
+    lanes = [0, 1]
+    reqs = list(requests[:2])
+    cap = srv.trace_cap(reqs)
+    assignments = [(l, reqs[l], None) for l in lanes]
+    table = srv.new_table(cap)
+    table, _ = srv.admit(table, cap, assignments)
+    _, want = _drain_lanes(srv, table, lanes)
+
+    table = srv.new_table(cap)
+    table, _ = srv.admit(table, cap, assignments)
+    table = srv.run_chunk(table)
+    table = faults.poison_lane_carry(table, 0)
+    if reset_on_readmit:
+        table = srv.clear_lanes(table, [0])
+        table, _ = srv.admit(table, cap, [(0, reqs[0], None)])
+    else:
+        # the seeded bug: "re-admit" by flipping the lane flags back to
+        # live while keeping the poisoned carry
+        done = np.asarray(table.done).copy()
+        active = np.asarray(table.active).copy()
+        done[0] = False
+        active[0] = True
+        table = table._replace(
+            done=jax.device_put(done, table.done.sharding),
+            active=jax.device_put(active, table.active.sharding),
+        )
+    _, got = _drain_lanes(srv, table, lanes)
+
+    findings: list[LintFinding] = []
+    for l, label in ((0, "re-admitted"), (1, "neighbor")):
+        same_z = bool(np.array_equal(want["z"][l], got["z"][l]))
+        same_y = bool(
+            np.asarray(want["y_hat"][l]).tobytes()
+            == np.asarray(got["y_hat"][l]).tobytes()
+        )
+        if not (same_z and same_y):
+            findings.append(LintFinding(
+                contract="quarantine_isolation", executable=exe,
+                where=f"lane[{l}] ({label})",
+                message=(
+                    f"{label} lane diverged from the never-poisoned oracle "
+                    f"(z match={same_z}, y_hat {got['y_hat'][l]:.6g} vs "
+                    f"{want['y_hat'][l]:.6g}): quarantine must fully "
+                    "re-initialize the poisoned lane and touch nothing else"
+                ),
+            ))
+    return findings
+
+
+def store_recovery_findings(bundle: Any, exe: str) -> list[LintFinding]:
+    """Journal-replay recovery must rebuild the index byte-identical.
+
+    Appends a few rows (journaled), tears the derived index state the way a
+    crash mid-append would (shuffled permutation, bumped offsets, cleared
+    version counters), then requires :meth:`Table.recover` to rebuild
+    ``perm`` / ``group_ptr`` / ``versions`` exactly equal to the
+    never-crashed state.
+    """
+    findings: list[LintFinding] = []
+    t, _c, g = bundle.pipeline.agg_specs(bundle.requests[0])[0]
+    table = bundle.store[t]
+    for shift in (0.5, -1.25):
+        table.append(
+            {name: [float(np.asarray(col[np.isfinite(col)]).mean()) + shift]
+             for name, col in table.columns.items()},
+            group_key=g,
+        )
+    want = (table.perm.copy(), table.group_ptr.copy(),
+            dict(table.group_ids), list(table.versions))
+    # tear the derived state: recover() must not depend on any of it
+    rng = np.random.default_rng(0)
+    table.perm = rng.permutation(table.perm)
+    table.group_ptr = table.group_ptr + 7
+    table.versions = []
+    table.recover()
+    got = (table.perm, table.group_ptr, table.group_ids, table.versions)
+    same = (
+        np.array_equal(want[0], got[0])
+        and np.array_equal(want[1], got[1])
+        and want[2] == dict(got[2])
+        and want[3] == list(got[3])
+    )
+    if not same:
+        findings.append(LintFinding(
+            contract="store_recovery", executable=exe,
+            where=f"table[{t}]",
+            message=(
+                "journal replay did not rebuild the index byte-identical "
+                "to the never-crashed table (perm/group_ptr/versions "
+                "mismatch)"
+            ),
+        ))
+    return findings
+
+
+def cache_integrity_findings(bundle: Any, exe: str) -> list[LintFinding]:
+    """A flipped byte in a resident entry must be detected, never served."""
+    from repro.serving import corrupt_cache_entry
+
+    findings: list[LintFinding] = []
+    srv = BiathlonServer(bundle, CFG, mode="fused", cache_size=4)
+    req = bundle.requests[0]
+    want = srv.serve(req)
+    srv.cache.verify_hits = True
+    if not corrupt_cache_entry(srv.cache, seed=0):
+        findings.append(LintFinding(
+            contract="cache_integrity", executable=exe, where="<cache>",
+            message="corruption probe found no resident entry to flip",
+        ))
+        return findings
+    got = srv.serve(req)  # must detect, drop, rebuild cold
+    if srv.cache.corruptions < 1:
+        findings.append(LintFinding(
+            contract="cache_integrity", executable=exe, where="<cache>",
+            message=(
+                "a flipped byte in a resident entry went undetected: the "
+                "power-sum checksum must fail the entry on the hit path"
+            ),
+        ))
+    if not (np.array_equal(want["z"], got["z"])
+            and want["y_hat"] == got["y_hat"]):
+        findings.append(LintFinding(
+            contract="cache_integrity", executable=exe, where="<cache>",
+            message=(
+                "post-corruption rebuild diverged from the pre-corruption "
+                f"serve (y {got['y_hat']:.6g} vs {want['y_hat']:.6g})"
+            ),
+        ))
+    return findings
+
+
 # --------------------------------------------------------- per-executable
 def check_fused(
     bundle: Any, *, mesh: Any = None, n_devices: int = 1
@@ -333,6 +548,42 @@ def check_feature_cache(
     return exe, findings + f2, facts
 
 
+def check_recovery(
+    bundle: Any,
+) -> tuple[str, list[LintFinding], dict[str, Any]]:
+    """Fault-tolerance probes (PR 10): rollback, quarantine, recovery.
+
+    Four dynamic invariants on the REAL servers (no fault profile — the
+    probes crash the state directly, so they are deterministic):
+
+    1. chunk rollback — restore + replay is bitwise-identical to fault-free;
+    2. lane quarantine — a poisoned lane's full re-admission matches the
+       never-poisoned oracle and its neighbor is untouched;
+    3. store recovery — journal replay rebuilds the derived index
+       byte-identical after a torn crash state;
+    4. cache integrity — a flipped byte in a resident entry is detected by
+       the power-sum checksum and rebuilt, never served.
+
+    Mutates the store (journaled appends + recover), so it must run LAST
+    for its pipeline.
+    """
+    exe = f"{bundle.name}/recovery"
+    srv = ContinuousBatchedServer(bundle, CFG, batch_size=2, chunk_iters=2)
+    reqs = list(bundle.requests[:2])
+    f_roll = rollback_findings(srv, reqs, exe)
+    f_quar = quarantine_findings(srv, reqs, exe)
+    f_cache = cache_integrity_findings(bundle, exe)
+    f_store = store_recovery_findings(bundle, exe)
+    facts = {
+        "contract": "recovery",
+        "rollback_bitwise": not f_roll,
+        "quarantine_isolated": not f_quar,
+        "store_recover_exact": not f_store,
+        "cache_corruption_detected": not f_cache,
+    }
+    return exe, f_roll + f_quar + f_cache + f_store, facts
+
+
 def check_flatness() -> tuple[str, list[LintFinding], dict[str, Any]]:
     """Incremental-AFC while-body flatness probe (pipeline-independent).
 
@@ -388,8 +639,12 @@ def run_checks(
         for exe, f, fa in check_continuous(bundle):
             findings += f
             facts[exe] = fa
-        # LAST per pipeline: the append-coherence probe mutates the store
+        # LAST per pipeline: these probes mutate the store (append
+        # coherence, then journaled appends + recovery)
         exe, f, fa = check_feature_cache(bundle)
+        findings += f
+        facts[exe] = fa
+        exe, f, fa = check_recovery(bundle)
         findings += f
         facts[exe] = fa
     if flatness:

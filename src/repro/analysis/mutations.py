@@ -229,6 +229,60 @@ def stale_cache_read() -> list[LintFinding]:
     )
 
 
+def rollback_skips_bootstrap_carry() -> list[LintFinding]:
+    """A chunk rollback that forgets to restore the bootstrap RNG carry.
+
+    The checkpoint set is ALL of ``CHUNK_CARRY_LEAVES``; the bootstrap
+    draws are counter-based on the carried iteration index
+    (``jax.random.fold_in(base_key, it)``), so ``it`` IS the bootstrap
+    carry — a rollback that restores the plan/prediction leaves but leaves
+    the wrecked counter in place replays the remaining chunks with shifted
+    replicate draws and a broken iter-cap ledger.  Uses ``sensor_health``
+    (holistic: median + tail quantiles) so the counter-keyed bootstrap is
+    actually on the hot path; the bitwise rollback-replay probe
+    (``analysis.check.rollback_findings``) must see the divergence.
+    """
+    from repro.analysis.check import rollback_findings
+    from repro.core.executor import BiathlonConfig
+    from repro.data.synthetic import make_pipeline
+    from repro.serving.continuous import ContinuousBatchedServer
+
+    b = make_pipeline("sensor_health", rows_per_group=120, n_train_groups=20,
+                      n_serve_groups=2, n_requests=2)
+    cfg = BiathlonConfig(m=32, m_sobol=8, n_bootstrap=16)
+    srv = ContinuousBatchedServer(b, cfg, batch_size=2, chunk_iters=2)
+    return rollback_findings(
+        srv, list(b.requests[:2]), "mutant/rollback_skips_it",
+        skip_restore=("it",),  # the seeded bug: one carry leaf forgotten
+    )
+
+
+def quarantine_readmit_without_reset() -> list[LintFinding]:
+    """A quarantine that re-admits a poisoned lane by flag-flip.
+
+    The broken recovery shortcut: instead of evicting the lane and paying a
+    full re-admission (which re-initializes every lane leaf from
+    counter-based RNG), the lane's ``done``/``active`` flags are flipped
+    back to live with the poisoned carry still in place — the scrambled
+    plan and NaN prediction leak into the "recovered" request.  The
+    quarantine-isolation probe (``analysis.check.quarantine_findings``)
+    must see the re-admitted lane diverge from the never-poisoned oracle.
+    """
+    from repro.analysis.check import quarantine_findings
+    from repro.core.executor import BiathlonConfig
+    from repro.data.synthetic import make_pipeline
+    from repro.serving.continuous import ContinuousBatchedServer
+
+    b = make_pipeline("turbofan", rows_per_group=120, n_train_groups=20,
+                      n_serve_groups=2, n_requests=2)
+    cfg = BiathlonConfig(m=32, m_sobol=8, n_bootstrap=16)
+    srv = ContinuousBatchedServer(b, cfg, batch_size=2, chunk_iters=2)
+    return quarantine_findings(
+        srv, list(b.requests[:2]), "mutant/quarantine_no_reset",
+        reset_on_readmit=False,  # the seeded bug: carry kept across re-admit
+    )
+
+
 #: name -> builder; each must return >= 1 finding or the checker is blind.
 MUTATIONS: dict[str, Callable[[], list[LintFinding]]] = {
     "injected_collective": injected_collective,
@@ -238,4 +292,6 @@ MUTATIONS: dict[str, Callable[[], list[LintFinding]]] = {
     "host_callback_in_loop": host_callback_in_loop,
     "cap_leak_in_loop_body": cap_leak_in_loop_body,
     "stale_cache_read": stale_cache_read,
+    "rollback_skips_bootstrap_carry": rollback_skips_bootstrap_carry,
+    "quarantine_readmit_without_reset": quarantine_readmit_without_reset,
 }

@@ -124,6 +124,7 @@ from repro.kernels.sampled_agg.prefix_stats import (
 f32 = jnp.float32
 
 __all__ = [
+    "CHUNK_CARRY_LEAVES",
     "FusedResult",
     "LaneState",
     "PrebuiltTables",
@@ -227,6 +228,16 @@ class LaneState(NamedTuple):
     ptab: jnp.ndarray
     shift: jnp.ndarray
     rindex: HolisticRankIndex
+
+
+#: The LaneState leaves the chunk executable actually mutates (its
+#: ``state._replace`` set).  Every other leaf — request inputs, knobs, AFC
+#: handles — is content-invariant across a chunk dispatch (donated and
+#: aliased through, values unchanged), so a chunk-boundary checkpoint is
+#: host copies of exactly these small per-lane leaves: the recovery layer
+#: (serving/runtime.py) snapshots them before each dispatch and restores
+#: them with plain ``device_put`` — zero new executables.
+CHUNK_CARRY_LEAVES = ("z", "it", "y_hat", "prob", "idx", "reps", "done")
 
 
 def empty_rank_index() -> HolisticRankIndex:

@@ -23,6 +23,25 @@ the cache-invalidation signal for device-resident precompute
 (serving/feature_cache.py) — and is recorded in a bounded per-group append
 log so cached prefix tables can be *delta-updated* instead of rebuilt.
 
+**Crash recovery** (DESIGN.md § Fault tolerance): the bounded per-group log
+is a cache-refresh convenience, not a durability story, so every append is
+ALSO written to an unbounded **journal** stamped with a table-wide monotone
+sequence number.  The raw column arrays play the durable-storage role; the
+derived index state (``perm`` / ``group_ptr`` / ``versions`` / the bounded
+log) is exactly what a crash or a partial write can corrupt, and
+:meth:`Table.recover` rebuilds all of it by replaying the journal over the
+build-time base state — byte-identical to the never-crashed table, because
+each journal entry carries the ORIGINAL drawn prefix position ``j`` (no
+re-draws on replay).  ``recover`` can also revalidate attached feature
+caches so device-resident entries whose version/checksum no longer match
+the rebuilt store are dropped instead of served.
+
+**Input sanitization**: a NaN/Inf smuggled into a column poisons every
+prefix power sum built over it, so :meth:`Table.append` polices values at
+the edge — ``sanitize="reject"`` (default) raises naming the table, column
+and offending row; ``sanitize="clamp"`` maps NaN to 0.0 (the store's
+neutral pad value) and ±Inf to the column's observed finite range.
+
 The store is deliberately framework-agnostic (plain numpy in, jnp out) so the
 serving runtime, the fused executor, and the benchmarks all share it.
 """
@@ -75,6 +94,24 @@ class Table:
     _log: dict[int, list[tuple[int, int, int]]] = field(
         default_factory=dict, repr=False
     )
+    #: Table-wide monotone sequence number; stamped on every journal entry.
+    seq: int = field(default=0, repr=False)
+    # Complete append journal, oldest first: (seq, external group key, j,
+    # row_id), with j = -1 marking a group registration (add_group) event.
+    # Unlike the bounded ``_log`` this is never truncated — it is the
+    # replay source for :meth:`recover`.
+    _journal: list[tuple[int, int, int, int]] = field(
+        default_factory=list, repr=False
+    )
+
+    def __post_init__(self) -> None:
+        # Build-time base state recover() replays the journal over.  These
+        # are index-only copies (permutation + CSR offsets), never column
+        # data — the raw columns are the durable record.
+        self._base_perm = self.perm.copy()
+        self._base_ptr = self.group_ptr.copy()
+        self._base_gids = dict(self.group_ids)
+        self._base_versions = list(self.versions)
 
     @property
     def n_rows(self) -> int:
@@ -152,6 +189,13 @@ class Table:
         key = int(gid)
         if key in self.group_ids:
             return self.group_ids[key]
+        g = self._register_group(key)
+        self.seq += 1
+        self._journal.append((self.seq, key, -1, -1))
+        return g
+
+    def _register_group(self, key: int) -> int:
+        """Grow the index for a new group WITHOUT journaling (replay path)."""
         g = self.n_groups
         self.group_ptr = np.append(self.group_ptr, self.group_ptr[-1])
         self.group_ids[key] = g
@@ -162,7 +206,52 @@ class Table:
         while len(self.versions) <= g:
             self.versions.append(0)
 
-    def append(self, rows: Mapping[str, np.ndarray], group_key) -> None:
+    def _sanitize_columns(
+        self, new_cols: dict[str, np.ndarray], policy: str
+    ) -> dict[str, np.ndarray]:
+        """Police NaN/Inf at the ingest edge (they poison prefix power sums).
+
+        ``reject`` raises naming the table, column and offending row within
+        the append batch; ``clamp`` maps NaN to 0.0 (the store's neutral pad
+        value) and ±Inf to the column's observed finite range.
+        """
+        if policy not in ("reject", "clamp"):
+            raise ValueError(
+                f"table {self.name or '<unnamed>'!r}: unknown sanitize "
+                f"policy {policy!r} (expected 'reject' or 'clamp')"
+            )
+        for k, v in new_cols.items():
+            if not np.issubdtype(v.dtype, np.floating):
+                continue
+            bad = ~np.isfinite(v)
+            if not bad.any():
+                continue
+            if policy == "reject":
+                i = int(np.flatnonzero(bad)[0])
+                raise ValueError(
+                    f"table {self.name or '<unnamed>'!r}: non-finite value "
+                    f"{float(v[i])!r} in append column {k!r} at batch row "
+                    f"{i} (sanitize='reject'; pass sanitize='clamp' to "
+                    f"coerce)"
+                )
+            old = self.columns[k]
+            pool = np.concatenate([old[np.isfinite(old)], v[~bad]])
+            hi = float(pool.max()) if pool.size else 0.0
+            lo = float(pool.min()) if pool.size else 0.0
+            w = v.copy()
+            w[np.isnan(v)] = 0.0
+            w[v == np.inf] = hi
+            w[v == -np.inf] = lo
+            new_cols[k] = w
+        return new_cols
+
+    def append(
+        self,
+        rows: Mapping[str, np.ndarray],
+        group_key,
+        *,
+        sanitize: str = "reject",
+    ) -> None:
         """Append rows, drawing each one's SRS position from the seeded RNG.
 
         ``rows`` maps every existing column name to a (r,) array;
@@ -174,7 +263,8 @@ class Table:
 
         Each insertion bumps the group's version and is logged (bounded at
         ``MAX_APPEND_LOG`` per group) so device-resident caches can
-        delta-update instead of rebuilding.
+        delta-update instead of rebuilding — and journaled (unbounded,
+        sequence-stamped) so :meth:`recover` can rebuild the index state.
         """
         group_key = np.atleast_1d(np.asarray(group_key))
         r = group_key.shape[0]
@@ -195,11 +285,13 @@ class Table:
                     f"table {self.name or '<unnamed>'!r}: column {k!r} has "
                     f"{v.shape[0]} rows, group_key has {r}"
                 )
+        new_cols = self._sanitize_columns(new_cols, sanitize)
         base = self.n_rows
         for k in self.columns:
             self.columns[k] = np.concatenate([self.columns[k], new_cols[k]])
         for i in range(r):
-            g = self.add_group(int(group_key[i]))
+            key = int(group_key[i])
+            g = self.add_group(key)
             row_id = base + i
             start = int(self.group_ptr[g])
             m = int(self.group_ptr[g + 1]) - start
@@ -211,6 +303,8 @@ class Table:
             log = self._log.setdefault(g, [])
             log.append((self.versions[g], j, row_id))
             del log[:-MAX_APPEND_LOG]
+            self.seq += 1
+            self._journal.append((self.seq, key, j, row_id))
 
     def events_since(
         self, gid: int, version: int
@@ -229,6 +323,65 @@ class Table:
         if not log or log[0][0] > version + 1:
             return None
         return [(j, row_id) for (v, j, row_id) in log if v > version]
+
+    # --- crash recovery ----------------------------------------------------
+    def recover(self, caches: tuple = ()) -> dict[str, int]:
+        """Rebuild the derived index state by replaying the append journal.
+
+        The raw column arrays are the durable record; ``perm`` /
+        ``group_ptr`` / ``group_ids`` / ``versions`` / the bounded log are
+        all derived, and a crash mid-append (or a corrupted buffer) can
+        leave any of them torn.  Replaying the journal over the build-time
+        base state rebuilds them byte-identical to the never-crashed table:
+        each entry carries the ORIGINAL drawn prefix position ``j``, so no
+        randomness is re-drawn and the SRS trajectory is reproduced exactly.
+
+        ``caches`` are :class:`~repro.serving.feature_cache.FeatureCache`
+        instances to revalidate afterwards — entries whose stored version or
+        checksum no longer match the rebuilt store are dropped rather than
+        served.  Returns counters: events replayed, groups rebuilt, cache
+        entries dropped.
+        """
+        seqs = [e[0] for e in self._journal]
+        if seqs and seqs != list(range(seqs[0], seqs[0] + len(seqs))):
+            raise ValueError(
+                f"table {self.name or '<unnamed>'!r}: append journal is not "
+                f"a gap-free monotone sequence — cannot recover"
+            )
+        perm = self._base_perm.copy()
+        ptr = self._base_ptr.copy()
+        gids = dict(self._base_gids)
+        versions = list(self._base_versions)
+        log: dict[int, list[tuple[int, int, int]]] = {}
+        for (_seq, key, j, row_id) in self._journal:
+            if j < 0:
+                if key not in gids:
+                    gids[key] = len(ptr) - 1
+                    ptr = np.append(ptr, ptr[-1])
+                    while len(versions) < len(ptr) - 1:
+                        versions.append(0)
+                continue
+            g = gids[key]
+            start = int(ptr[g])
+            perm = np.insert(perm, start + j, row_id)
+            ptr[g + 1 :] += 1
+            while len(versions) <= g:
+                versions.append(0)
+            versions[g] += 1
+            glog = log.setdefault(g, [])
+            glog.append((versions[g], j, row_id))
+            del glog[:-MAX_APPEND_LOG]
+        self.perm = perm
+        self.group_ptr = ptr
+        self.group_ids = gids
+        self.versions = versions
+        self._log = log
+        dropped = sum(int(c.revalidate()) for c in caches)
+        return {
+            "replayed": len(self._journal),
+            "groups": len(gids),
+            "cache_entries_dropped": dropped,
+        }
 
 
 def build_table(

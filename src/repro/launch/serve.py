@@ -33,8 +33,12 @@ installs the knob-tier admission controller (deadline-driven (delta, tau,
 iter_cap) scaling + load shedding; serving/degrade.py), and
 ``--fault-profile`` injects a seeded fault schedule (service-time spikes,
 transient executor failures, or an arrival burst; serving/faults.py) to
-exercise degradation and recovery.  Fault profiles wrap ``serve_batch``
-and are therefore fixed-lane only — fused-continuous rejects them.
+exercise degradation and recovery.  On fused-continuous the profiles map
+to chunk-granular fault points (chunk-dispatch failures roll back to the
+checkpointed chunk boundary and replay; refill failures retry the
+admission) and a continuous-only ``poison`` profile NaN-scrambles a
+lane's carry to exercise per-lane quarantine.  All of it composes with
+``--degrade``, ``--devices``, and ``--cache-size``.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --pipeline trip_fare
@@ -130,10 +134,12 @@ def main():
     ap.add_argument("--max-queue", type=int, default=None,
                     help="shed when the queue exceeds this bound (--degrade)")
     ap.add_argument("--fault-profile",
-                    choices=("none", "spikes", "failures", "burst"),
+                    choices=("none", "spikes", "failures", "burst", "poison"),
                     default="none",
-                    help="seeded fault schedule wrapped around serve_batch "
-                    "(serving/faults.py)")
+                    help="seeded fault schedule wrapped around the server "
+                    "(serving/faults.py): serve_batch-level on fixed-lane "
+                    "modes, chunk-granular on fused-continuous; 'poison' "
+                    "(lane-carry NaN scramble) is fused-continuous only")
     ap.add_argument("--fault-seed", type=int, default=0)
     ap.add_argument("--cache-size", type=int, default=None,
                     help="enable the hot-group feature cache with this many "
@@ -163,12 +169,12 @@ def main():
             ContinuousBatchedServer,
             ContinuousServingRuntime,
             DegradationController,
+            FaultProfile,
+            FaultyContinuousServer,
             default_tiers,
+            inject_burst,
         )
 
-        if args.fault_profile != "none":
-            ap.error("--fault-profile wraps serve_batch and is fixed-lane "
-                     "only; use --mode fused-batched / fused-sharded")
         mesh = None
         if args.devices is not None:
             from repro.launch.mesh import make_serving_mesh
@@ -183,6 +189,12 @@ def main():
             bundle.requests, args.arrival_rate, n=args.requests,
             seed=args.seed,
         )
+        if args.fault_profile == "burst":
+            mid = arrivals[len(arrivals) // 2][0]
+            arrivals = inject_burst(
+                arrivals, at_t=mid, n=max(args.requests, 8),
+                width_s=0.05, seed=args.fault_seed,
+            )
         controller = None
         if args.degrade:
             # seed the controller's per-request service estimate from one
@@ -205,18 +217,36 @@ def main():
                 lanes=args.batch_size,
                 max_queue=args.max_queue,
             )
+        # pre-warm the INNER server before wrapping it: injected faults
+        # must hit measured traffic (with call indices starting at 0),
+        # never the compilation warmup
+        ContinuousServingRuntime(srv).warmup([a[1] for a in arrivals])
+        server = srv
+        if args.fault_profile == "spikes":
+            server = FaultyContinuousServer(
+                srv, FaultProfile(seed=args.fault_seed, spike_prob=0.2,
+                                  spike_s=0.25),
+            )
+        elif args.fault_profile == "failures":
+            server = FaultyContinuousServer(
+                srv, FaultProfile(seed=args.fault_seed, chunk_fail_prob=0.1,
+                                  refill_fail_prob=0.05),
+            )
+        elif args.fault_profile == "poison":
+            server = FaultyContinuousServer(
+                srv, FaultProfile(seed=args.fault_seed, poison_prob=0.05),
+            )
         runtime = ContinuousServingRuntime(
-            srv,
+            server,
             slo_s=None if args.slo_ms is None else args.slo_ms / 1e3,
             controller=controller,
         )
-        runtime.warmup([a[1] for a in arrivals])
         stats = runtime.run(arrivals, warmup=False)
         print(f"[serve] {args.pipeline} mode={args.mode} "
               f"rate={args.arrival_rate:.1f}rps lanes={args.batch_size} "
               f"devices={srv.n_devices} chunk_iters={args.chunk_iters} "
               f"delta={delta:.4f} slo={args.slo_ms}ms "
-              f"degrade={args.degrade}")
+              f"degrade={args.degrade} faults={args.fault_profile}")
         _print_table(stats.summary())
         return
 
@@ -231,6 +261,9 @@ def main():
             inject_burst,
         )
 
+        if args.fault_profile == "poison":
+            ap.error("--fault-profile poison scrambles lane carry at chunk "
+                     "boundaries; use --mode fused-continuous")
         mesh = None
         if args.mode == "fused-sharded":
             from repro.launch.mesh import make_serving_mesh

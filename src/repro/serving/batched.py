@@ -53,9 +53,51 @@ __all__ = [
     "chunked_straggler_report",
     "device_fill",
     "lane_request_inputs",
+    "sanitize_lane_inputs",
     "straggler_report",
     "validate_serving_mesh",
 ]
+
+
+def sanitize_lane_inputs(vals, exact, *, policy: str, where: str):
+    """Police NaN/Inf in a lane's host-side inputs at the serving edge.
+
+    A non-finite feature value entering the executor propagates through
+    every prefix power sum and megabatch evaluation of its lane — and with
+    continuous batching the poisoned carry then LIVES in the lane table.
+    ``policy='reject'`` raises naming the offending buffer, feature row and
+    position; ``policy='clamp'`` zeroes non-finite entries (0.0 is the
+    store's neutral pad value, masked out by estimators at true prefix
+    lengths).  ``vals`` may be ``None`` (cached admissions keep their
+    values device-resident and are protected by the cache's integrity
+    check instead).  Returns the (possibly rewritten) ``(vals, exact)``.
+    """
+    if policy not in ("reject", "clamp"):
+        raise ValueError(
+            f"{where}: unknown sanitize policy {policy!r} "
+            f"(expected 'reject' or 'clamp')"
+        )
+    out = []
+    for name, buf in (("vals", vals), ("exact", exact)):
+        if buf is None:
+            out.append(None)
+            continue
+        buf = np.asarray(buf)
+        bad = ~np.isfinite(buf)
+        if not bad.any():
+            out.append(buf)
+            continue
+        if policy == "reject":
+            pos = tuple(int(x) for x in np.argwhere(bad)[0])
+            raise ValueError(
+                f"{where}: non-finite value {float(buf[pos])!r} in request "
+                f"{name} buffer at {pos} (sanitize='reject'; use "
+                f"sanitize='clamp' to coerce, or fix the store column)"
+            )
+        buf = buf.copy()
+        buf[bad] = 0.0
+        out.append(buf)
+    return tuple(out)
 
 
 def validate_serving_mesh(mesh, lanes: int) -> int:
@@ -309,11 +351,17 @@ class BatchedFusedServer:
 
     def __init__(self, bundle, config, batch_size: int = 8,
                  max_cap: int | None = None, mesh=None,
-                 afc_backend: str = "auto", cache_size: int | None = None):
+                 afc_backend: str = "auto", cache_size: int | None = None,
+                 sanitize: str = "reject"):
         self.bundle = bundle
         self.config = config
         self.batch_size = batch_size
         self.mesh = mesh
+        if sanitize not in ("reject", "clamp"):
+            raise ValueError(
+                f"sanitize must be 'reject' or 'clamp', got {sanitize!r}"
+            )
+        self.sanitize = sanitize
         self.n_devices = validate_serving_mesh(mesh, batch_size)
         if cache_size is not None and mesh is not None:
             raise ValueError(
@@ -487,12 +535,20 @@ class BatchedFusedServer:
                 exacts[i] = np.asarray(
                     p.exact_feature_values(store, req), np.float32
                 )
+                exacts[i] = sanitize_lane_inputs(
+                    None, exacts[i], policy=self.sanitize,
+                    where=f"serve_batch lane {i}",
+                )[1]
         else:
             vals = np.zeros((lanes, p.k, cap), np.float32)
             ns = np.zeros((lanes, p.k), np.int32)
             for i, req in enumerate(requests):
                 vals[i], ns[i], true_ns[i], exacts[i] = lane_request_inputs(
                     p, store, req, cap
+                )
+                vals[i], exacts[i] = sanitize_lane_inputs(
+                    vals[i], exacts[i], policy=self.sanitize,
+                    where=f"serve_batch lane {i}",
                 )
         active = np.arange(lanes) < r
         # per-lane degradation knobs: traced data, never part of the cache

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.analysis.contracts import assert_compile_contract
 from repro.core.executor_fused import (
+    CHUNK_CARRY_LEAVES,
     build_afc_precompute,
     build_chunked_executor,
     pipeline_executor_kwargs,
@@ -54,7 +55,11 @@ from repro.core.executor_fused import (
 )
 from repro.core.pipeline import make_fused_model_fn
 from repro.data.store import bucket_size
-from repro.serving.batched import lane_request_inputs, validate_serving_mesh
+from repro.serving.batched import (
+    lane_request_inputs,
+    sanitize_lane_inputs,
+    validate_serving_mesh,
+)
 from repro.serving.feature_cache import FeatureCache
 
 __all__ = ["ContinuousBatchedServer"]
@@ -86,12 +91,17 @@ class ContinuousBatchedServer:
     def __init__(self, bundle, config, batch_size: int = 8,
                  chunk_iters: int = 4, max_cap: int | None = None,
                  mesh=None, afc_backend: str = "auto",
-                 cache_size: int | None = None):
+                 cache_size: int | None = None, sanitize: str = "reject"):
         self.bundle = bundle
         self.config = config
         self.batch_size = batch_size
         self.chunk_iters = int(chunk_iters)
         self.mesh = mesh
+        if sanitize not in ("reject", "clamp"):
+            raise ValueError(
+                f"sanitize must be 'reject' or 'clamp', got {sanitize!r}"
+            )
+        self.sanitize = sanitize
         self.n_devices = validate_serving_mesh(mesh, batch_size)
         if cache_size is not None and mesh is not None:
             raise ValueError(
@@ -372,9 +382,21 @@ class ContinuousBatchedServer:
                 exact = np.asarray(
                     p.exact_feature_values(store, req), np.float32
                 )
+                # cached vals are device-resident — checking them here would
+                # cost a D2H sync per admission and defeat the zero-H2D hit
+                # path; they are protected by append-time sanitization plus
+                # the cache's power-sum integrity check instead.
+                exact = sanitize_lane_inputs(
+                    None, exact, policy=self.sanitize,
+                    where=f"admit lane {lane}",
+                )[1]
             else:
                 vals, n, true_n, exact = lane_request_inputs(
                     p, store, req, cap
+                )
+                vals, exact = sanitize_lane_inputs(
+                    vals, exact, policy=self.sanitize,
+                    where=f"admit lane {lane}",
                 )
             true_rows[lane] = int(true_n.sum())
             delta = delta_default if kn is None else kn.delta
@@ -420,4 +442,57 @@ class ContinuousBatchedServer:
             n=np.asarray(table.n),
             y_hat=np.asarray(table.y_hat),
             prob=np.asarray(table.prob),
+        )
+
+    # --- chunk-boundary checkpoint / rollback --------------------------
+    @staticmethod
+    def snapshot(table) -> dict[str, np.ndarray]:
+        """Checkpoint of the chunk-mutable carry: host copies of exactly
+        the :data:`~repro.core.executor_fused.CHUNK_CARRY_LEAVES`.
+
+        Every other LaneState leaf is content-invariant across a chunk
+        dispatch (the big buffers are donated/aliased through with values
+        unchanged), so this is the WHOLE state a rollback needs — a few KB
+        per lane, no executables, no device work beyond the D2H copy.
+        """
+        return {
+            name: np.asarray(getattr(table, name))
+            for name in CHUNK_CARRY_LEAVES
+        }
+
+    @staticmethod
+    def restore(table, ckpt: dict[str, np.ndarray]):
+        """Roll the carry back to a :meth:`snapshot` — zero executables.
+
+        Each checkpointed leaf is re-uploaded with ``device_put`` onto its
+        current sharding (so sharded tables restore shard-local) and swapped
+        into the pytree with ``_replace``; the untouched big buffers keep
+        their device residency.  Replaying the chunk after a restore is
+        bitwise-identical to a fault-free run because the bootstrap RNG is
+        counter-based on the restored ``it``.
+        """
+        return table._replace(**{
+            name: jax.device_put(val, getattr(table, name).sharding)
+            for name, val in ckpt.items()
+        })
+
+    @staticmethod
+    def clear_lanes(table, lanes):
+        """Host-side eviction of specific lanes (quarantine / failure).
+
+        Flips ``active=False`` / ``done=True`` for the named lanes so the
+        chunk predicate never runs them again — the same all-pad posture
+        ``new_table`` starts from.  The lane's other leaves keep their
+        (possibly poisoned) values; they are unreadable until the next
+        ``admit`` overwrites the whole slice.  Pure host swap + device_put:
+        no executables.
+        """
+        active = np.asarray(table.active).copy()
+        done = np.asarray(table.done).copy()
+        for lane in lanes:
+            active[lane] = False
+            done[lane] = True
+        return table._replace(
+            active=jax.device_put(active, table.active.sharding),
+            done=jax.device_put(done, table.done.sharding),
         )

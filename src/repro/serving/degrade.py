@@ -288,3 +288,18 @@ class DegradationController:
             iter_cap=t.iter_cap,
             tier=min(max(tier, 0), len(self.tiers) - 1),
         )
+
+    def retier(
+        self,
+        slack_s: float | None,
+        queue_depth: int,
+        base_delta: float,
+    ) -> LaneKnobs:
+        """``tier_for`` + ``knobs_for`` in one call — the retry-path seam.
+
+        Both runtimes re-price a request's knobs from its CURRENT slack
+        whenever that slack changes (admission, and again after every
+        retry backoff), so budget burned on retries degrades the request
+        coherently instead of serving it late at full accuracy.
+        """
+        return self.knobs_for(self.tier_for(slack_s, queue_depth), base_delta)

@@ -21,25 +21,67 @@ trace inject identical faults and every test is reproducible.  The wrapper
 delegates everything else (``batch_size``, ``config``, ``compile_count``,
 ``batch_cap``...) to the inner server, so :class:`FaultyServer` drops into
 ``ServingRuntime`` anywhere a ``BatchedFusedServer`` does.
+
+The continuous path gets its own chunk-granular fault points
+(DESIGN.md § Fault tolerance) through :class:`FaultyContinuousServer`:
+
+* **chunk-dispatch failures** — a seeded subset of ``run_chunk`` calls
+  raises :class:`ChunkDispatchError` carrying a carry-scrambled copy of the
+  lane table (the wreck a preempted device leaves behind); the runtime
+  rolls back to its chunk-boundary checkpoint and replays;
+* **refill-dispatch failures** — a seeded subset of ``admit`` calls raises
+  before any dispatch; admission is idempotent (counter-based RNG re-init),
+  so the runtime simply retries the whole admit;
+* **lane poisoning** — after a successful chunk, a seeded lane's carry is
+  NaN'd / driven out of the monotone-z invariant, exercising the runtime's
+  post-chunk health check and per-lane quarantine;
+* **cache corruption** — a pinned subset of admit calls flips a value in
+  the most-recently-used :class:`~repro.serving.feature_cache.FeatureCache`
+  entry, exercising the power-sum integrity check.
+
+All injection helpers are host-side buffer swaps (``device_put`` onto the
+leaf's existing sharding) — a fault run mints ZERO executables beyond the
+fault-free pair, which the recovery tests assert.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
 
+import jax
 import numpy as np
+
+from repro.core.executor_fused import CHUNK_CARRY_LEAVES
 
 __all__ = [
     "TransientExecutorError",
+    "ChunkDispatchError",
     "FaultProfile",
     "FaultyServer",
+    "FaultyContinuousServer",
+    "corrupt_cache_entry",
     "inject_burst",
+    "poison_lane_carry",
+    "scramble_chunk_carry",
 ]
 
 
 class TransientExecutorError(RuntimeError):
     """A retryable executor failure (the kind a real backend throws on a
     preempted device, a dropped RPC, or an OOM-evicted program)."""
+
+
+class ChunkDispatchError(TransientExecutorError):
+    """A chunk dispatch that died mid-flight, leaving the table wrecked.
+
+    ``table`` (when not None) is the poisoned lane table the failed
+    dispatch left behind — the runtime must treat it as garbage and restore
+    its chunk-boundary checkpoint onto it rather than resume from it.
+    """
+
+    def __init__(self, msg: str, table=None):
+        super().__init__(msg)
+        self.table = table
 
 
 @dataclass(frozen=True)
@@ -60,22 +102,52 @@ class FaultProfile:
     spike_prob: float = 0.0
     fail_calls: tuple[int, ...] = ()
     fail_prob: float = 0.0
+    # continuous-path fault points (chunk-granular; see
+    # FaultyContinuousServer).  Each keys its own RNG stream so enabling
+    # one never perturbs another's schedule.
+    chunk_fail_calls: tuple[int, ...] = ()
+    chunk_fail_prob: float = 0.0
+    refill_fail_calls: tuple[int, ...] = ()
+    refill_fail_prob: float = 0.0
+    poison_calls: tuple[int, ...] = ()
+    poison_prob: float = 0.0
+    cache_corrupt_calls: tuple[int, ...] = ()
+
+    def _bernoulli(self, stream: int, call: int, prob: float) -> bool:
+        if prob <= 0.0:
+            return False
+        rng = np.random.default_rng((self.seed, stream, call))
+        return bool(rng.random() < prob)
 
     def spikes_at(self, call: int) -> bool:
-        if call in self.spike_calls:
-            return True
-        if self.spike_prob <= 0.0:
-            return False
-        rng = np.random.default_rng((self.seed, 0, call))
-        return bool(rng.random() < self.spike_prob)
+        return call in self.spike_calls or self._bernoulli(
+            0, call, self.spike_prob
+        )
 
     def fails_at(self, call: int) -> bool:
-        if call in self.fail_calls:
-            return True
-        if self.fail_prob <= 0.0:
-            return False
-        rng = np.random.default_rng((self.seed, 1, call))
-        return bool(rng.random() < self.fail_prob)
+        return call in self.fail_calls or self._bernoulli(
+            1, call, self.fail_prob
+        )
+
+    def chunk_fails_at(self, call: int) -> bool:
+        return call in self.chunk_fail_calls or self._bernoulli(
+            2, call, self.chunk_fail_prob
+        )
+
+    def refill_fails_at(self, call: int) -> bool:
+        return call in self.refill_fail_calls or self._bernoulli(
+            3, call, self.refill_fail_prob
+        )
+
+    def poisons_at(self, call: int) -> bool:
+        return call in self.poison_calls or self._bernoulli(
+            4, call, self.poison_prob
+        )
+
+    def poison_lane(self, call: int, lanes: int) -> int:
+        """The (seeded) lane a poison event at ``call`` lands on."""
+        rng = np.random.default_rng((self.seed, 5, call))
+        return int(rng.integers(lanes))
 
 
 class FaultyServer:
@@ -108,6 +180,145 @@ class FaultyServer:
             self.events.append((call, "spike"))
             self._sleep(self.profile.spike_s)
         return self._server.serve_batch(requests, knobs=knobs)
+
+
+def scramble_chunk_carry(table):
+    """A carry-wrecked copy of a lane table (what a dead dispatch leaves).
+
+    Every chunk-mutable leaf (:data:`CHUNK_CARRY_LEAVES`) is overwritten
+    with garbage — NaN floats, -1 integers, cleared flags — while the big
+    immutable buffers pass through untouched.  Host-side ``device_put``
+    onto each leaf's existing sharding: no executables.
+    """
+    wreck = {}
+    for name in CHUNK_CARRY_LEAVES:
+        leaf = getattr(table, name)
+        v = np.asarray(leaf).copy()
+        if v.dtype == np.bool_:
+            v[...] = False
+        elif np.issubdtype(v.dtype, np.integer):
+            v[...] = -1
+        else:
+            v[...] = np.nan
+        wreck[name] = jax.device_put(v, leaf.sharding)
+    return table._replace(**wreck)
+
+
+def poison_lane_carry(table, lane: int):
+    """NaN/corrupt ONE lane's carry in place (a partial-write fault).
+
+    ``y_hat``/``prob``/``reps`` go NaN and ``z`` goes -1 (out of range AND
+    a monotonicity regression) for the named lane only — the runtime's
+    post-chunk health check must quarantine exactly this lane and leave
+    its neighbors bitwise-untouched.  Host-side swap; no executables.
+    """
+    out = {}
+    for name in ("y_hat", "prob", "reps"):
+        leaf = getattr(table, name)
+        v = np.asarray(leaf).copy()
+        if v[lane].size:  # reps is zero-size on purely parametric pipelines
+            v[lane] = np.nan
+        out[name] = jax.device_put(v, leaf.sharding)
+    z = np.asarray(table.z).copy()
+    z[lane] = -1
+    out["z"] = jax.device_put(z, table.z.sharding)
+    return table._replace(**out)
+
+
+def corrupt_cache_entry(cache, seed=0) -> bool:
+    """Flip one value in the cache's most-recently-used entry's buffer.
+
+    Models bit rot / a torn write in device-resident state: the entry's
+    stored power-sum checksum no longer matches its contents, which the
+    cache's integrity check (``verify_hits`` / ``revalidate``) must catch.
+    The flip is checksum-changing by construction: a sign-bit flip on -0.0
+    leaves the float's sums untouched, and flipping a pad zero into a
+    denormal changes the float but drowns in the f64 accumulation — so
+    candidates are retried until the recomputed power sums actually differ
+    from the stored checksum.  Returns False when the cache is empty.
+    """
+    from repro.serving.feature_cache import entry_checksum
+
+    entries = list(cache._entries.values())
+    if not entries:
+        return False
+    entry = entries[-1]  # most recently used
+    v = np.array(entry.vals)  # host copy
+    flat = v.reshape(-1)
+    orig = flat.copy()
+    want = entry_checksum(entry.vals, entry.n)
+    rng = np.random.default_rng(seed)
+    for _ in range(32):
+        i = int(rng.integers(flat.size))
+        b = int(rng.integers(flat.itemsize))
+        flat.view(np.uint8)[flat.itemsize * i + b] ^= 0xFF
+        got = entry_checksum(v, entry.n)
+        # NaN sums compare unequal to anything — detectable too
+        if got != want:
+            break
+        flat[i] = orig[i]
+    else:
+        flat[0] = orig[0] + 1.0
+    entry.vals = jax.device_put(v, entry.vals.sharding)
+    return True
+
+
+class FaultyContinuousServer:
+    """Chunk-granular fault interceptor around a ``ContinuousBatchedServer``.
+
+    ``run_chunk`` and ``admit`` are intercepted with their OWN call
+    counters (the schedule indices); everything else proxies to the inner
+    server, so the wrapper drops into ``ContinuousServingRuntime`` anywhere
+    the real server does.  ``events`` logs ``(call, kind)`` per injection
+    for test assertions; two runs with the same profile inject byte-
+    identical fault sequences.
+    """
+
+    def __init__(self, server, profile: FaultProfile, *, sleep=time.sleep):
+        self._server = server
+        self.profile = profile
+        self.chunk_calls = 0
+        self.admit_calls = 0
+        self.events: list[tuple[int, str]] = []
+        self._sleep = sleep  # injectable for fast tests
+
+    def __getattr__(self, name):
+        return getattr(self._server, name)
+
+    def admit(self, table, cap, assignments):
+        call = self.admit_calls
+        self.admit_calls += 1
+        prof = self.profile
+        cache = getattr(self._server, "cache", None)
+        if call in prof.cache_corrupt_calls and cache is not None:
+            if corrupt_cache_entry(cache, seed=(prof.seed, 6, call)):
+                self.events.append((call, "cache_corrupt"))
+        if prof.refill_fails_at(call):
+            self.events.append((call, "refill_fail"))
+            raise TransientExecutorError(
+                f"injected refill failure at admit call {call}"
+            )
+        return self._server.admit(table, cap, assignments)
+
+    def run_chunk(self, table):
+        call = self.chunk_calls
+        self.chunk_calls += 1
+        prof = self.profile
+        if prof.spikes_at(call):
+            self.events.append((call, "spike"))
+            self._sleep(prof.spike_s)
+        if prof.chunk_fails_at(call):
+            self.events.append((call, "chunk_fail"))
+            raise ChunkDispatchError(
+                f"injected chunk-dispatch failure at chunk call {call}",
+                table=scramble_chunk_carry(table),
+            )
+        table = self._server.run_chunk(table)
+        if prof.poisons_at(call):
+            lane = prof.poison_lane(call, self._server.batch_size)
+            self.events.append((call, f"poison:{lane}"))
+            table = poison_lane_carry(table, lane)
+        return table
 
 
 def inject_burst(

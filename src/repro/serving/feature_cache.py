@@ -41,7 +41,7 @@ import numpy as np
 from repro.core.executor_fused import PrebuiltTables
 from repro.data.store import ColumnStore
 
-__all__ = ["CacheEntry", "FeatureCache"]
+__all__ = ["CacheEntry", "FeatureCache", "entry_checksum"]
 
 
 @dataclass
@@ -52,6 +52,23 @@ class CacheEntry:
     n: jnp.ndarray             # (k,) int32 group sizes clamped to cap
     tables: PrebuiltTables
     versions: tuple[int, ...]  # per-spec group versions the entry reflects
+    #: Power-sum checksum of (vals, n) at build/refresh time — see
+    #: :func:`entry_checksum`.  ``None`` marks a legacy entry built before
+    #: integrity checking (always treated as valid).
+    checksum: tuple[float, float, int] | None = None
+
+
+def entry_checksum(vals, n) -> tuple[float, float, int]:
+    """Order-invariant integrity fingerprint of an entry's numeric payload.
+
+    f64 power sums (Σx, Σx²) over the values buffer plus the total group
+    size: the same primitive the AFC estimators are built on, cheap to
+    recompute, and sensitive to any single flipped element.  It is a
+    corruption detector, not a cryptographic MAC — the threat model is bit
+    rot / torn writes in device-resident state, not an adversary.
+    """
+    v = np.asarray(vals, np.float64)
+    return (float(v.sum()), float((v * v).sum()), int(np.asarray(n).sum()))
 
 
 class FeatureCache:
@@ -73,6 +90,7 @@ class FeatureCache:
         *,
         maxsize: int = 64,
         key_fn: Callable[[ColumnStore, list, int], tuple] | None = None,
+        verify_hits: bool = False,
     ) -> None:
         self.store = store
         self.cold = cold
@@ -81,10 +99,16 @@ class FeatureCache:
         self._key_fn = key_fn or (
             lambda store, specs, cap: store.spec_versions(specs)
         )
+        # verify_hits trades the hit path's zero-cost property (the checksum
+        # recompute is a D2H sync of the (k, cap) buffer) for detection of
+        # corrupted device-resident state; serving keeps it off by default
+        # and the fault-injection/recovery paths switch it on.
+        self.verify_hits = bool(verify_hits)
         self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.refreshes = 0
+        self.corruptions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -93,8 +117,14 @@ class FeatureCache:
     def stats(self) -> dict[str, int]:
         return dict(
             hits=self.hits, misses=self.misses, refreshes=self.refreshes,
-            entries=len(self._entries),
+            corruptions=self.corruptions, entries=len(self._entries),
         )
+
+    @staticmethod
+    def _intact(entry: CacheEntry) -> bool:
+        if entry.checksum is None:
+            return True
+        return entry_checksum(entry.vals, entry.n) == entry.checksum
 
     def get(self, specs: list[tuple[str, str, int]], cap: int) -> CacheEntry:
         """The entry for this request, built/refreshed/fetched as needed."""
@@ -102,6 +132,12 @@ class FeatureCache:
         base = (tuple(specs), int(cap))
         want = tuple(self._key_fn(self.store, specs, cap))
         entry = self._entries.get(base)
+        if entry is not None and self.verify_hits and not self._intact(entry):
+            # corrupted device-resident state: never serve it — drop the
+            # entry and fall through to a cold rebuild.
+            self.corruptions += 1
+            del self._entries[base]
+            entry = None
         if entry is not None:
             if entry.versions == want:
                 self.hits += 1
@@ -116,13 +152,34 @@ class FeatureCache:
         self.misses += 1
         vals, sizes = self.store.request_buffers(specs, cap)
         entry = CacheEntry(
-            vals=vals, n=sizes, tables=self.cold(vals, sizes), versions=want
+            vals=vals, n=sizes, tables=self.cold(vals, sizes), versions=want,
+            checksum=entry_checksum(vals, sizes),
         )
         self._entries[base] = entry
         self._entries.move_to_end(base)
         while len(self._entries) > self.maxsize:
             self._entries.popitem(last=False)
         return entry
+
+    def revalidate(self) -> int:
+        """Drop entries that are stale or corrupted; returns the count.
+
+        The store-recovery hook (``Table.recover``): after an index rebuild
+        every resident entry is re-checked against the CURRENT store
+        versions and its own power-sum checksum, so device state that no
+        longer reflects the recovered table is evicted instead of served.
+        """
+        dead = []
+        for base, entry in self._entries.items():
+            specs, cap = list(base[0]), base[1]
+            want = tuple(self._key_fn(self.store, specs, cap))
+            if entry.versions != want or not self._intact(entry):
+                dead.append(base)
+        for base in dead:
+            if not self._intact(self._entries[base]):
+                self.corruptions += 1
+            del self._entries[base]
+        return len(dead)
 
     def _try_refresh(
         self,
@@ -163,4 +220,7 @@ class FeatureCache:
                     vals, n, tables, jnp.asarray(j, jnp.int32),
                     jnp.asarray(x), jnp.asarray(aff),
                 )
-        return CacheEntry(vals=vals, n=n, tables=tables, versions=want)
+        return CacheEntry(
+            vals=vals, n=n, tables=tables, versions=want,
+            checksum=entry_checksum(vals, n),
+        )

@@ -87,10 +87,13 @@ class RequestRecord:
 
     ``disposition`` is ``"ok"`` (served), ``"shed"`` (rejected at admission
     because no degradation tier could meet its deadline, or the queue hit
-    its bound), or ``"failed"`` (its batch exhausted transient-failure
-    retries).  Shed/failed records carry ``y_hat = nan`` and ``batch_id =
-    -1`` / the failed batch id; latency for a shed request is the time it
-    spent queued before the runtime gave up on it.  ``tier``/``tau``/
+    its bound), ``"failed"`` (its batch exhausted transient-failure
+    retries), or ``"poisoned"`` (continuous only: its lane failed the
+    post-chunk numerical-health check and exhausted its bounded
+    re-admission attempts — see DESIGN.md § Fault tolerance).  Shed/failed/
+    poisoned records carry ``y_hat = nan`` and ``batch_id = -1`` / the
+    failed batch id; latency for a shed request is the time it spent queued
+    before the runtime gave up on it.  ``tier``/``tau``/
     ``delta`` echo the degradation knobs the request was served under
     (baseline values when no controller is installed) so the summary's
     guarantee rate can be computed against the tau each request was
@@ -183,6 +186,8 @@ class RuntimeStats:
     n_shed: int = 0             # rejected at admission (deadline/queue bound)
     n_failed: int = 0           # batches' requests that exhausted retries
     n_retries: int = 0          # transient-failure retries (backoff events)
+    n_rollbacks: int = 0        # chunk-boundary checkpoint restores (continuous)
+    n_poisoned: int = 0         # lanes quarantined past their re-admission bound
     n_chunks: int = 0           # chunk dispatches (continuous; 0 = fixed-lane)
     n_recycles: int = 0         # admissions into a previously-used lane
     lane_occupancy: float = 0.0  # mean occupied-lane fraction over chunks
@@ -251,6 +256,8 @@ class RuntimeStats:
             "n_shed": int(self.n_shed),
             "n_failed": int(self.n_failed),
             "n_retries": int(self.n_retries),
+            "n_rollbacks": int(self.n_rollbacks),
+            "n_poisoned": int(self.n_poisoned),
             "shed_rate": float(self.n_shed / n_offered) if n_offered else 0.0,
         }
         with_deadline = [r for r in self.records if math.isfinite(r.deadline_t)]
@@ -400,15 +407,22 @@ class ServingRuntime:
         cfg, p = self.server.config, self.server.bundle.pipeline
         return cfg.delta if cfg.delta is not None else p.delta_default
 
-    def _serve_with_retries(self, requests, knobs, stats, now):
+    def _serve_with_retries(self, requests, make_knobs, stats, now):
         """serve_batch under the bounded-retry/backoff policy.
 
-        Returns ``(result_or_None, new_now)``; failed attempts charge their
-        real wall-clock to ``busy_s``/the virtual clock, and each retry adds
-        an exponential virtual backoff delay (never slept — deterministic
-        replay).  ``None`` means retries were exhausted.
+        ``make_knobs(now)`` builds the per-lane knob list for the CURRENT
+        virtual clock (or None without a controller) and is re-invoked after
+        every backoff, so a request that burned deadline budget on retries
+        is re-tiered against its post-retry slack — retries and degradation
+        stay coherent instead of serving late at full accuracy.
+
+        Returns ``(result_or_None, knobs_used, new_now)``; failed attempts
+        charge their real wall-clock to ``busy_s``/the virtual clock, and
+        each retry adds an exponential virtual backoff delay (never slept —
+        deterministic replay).  ``None`` means retries were exhausted.
         """
         attempt = 0
+        knobs = make_knobs(now)
         while True:
             t0 = time.perf_counter()
             try:
@@ -421,13 +435,14 @@ class ServingRuntime:
                 now += dt
                 stats.busy_s += dt
                 if attempt >= self.max_retries:
-                    return None, now
+                    return None, knobs, now
                 now += self.backoff_s * (2.0**attempt)
                 attempt += 1
                 stats.n_retries += 1
+                knobs = make_knobs(now)  # post-retry slack, re-priced
                 continue
             dt = time.perf_counter() - t0
-            return (res, dt), now
+            return (res, dt), knobs, now
 
     # ------------------------------------------------------------------
     def run(self, arrivals, warmup: bool = True) -> RuntimeStats:
@@ -520,22 +535,28 @@ class ServingRuntime:
                 idxs.append(j)
             if not idxs:
                 continue  # everything was shed; rerun the admission decision
-            # ---- knob assignment: remaining budget + congestion -> tier
-            knobs = None
-            if ctl is not None:
-                depth = len(queue)  # still-waiting requests behind this batch
-                knobs = []
-                for j in idxs:
-                    slack = (
-                        deadlines[j] - now
+            # ---- knob assignment: remaining budget + congestion -> tier.
+            # Built as a closure over the batch so the retry path can
+            # re-price each request's slack after every virtual backoff.
+            depth = len(queue)  # still-waiting requests behind this batch
+
+            def make_knobs(t, idxs=idxs, depth=depth):
+                if ctl is None:
+                    return None
+                return [
+                    ctl.retier(
+                        deadlines[j] - t
                         if math.isfinite(deadlines[j])
-                        else None
+                        else None,
+                        depth,
+                        base_delta,
                     )
-                    tier = ctl.tier_for(slack, depth)
-                    knobs.append(ctl.knobs_for(tier, base_delta))
+                    for j in idxs
+                ]
+
             admit_t = now
-            out, now = self._serve_with_retries(
-                [arr[j].request for j in idxs], knobs, stats, now
+            out, knobs, now = self._serve_with_retries(
+                [arr[j].request for j in idxs], make_knobs, stats, now
             )
             if out is None:  # retries exhausted: the whole batch failed
                 for lane, j in enumerate(idxs):
@@ -637,6 +658,28 @@ class ContinuousServingRuntime:
 
     Time model matches :class:`ServingRuntime`: virtual arrival clock,
     measured wall-clock for every refill and chunk dispatch.
+
+    Fault tolerance (DESIGN.md § Fault tolerance): before every chunk
+    dispatch the runtime snapshots the table's chunk-mutable carry
+    (``server.snapshot`` — host copies of the small leaves, zero
+    executables); a :class:`~repro.serving.faults.TransientExecutorError`
+    rolls the carry back to that chunk boundary (onto the wreck a
+    :class:`~repro.serving.faults.ChunkDispatchError` hands back, when it
+    does) and replays — bitwise-identical to a fault-free run, because the
+    bootstrap RNG is counter-based on the restored per-request iteration
+    index.  Admissions are idempotent (same re-init, same counters), so a
+    failed ``admit`` is simply retried whole, with each assignment's knobs
+    re-priced against its post-retry slack.  After every successful chunk a
+    numerical-health check runs over the occupied lanes (NaN/Inf in
+    ``y_hat``/``prob``, z outside ``[0, cap]`` or regressing vs the
+    monotone-growth invariant, a ``done`` flag the knobs cannot explain);
+    unhealthy lanes are quarantined INDIVIDUALLY — the request is re-queued
+    for up to ``poison_retries`` full re-admissions (a re-init resets all
+    lane state) and recorded ``disposition="poisoned"`` past that bound —
+    while every other lane's carry proceeds untouched.  When chunk retries
+    are exhausted, the lane-resident requests are recorded ``failed`` and
+    their lanes cleared, so a dead device costs its residents — never the
+    table, the queue, or the cache.
     """
 
     def __init__(
@@ -645,10 +688,22 @@ class ContinuousServingRuntime:
         *,
         slo_s: float | None = None,
         controller: DegradationController | None = None,
+        max_retries: int = 2,
+        backoff_s: float = 0.02,
+        poison_retries: int = 1,
     ):
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
+        if poison_retries < 0:
+            raise ValueError("poison_retries must be >= 0")
         self.server = server
         self.slo_s = slo_s
         self.controller = controller
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.poison_retries = poison_retries
 
     # ------------------------------------------------------------------
     def warmup(self, requests: list[dict] | None = None) -> list[int]:
@@ -673,6 +728,44 @@ class ContinuousServingRuntime:
     def _default_delta(self) -> float:
         cfg, p = self.server.config, self.server.bundle.pipeline
         return cfg.delta if cfg.delta is not None else p.delta_default
+
+    def _lane_health(self, out, lane, prev_z_lane, cap, kn) -> str | None:
+        """Post-chunk numerical-health verdict for one occupied lane.
+
+        Returns a reason string when the lane's carry violates an invariant
+        a healthy executor cannot: non-finite ``y_hat``/``prob``, a
+        guarantee probability outside [0, 1], a plan outside ``[0, cap]``
+        or shrinking against the monotone-growth invariant, or a ``done``
+        flag the knobs cannot explain (guarantee unmet, groups unexhausted,
+        iterations left).  ``None`` = healthy.
+        """
+        y = float(out["y_hat"][lane])
+        p = float(out["prob"][lane])
+        if not (math.isfinite(y) and math.isfinite(p)):
+            return "non-finite y_hat/prob"
+        if not (0.0 <= p <= 1.0 + 1e-6):
+            return f"prob {p} outside [0, 1]"
+        z = np.asarray(out["z"][lane])
+        if (z < 0).any() or (z > cap).any():
+            return "z outside [0, cap]"
+        if (z < prev_z_lane).any():
+            return "z regression (monotone-growth invariant)"
+        if bool(out["done"][lane]):
+            cfg = self.server.config
+            tau = float(kn.tau) if kn is not None else float(cfg.tau)
+            iter_cap = (
+                int(kn.iter_cap) if kn is not None else int(cfg.max_iters)
+            )
+            exhausted = bool(
+                (z >= np.minimum(np.asarray(out["n"][lane]), cap)).all()
+            )
+            if (
+                p < tau - 1e-6
+                and not exhausted
+                and int(out["it"][lane]) < iter_cap
+            ):
+                return "done flag inconsistent with the guarantee"
+        return None
 
     # ------------------------------------------------------------------
     def run(self, arrivals, warmup: bool = True) -> RuntimeStats:
@@ -723,6 +816,10 @@ class ContinuousServingRuntime:
         true_rows = [1] * lanes
         lane_used = [False] * lanes
         prev_it = np.zeros(lanes, np.int64)
+        # monotone-z tracking for the post-chunk health check: each occupied
+        # lane's plan at its last healthy boundary (set from z⁰ at admission)
+        prev_z = np.zeros((lanes, self.server.bundle.pipeline.k), np.int64)
+        poison_attempts: dict[int, int] = {}
         occ_rows: list[np.ndarray] = []
         iter_rows: list[np.ndarray] = []
         admissions = 0
@@ -760,6 +857,37 @@ class ContinuousServingRuntime:
                 lane=lane,
                 n_chunks=chunks_by_lane[lane],
                 z=tuple(int(x) for x in z),
+            )
+            occupied[lane] = None
+            knobs_by_lane[lane] = None
+
+        def drop(lane: int, disposition: str, t: float) -> None:
+            """Record a lane-resident request as failed/poisoned and free
+            its host bookkeeping (the device lane is cleared separately)."""
+            j = occupied[lane]
+            kn = knobs_by_lane[lane]
+            records[j] = RequestRecord(
+                req_id=j,
+                arrival_t=arr[j].t,
+                admit_t=admit_ts[lane],
+                done_t=t,
+                queue_delay_s=admit_ts[lane] - arr[j].t,
+                exec_s=t - admit_ts[lane],
+                latency_s=t - arr[j].t,
+                batch_id=admit_ids[lane],
+                batch_fill=admit_fill[lane],
+                y_hat=float("nan"),
+                prob=0.0,
+                iters=0,
+                sample_frac=0.0,
+                deadline_t=deadlines[j],
+                disposition=disposition,
+                tier=kn.tier if kn is not None else 0,
+                tau=kn.tau if kn is not None else None,
+                delta=kn.delta if kn is not None else None,
+                deadline_met=False,
+                lane=lane,
+                n_chunks=chunks_by_lane[lane],
             )
             occupied[lane] = None
             knobs_by_lane[lane] = None
@@ -824,12 +952,61 @@ class ContinuousServingRuntime:
                 lane_used[lane] = True
             if assignments:
                 admissions += 1
-                t0 = time.perf_counter()
-                table, tr = self.server.admit(table, cap, assignments)
-                jax.block_until_ready(table)
-                dt = time.perf_counter() - t0
-                now += dt
-                stats.busy_s += dt
+                # admission is idempotent (the refill re-inits the whole
+                # lane from counter-based RNG), so a transient failure just
+                # retries the WHOLE admit — with every assignment's knobs
+                # re-priced against its post-retry slack
+                attempt = 0
+                admitted = True
+                while True:
+                    t0 = time.perf_counter()
+                    try:
+                        table, tr = self.server.admit(table, cap, assignments)
+                        jax.block_until_ready(table)
+                    except TransientExecutorError:
+                        dt = time.perf_counter() - t0
+                        now += dt
+                        stats.busy_s += dt
+                        if attempt >= self.max_retries:
+                            admitted = False
+                            break
+                        now += self.backoff_s * (2.0**attempt)
+                        attempt += 1
+                        stats.n_retries += 1
+                        if ctl is not None:
+                            assignments = [
+                                (
+                                    lane,
+                                    req,
+                                    ctl.retier(
+                                        deadlines[occupied[lane]] - now
+                                        if math.isfinite(
+                                            deadlines[occupied[lane]]
+                                        )
+                                        else None,
+                                        len(queue),
+                                        base_delta,
+                                    ),
+                                )
+                                for lane, req, _kn in assignments
+                            ]
+                            for lane, _req, kn in assignments:
+                                knobs_by_lane[lane] = kn
+                        continue
+                    dt = time.perf_counter() - t0
+                    now += dt
+                    stats.busy_s += dt
+                    break
+                if not admitted:
+                    # retries exhausted before any lane was (fully) refilled:
+                    # the assigned requests fail; their lanes are cleared in
+                    # case a partial admit left them active
+                    dead = [lane for lane, _req, _kn in assignments]
+                    for lane in dead:
+                        drop(lane, "failed", now)
+                        stats.n_failed += 1
+                    table = self.server.clear_lanes(table, dead)
+                    continue
                 fill = sum(l is not None for l in occupied)
                 for lane, rows in tr.items():
                     true_rows[lane] = rows
@@ -838,29 +1015,96 @@ class ContinuousServingRuntime:
                 # at the initial plan) — recycle it before paying a chunk
                 out = self.server.readback(table)
                 for lane, _, _ in assignments:
+                    prev_z[lane] = np.asarray(out["z"][lane], np.int64)
                     if out["done"][lane]:
                         finalize(lane, out, now)
             if all(l is None for l in occupied):
                 continue  # everything shed or instantly done; re-admit
-            # ---- one chunk dispatch
-            t0 = time.perf_counter()
-            table = self.server.run_chunk(table)
-            jax.block_until_ready(table)
-            dt = time.perf_counter() - t0
-            now += dt
-            stats.busy_s += dt
+            # ---- one chunk dispatch, checkpointed at the boundary: the
+            # snapshot holds host copies of the chunk-mutable carry leaves
+            # (CHUNK_CARRY_LEAVES); a transient dispatch failure rolls the
+            # table back to this boundary and replays — counter-based RNG
+            # makes the replay bitwise-identical, and both snapshot and
+            # restore are host buffer swaps (zero new executables)
+            ckpt = self.server.snapshot(table)
+            attempt = 0
+            dispatched = True
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    table = self.server.run_chunk(table)
+                    jax.block_until_ready(table)
+                except TransientExecutorError as e:
+                    dt = time.perf_counter() - t0
+                    now += dt
+                    stats.busy_s += dt
+                    # the raiser may hand back the wrecked table (e.g. a
+                    # mid-chunk crash leaving scrambled carry); adopt it so
+                    # the rollback is exercised against real damage, then
+                    # restore the last good boundary
+                    wreck = getattr(e, "table", None)
+                    if wreck is not None:
+                        table = wreck
+                    table = self.server.restore(table, ckpt)
+                    stats.n_rollbacks += 1
+                    if attempt >= self.max_retries:
+                        dispatched = False
+                        break
+                    now += self.backoff_s * (2.0**attempt)
+                    attempt += 1
+                    stats.n_retries += 1
+                    continue
+                dt = time.perf_counter() - t0
+                now += dt
+                stats.busy_s += dt
+                break
+            if not dispatched:
+                # persistent dispatch failure: fail every resident request
+                # and clear their lanes so draining continues (bounded p99
+                # instead of an infinite retry loop)
+                dead = [l for l in range(lanes) if occupied[l] is not None]
+                for lane in dead:
+                    drop(lane, "failed", now)
+                    stats.n_failed += 1
+                table = self.server.clear_lanes(table, dead)
+                continue
             n_chunks += 1
             out = self.server.readback(table)
             occ = np.array([l is not None for l in occupied])
             occ_rows.append(occ)
             iter_rows.append(np.where(occ, out["it"] - prev_it, 0))
             prev_it = out["it"].copy()
+            # ---- post-chunk numerical-health check: quarantine poisoned
+            # lanes (NaN/Inf carry, z regression, inconsistent done flag)
+            # without touching their healthy neighbors
+            poisoned: list[int] = []
             for lane in range(lanes):
                 if occupied[lane] is None:
                     continue
                 chunks_by_lane[lane] += 1
-                if out["done"][lane]:
-                    finalize(lane, out, now)
+                verdict = self._lane_health(
+                    out, lane, prev_z[lane], cap, knobs_by_lane[lane]
+                )
+                if verdict is None:
+                    prev_z[lane] = np.asarray(out["z"][lane], np.int64)
+                    if out["done"][lane]:
+                        finalize(lane, out, now)
+                    continue
+                poisoned.append(lane)
+                j = occupied[lane]
+                poison_attempts[j] = poison_attempts.get(j, 0) + 1
+                if poison_attempts[j] <= self.poison_retries:
+                    # bounded re-admission: the request goes back to the
+                    # FRONT of the queue and gets a full fresh admit (which
+                    # re-initializes every lane leaf), not a carry patch
+                    queue.appendleft(j)
+                    occupied[lane] = None
+                    knobs_by_lane[lane] = None
+                else:
+                    drop(lane, "poisoned", now)
+                    stats.n_poisoned += 1
+            if poisoned:
+                table = self.server.clear_lanes(table, poisoned)
             if ctl is not None:
                 ctl.observe(dt, len(queue))
 

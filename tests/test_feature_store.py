@@ -325,7 +325,9 @@ def test_cache_hit_returns_same_entry():
     e1 = cache.get(_specs(0), 128)
     e2 = cache.get(_specs(0), 128)
     assert e2 is e1
-    assert cache.stats == dict(hits=1, misses=1, refreshes=0, entries=1)
+    assert cache.stats == dict(
+        hits=1, misses=1, refreshes=0, corruptions=0, entries=1
+    )
 
 
 def test_cache_append_triggers_delta_refresh_matching_rebuild():

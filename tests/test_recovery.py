@@ -1,0 +1,401 @@
+"""Fault-tolerant continuous serving: rollback, quarantine, recovery.
+
+Pins the PR-10 contracts (DESIGN.md § Fault tolerance):
+
+* chunk-granular fault schedules are pure functions of (profile, call
+  index) — byte-identical replay;
+* a chunk-dispatch failure rolls the lane table back to its chunk-boundary
+  checkpoint and replays BITWISE-identically to a fault-free run (the
+  counter-based-RNG payoff), minting zero executables;
+* lane poisoning quarantines exactly the poisoned lane — bounded
+  re-admission recovers it, neighbors are bitwise-untouched;
+* the feature store recovers from a torn crash state by journal replay,
+  byte-identical to the never-crashed table, and the feature cache detects
+  a flipped byte via its power-sum checksum;
+* non-finite inputs are rejected (loudly, naming the offender) or clamped
+  at both ingest and serving edges;
+* retry backoff burns SLO slack: retried requests re-tier against their
+  post-backoff deadline budget.
+"""
+import numpy as np
+import pytest
+from serving_fixtures import SMALL_CFG, make_small_bundle
+
+from repro.serving import (
+    BatchedFusedServer,
+    ChunkDispatchError,
+    ContinuousBatchedServer,
+    ContinuousServingRuntime,
+    DegradationController,
+    FaultProfile,
+    FaultyContinuousServer,
+    FaultyServer,
+    ServingRuntime,
+    TransientExecutorError,
+    corrupt_cache_entry,
+    default_tiers,
+)
+
+CFG = SMALL_CFG
+ARRIVALS = [(0.0, {"g": g}) for g in range(6)]
+
+
+@pytest.fixture(scope="module")
+def small_bundle():
+    return make_small_bundle()
+
+
+@pytest.fixture(scope="module")
+def cont4(small_bundle):
+    srv = ContinuousBatchedServer(small_bundle, CFG, batch_size=4,
+                                  chunk_iters=2)
+    # pre-warm the INNER server so fault call indices start at 0 for
+    # measured traffic and fault runs can assert compile_count == 0
+    ContinuousServingRuntime(srv).warmup([a[1] for a in ARRIVALS])
+    return srv
+
+
+def _run(server, arrivals=ARRIVALS, **kw):
+    rt = ContinuousServingRuntime(server, backoff_s=0.001, **kw)
+    return rt.run(arrivals, warmup=False)
+
+
+def _z_by_req(stats):
+    return {r.req_id: r.z for r in stats.records if r.disposition == "ok"}
+
+
+# ------------------------------------------------------------- schedules
+def test_continuous_fault_streams_are_seeded_and_independent():
+    a = FaultProfile(seed=3, chunk_fail_prob=0.3, refill_fail_prob=0.3,
+                     poison_prob=0.3)
+    b = FaultProfile(seed=3, chunk_fail_prob=0.3, refill_fail_prob=0.3,
+                     poison_prob=0.3)
+    other = FaultProfile(seed=4, chunk_fail_prob=0.3, refill_fail_prob=0.3,
+                         poison_prob=0.3)
+    for stream in ("chunk_fails_at", "refill_fails_at", "poisons_at"):
+        hits = [c for c in range(200) if getattr(a, stream)(c)]
+        assert hits == [c for c in range(200) if getattr(b, stream)(c)]
+        assert 0 < len(hits) < 200
+        assert hits != [c for c in range(200) if getattr(other, stream)(c)]
+    # the three continuous streams are independent draws, not one coin
+    chunk = [c for c in range(200) if a.chunk_fails_at(c)]
+    refill = [c for c in range(200) if a.refill_fails_at(c)]
+    poison = [c for c in range(200) if a.poisons_at(c)]
+    assert chunk != refill and chunk != poison and refill != poison
+    # lane choice for a poison event is seeded and in range
+    lanes = [a.poison_lane(c, 4) for c in range(50)]
+    assert lanes == [b.poison_lane(c, 4) for c in range(50)]
+    assert all(0 <= l < 4 for l in lanes) and len(set(lanes)) > 1
+
+
+def test_pinned_continuous_calls_override_probability():
+    p = FaultProfile(chunk_fail_calls=(2,), refill_fail_calls=(1,),
+                     poison_calls=(0, 3))
+    assert [c for c in range(5) if p.chunk_fails_at(c)] == [2]
+    assert [c for c in range(5) if p.refill_fails_at(c)] == [1]
+    assert [c for c in range(5) if p.poisons_at(c)] == [0, 3]
+
+
+# ---------------------------------------------------------- wrapper unit
+def test_faultless_continuous_wrapper_is_transparent(cont4):
+    want = _z_by_req(_run(cont4))
+    fs = FaultyContinuousServer(cont4, FaultProfile(), sleep=lambda s: None)
+    got = _z_by_req(_run(fs))
+    assert want == got and fs.events == []
+
+
+def test_chunk_failure_raises_with_wrecked_table(cont4):
+    fs = FaultyContinuousServer(cont4, FaultProfile(chunk_fail_calls=(0,)))
+    cap = cont4.trace_cap([{"g": 0}])
+    table, _ = cont4.admit(cont4.new_table(cap), cap, [(0, {"g": 0}, None)])
+    with pytest.raises(ChunkDispatchError) as ei:
+        fs.run_chunk(table)
+    wreck = ei.value.table
+    assert wreck is not None
+    assert np.isnan(np.asarray(wreck.y_hat)).all()
+    assert (np.asarray(wreck.z) == -1).all()
+    assert fs.events == [(0, "chunk_fail")]
+
+
+# ----------------------------------------------------- rollback / replay
+def test_chunk_failure_rolls_back_and_replays_bitwise(cont4):
+    want = _z_by_req(_run(cont4))
+    fs = FaultyContinuousServer(cont4, FaultProfile(chunk_fail_calls=(1,)))
+    stats = _run(fs, max_retries=2)
+    assert stats.n_rollbacks == 1 and stats.n_retries == 1
+    assert stats.n_failed == 0
+    assert [r.disposition for r in stats.records] == ["ok"] * 6
+    # the rollback invariant: replay == fault-free run, bit for bit
+    assert _z_by_req(stats) == want
+
+
+def test_chunk_retry_exhaustion_fails_residents_and_drains(cont4):
+    fs = FaultyContinuousServer(
+        cont4, FaultProfile(chunk_fail_calls=(0, 1, 2))
+    )
+    stats = _run(fs, max_retries=2)
+    assert stats.n_rollbacks == 3
+    assert stats.n_failed > 0
+    failed = [r for r in stats.records if r.disposition == "failed"]
+    assert all(np.isnan(r.y_hat) for r in failed)
+    # the run still drained: every offered request got a record
+    assert len(stats.records) == len(ARRIVALS)
+    assert any(r.disposition == "ok" for r in stats.records)
+
+
+def test_refill_failure_is_retried_idempotently(cont4):
+    want = _z_by_req(_run(cont4))
+    fs = FaultyContinuousServer(cont4, FaultProfile(refill_fail_calls=(0,)))
+    stats = _run(fs, max_retries=2)
+    assert stats.n_retries == 1 and stats.n_failed == 0
+    assert _z_by_req(stats) == want  # the retried admit re-inits identically
+
+
+def test_fault_storm_replays_byte_identically(cont4):
+    prof = FaultProfile(seed=11, chunk_fail_prob=0.25, refill_fail_prob=0.15,
+                        poison_prob=0.2)
+
+    def go():
+        fs = FaultyContinuousServer(cont4, prof)
+        st = _run(fs, max_retries=2, poison_retries=1)
+        disp = [(r.req_id, r.disposition, r.z) for r in
+                sorted(st.records, key=lambda r: r.req_id)]
+        return fs.events, disp, st.n_rollbacks, st.n_retries, st.n_poisoned
+
+    assert go() == go()
+
+
+# ------------------------------------------------------------ quarantine
+def _poison_seed(stats, lanes=4):
+    """A seed whose chunk-0 poison lands on a lane occupied during chunk 0."""
+    live = {r.lane for r in stats.records
+            if r.batch_id == 0 and r.n_chunks >= 1}
+    return next(s for s in range(100)
+                if FaultProfile(seed=s).poison_lane(0, lanes) in live)
+
+
+def test_poison_quarantines_exactly_one_lane(cont4):
+    free = _run(cont4)
+    seed = _poison_seed(free)
+    lane = FaultProfile(seed=seed).poison_lane(0, 4)
+    fs = FaultyContinuousServer(
+        cont4, FaultProfile(seed=seed, poison_calls=(0,))
+    )
+    stats = _run(fs, poison_retries=0)
+    assert fs.events == [(0, f"poison:{lane}")]
+    poisoned = [r for r in stats.records if r.disposition == "poisoned"]
+    assert len(poisoned) == 1 and stats.n_poisoned == 1
+    assert poisoned[0].lane == lane and np.isnan(poisoned[0].y_hat)
+    # every OTHER request is bitwise-identical to the fault-free run
+    want = _z_by_req(free)
+    got = _z_by_req(stats)
+    assert got == {k: v for k, v in want.items() if k != poisoned[0].req_id}
+
+
+def test_poisoned_lane_readmission_recovers_bitwise(cont4):
+    free = _run(cont4)
+    seed = _poison_seed(free)
+    fs = FaultyContinuousServer(
+        cont4, FaultProfile(seed=seed, poison_calls=(0,))
+    )
+    stats = _run(fs, poison_retries=1)
+    assert stats.n_poisoned == 0 and stats.n_failed == 0
+    assert [r.disposition for r in stats.records] == ["ok"] * 6
+    # the full re-admission re-initializes the lane: results match fault-free
+    assert _z_by_req(stats) == _z_by_req(free)
+
+
+def test_zero_compiles_under_fault_storm(cont4):
+    before = cont4.compile_count
+    fs = FaultyContinuousServer(
+        cont4,
+        FaultProfile(seed=11, chunk_fail_prob=0.25, poison_prob=0.2),
+    )
+    _run(fs, max_retries=2, poison_retries=1)
+    # checkpoints, rollbacks, quarantine evictions and re-admissions are
+    # all host buffer swaps: the warmed refill+chunk pair serves the storm
+    assert cont4.compile_count == before
+    cont4.check_compile_contract()
+
+
+# --------------------------------------------------- store crash recovery
+def test_store_recover_matches_never_crashed_table():
+    b = make_small_bundle()
+    t = b.store["t"]
+    t.append({"v": [1.5, 2.5], "a": [0.5, 0.25]}, group_key=[0, 3])
+    t.append({"v": [-1.0], "a": [0.125]}, group_key=[11])  # new group
+    want = (t.perm.copy(), t.group_ptr.copy(), dict(t.group_ids),
+            list(t.versions))
+    # tear every derived structure the way a crash mid-append would
+    t.perm = np.random.default_rng(0).permutation(t.perm)
+    t.group_ptr = t.group_ptr + 3
+    t.versions = []
+    t._log = {}
+    info = t.recover()
+    assert info["replayed"] == 4  # 3 insertions + 1 group registration
+    np.testing.assert_array_equal(t.perm, want[0])
+    np.testing.assert_array_equal(t.group_ptr, want[1])
+    assert t.group_ids == want[2] and t.versions == want[3]
+    # the rebuilt index serves: prefix reads see the appended rows
+    assert t.group_size(11) == 1 and t.lookup("v", 11) == -1.0
+
+
+def test_store_recover_detects_journal_gap():
+    b = make_small_bundle()
+    t = b.store["t"]
+    for v in (1.0, 2.0, 3.0):
+        t.append({"v": [v], "a": [0.0]}, group_key=[0])
+    del t._journal[1]  # a torn journal: seqs (1, 3) with seq 2 lost
+    with pytest.raises(ValueError, match="gap-free"):
+        t.recover()
+
+
+def test_store_recover_revalidates_caches():
+    from repro.serving.server import BiathlonServer
+
+    b = make_small_bundle()
+    srv = BiathlonServer(b, CFG, mode="fused", cache_size=4)
+    srv.serve({"g": 0})
+    t = b.store["t"]
+    t.append({"v": [9.0], "a": [1.0]}, group_key=[0])  # entry now stale
+    info = t.recover(caches=(srv.cache,))
+    assert info["cache_entries_dropped"] == 1
+    assert len(srv.cache) == 0
+
+
+# ------------------------------------------------------- cache integrity
+def test_cache_detects_flipped_byte_and_rebuilds():
+    from repro.serving.server import BiathlonServer
+
+    b = make_small_bundle()
+    srv = BiathlonServer(b, CFG, mode="fused", cache_size=4)
+    want = srv.serve({"g": 0})
+    srv.cache.verify_hits = True
+    assert corrupt_cache_entry(srv.cache, seed=0)
+    got = srv.serve({"g": 0})  # detect -> drop -> cold rebuild
+    assert srv.cache.corruptions == 1
+    np.testing.assert_array_equal(want["z"], got["z"])
+    assert want["y_hat"] == got["y_hat"]
+
+
+def test_revalidate_drops_corrupt_entries():
+    from repro.serving.server import BiathlonServer
+
+    b = make_small_bundle()
+    srv = BiathlonServer(b, CFG, mode="fused", cache_size=4)
+    srv.serve({"g": 0})
+    srv.serve({"g": 1})
+    assert corrupt_cache_entry(srv.cache, seed=1)
+    dropped = srv.cache.revalidate()
+    assert dropped == 1 and srv.cache.corruptions == 1
+    assert len(srv.cache) == 1  # the intact entry survives
+
+
+def test_corrupt_cache_entry_empty_cache_is_a_noop():
+    from repro.serving.feature_cache import FeatureCache
+
+    b = make_small_bundle()
+    cache = FeatureCache(b.store, lambda v, n: None, lambda *a: None,
+                         maxsize=2)
+    assert corrupt_cache_entry(cache) is False
+
+
+# ----------------------------------------------------- input sanitization
+def test_append_rejects_nonfinite_loudly():
+    b = make_small_bundle()
+    t = b.store["t"]
+    with pytest.raises(ValueError) as ei:
+        t.append({"v": [1.0, np.nan], "a": [0.0, 0.0]}, group_key=[0, 0])
+    msg = str(ei.value)
+    assert "'t'" in msg and "'v'" in msg and "row 1" in msg
+    # the rejected batch must not have been partially applied
+    assert not t._journal
+
+
+def test_append_clamp_coerces_to_observed_range():
+    b = make_small_bundle()
+    t = b.store["t"]
+    hi = float(t.columns["v"].max())
+    lo = float(t.columns["v"].min())
+    t.append({"v": [np.nan, np.inf, -np.inf], "a": [0.0, 0.0, 0.0]},
+             group_key=[0, 0, 0], sanitize="clamp")
+    got = t.columns["v"][-3:]
+    assert got[0] == 0.0 and got[1] == hi and got[2] == lo
+
+
+def test_serve_batch_rejects_corrupted_store_values():
+    b = make_small_bundle()
+    t = b.store["t"]
+    row = int(t.perm[int(t.group_ptr[0])])
+    t.columns["v"][row] = np.nan  # upstream corruption past the append gate
+    srv = BatchedFusedServer(b, CFG, batch_size=2)
+    with pytest.raises(ValueError, match="serve_batch lane 0"):
+        srv.serve_batch([{"g": 0}])
+    clamping = BatchedFusedServer(b, CFG, batch_size=2, sanitize="clamp")
+    res = clamping.serve_batch([{"g": 0}])  # clamped to 0.0, served
+    assert np.isfinite(res.y_hat[0])
+
+
+def test_continuous_admit_rejects_corrupted_store_values():
+    b = make_small_bundle()
+    t = b.store["t"]
+    row = int(t.perm[int(t.group_ptr[0])])
+    t.columns["v"][row] = np.inf
+    srv = ContinuousBatchedServer(b, CFG, batch_size=2, chunk_iters=2)
+    cap = srv.trace_cap([{"g": 0}])
+    with pytest.raises(ValueError, match="admit lane 0"):
+        srv.admit(srv.new_table(cap), cap, [(0, {"g": 0}, None)])
+    with pytest.raises(ValueError, match="sanitize"):
+        ContinuousBatchedServer(b, CFG, sanitize="bogus")
+
+
+# --------------------------------------------- retry backoff burns slack
+def test_fixed_lane_retry_backoff_repriced_against_slack(small_bundle):
+    srv = BatchedFusedServer(small_bundle, CFG, batch_size=4)
+    srv.serve_batch([{"g": 0}])  # warm
+
+    def tiers(fail):
+        prof = FaultProfile(fail_calls=(0,) if fail else ())
+        fs = FaultyServer(srv, prof, sleep=lambda s: None)
+        ctl = DegradationController(
+            default_tiers(CFG.tau, CFG.max_iters), service_est_s=1.0, lanes=4
+        )
+        rt = ServingRuntime(fs, max_wait_s=0.001, max_retries=2,
+                            backoff_s=5.0, controller=ctl)
+        stats = rt.run([(0.0, {"g": g}, 6.0) for g in range(4)],
+                       warmup=False)
+        assert all(r.disposition == "ok" for r in stats.records)
+        return stats.n_retries, max(r.tier for r in stats.records)
+
+    retries_ok, tier_ok = tiers(fail=False)
+    retries_f, tier_f = tiers(fail=True)
+    assert retries_ok == 0 and tier_ok == 0
+    # the 5s backoff burned the 6s budget: the retried batch re-tiered
+    assert retries_f == 1 and tier_f > 0
+
+
+def test_continuous_retry_backoff_repriced_against_slack(cont4):
+    def tiers(fail):
+        prof = FaultProfile(refill_fail_calls=(0,) if fail else ())
+        fs = FaultyContinuousServer(cont4, prof)
+        ctl = DegradationController(
+            default_tiers(CFG.tau, CFG.max_iters), service_est_s=1.0, lanes=4
+        )
+        rt = ContinuousServingRuntime(fs, controller=ctl, max_retries=2,
+                                      backoff_s=5.0)
+        stats = rt.run([(0.0, {"g": g}, 6.0) for g in range(4)],
+                       warmup=False)
+        ok = [r for r in stats.records if r.disposition == "ok"]
+        assert ok, "every request shed"
+        return stats.n_retries, max(r.tier for r in ok)
+
+    retries_ok, tier_ok = tiers(fail=False)
+    retries_f, tier_f = tiers(fail=True)
+    assert retries_ok == 0 and tier_ok == 0
+    assert retries_f == 1 and tier_f > 0
+
+
+def test_transient_error_subclass_relationship():
+    assert issubclass(ChunkDispatchError, TransientExecutorError)
+    e = ChunkDispatchError("boom")
+    assert e.table is None
